@@ -1,0 +1,90 @@
+"""Figure 3 — batch-size vs runtime trade-off.
+
+For each network and batch multiplier we scale every M_v linearly (activation
+memory ∝ batch), fix the device budget at the paper's 11.4 GB K40c, and ask
+each method for a plan.  Runtime proxy = T(V) + overhead in the paper's T
+units (1 forward = T(V)); vanilla runs only while its simulated peak fits,
+after which its line is the dashed extrapolation (slope = batch).
+
+The paper's headline numbers this reproduces qualitatively:
+* recomputation methods extend the max batch far beyond vanilla (PSPNet 2→8);
+* DP-TC beats Chen on runtime at equal batch (ResNet152 ≈ 1.16×).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import approx_dp, chen_sqrt_n, min_feasible_budget, simulate, vanilla_peak
+from repro.core.graph import Graph, Node
+from repro.core.lower_sets import pruned_lower_sets
+
+from .networks import NETWORKS, SETTINGS
+
+DEVICE_GB = 11.4e9  # K40c
+
+
+def scale_graph(g: Graph, factor: float) -> Graph:
+    nodes = [
+        Node(n.idx, n.name, n.time, n.memory * factor, n.kind) for n in g.nodes
+    ]
+    return Graph(nodes, g.edges)
+
+
+def run_network(name: str, multipliers=(1, 2, 3, 4)) -> List[Dict]:
+    base = NETWORKS[name]()
+    rows = []
+    for mult in multipliers:
+        g = scale_graph(base, mult)
+        fwd_T = g.total_time
+        row: Dict = {"network": name, "batch_mult": mult, "fwd_T": fwd_T}
+        # vanilla: feasible iff its simulated peak fits the device
+        van = vanilla_peak(g, liveness=True)
+        row["vanilla"] = 1.0 if van <= DEVICE_GB else None  # relative runtime
+        row["vanilla_peak"] = van
+        # chen
+        chen = chen_sqrt_n(g)
+        pk = simulate(g, chen.sequence, liveness=True).peak_memory
+        row["chen"] = (
+            (fwd_T + chen.overhead) / fwd_T if pk <= DEVICE_GB else None
+        )
+        # approx DP at the largest feasible budget ≤ device memory
+        fam = pruned_lower_sets(g)
+        for obj, key in (("time_centric", "dp_tc"), ("memory_centric", "dp_mc")):
+            res = approx_dp(g, DEVICE_GB, objective=obj)
+            if res.feasible:
+                pk = simulate(g, res.sequence, liveness=True).peak_memory
+                row[key] = (fwd_T + res.overhead) / fwd_T if pk <= DEVICE_GB else None
+            else:
+                row[key] = None
+        rows.append(row)
+    return rows
+
+
+def main(nets=("resnet152", "pspnet", "unet", "googlenet")) -> List[Dict]:
+    print("\n== Figure 3 — relative runtime (fwd+overhead)/fwd vs batch ==")
+    print(f"{'network':12s} {'batch x':>8s} {'vanilla':>8s} {'chen':>8s} "
+          f"{'DP-TC':>8s} {'DP-MC':>8s}")
+    all_rows = []
+    for name in nets:
+        for row in run_network(name):
+            fmt = lambda v: f"{v:8.3f}" if v is not None else f"{'OOM':>8s}"
+            print(f"{name:12s} {row['batch_mult']:>8d} {fmt(row['vanilla'])} "
+                  f"{fmt(row['chen'])} {fmt(row['dp_tc'])} {fmt(row['dp_mc'])}")
+            all_rows.append(row)
+    # headline claims
+    for name in nets:
+        rows = [r for r in all_rows if r["network"] == name]
+        van_max = max((r["batch_mult"] for r in rows if r["vanilla"]), default=0)
+        dp_max = max((r["batch_mult"] for r in rows if r["dp_mc"] or r["dp_tc"]), default=0)
+        both = [r for r in rows if r["chen"] and r["dp_tc"]]
+        if both:
+            r = both[-1]
+            print(f"  {name}: max batch vanilla×{van_max} → DP×{dp_max}; "
+                  f"at ×{r['batch_mult']} DP-TC/Chen runtime = "
+                  f"{r['dp_tc']/r['chen']:.3f}")
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

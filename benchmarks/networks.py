@@ -1,0 +1,255 @@
+"""Graph abstractions of the paper's seven benchmark networks (§5, Table 1).
+
+Node counts match Table 1 (#V column): PSPNet 385, U-Net 60, ResNet50 176,
+ResNet152 516, VGG19 46, DenseNet161 568, GoogLeNet 134.  Topologies follow
+each architecture's connectivity (residual blocks, dense blocks, U-skips,
+inception branches, pyramid pooling); T_v is the paper's 10/1 conv cost
+model; M_v is the activation byte size at the paper's input resolutions and
+batch sizes (Table 1's Batch column), which is what makes the *relative*
+memory numbers comparable to the paper's GB-scale measurements.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.graph import Graph, Node
+
+# (input_hw, batch) per Table 1
+SETTINGS = {
+    "vgg19": (224, 64),
+    "resnet50": (224, 96),
+    "resnet152": (224, 48),
+    "densenet161": (224, 32),
+    "googlenet": (224, 256),
+    "unet": (572, 8),
+    "pspnet": (713, 2),
+}
+
+
+class _B:
+    """Tiny builder: nodes carry (kind, channels, hw); M_v = 4·B·C·H·W."""
+
+    def __init__(self, batch: int):
+        self.batch = batch
+        self.nodes: List[Node] = []
+        self.edges: List[Tuple[int, int]] = []
+
+    def add(self, kind: str, c: int, hw: float, *preds: int) -> int:
+        idx = len(self.nodes)
+        mem = 4.0 * self.batch * c * hw * hw
+        t = 10.0 if kind == "conv" else 1.0
+        self.nodes.append(Node(idx, f"{idx}:{kind}", t, max(mem, 1.0), kind))
+        for p in preds:
+            self.edges.append((p, idx))
+        return idx
+
+    def cbr(self, c: int, hw: float, *preds: int) -> int:
+        """conv → bn → relu (the paper's node granularity: each op a node)."""
+        conv = self.add("conv", c, hw, *preds)
+        bn = self.add("bn", c, hw, conv)
+        return self.add("relu", c, hw, bn)
+
+    def graph(self) -> Graph:
+        return Graph(self.nodes, self.edges)
+
+
+def vgg19() -> Graph:
+    """16 conv + 3 FC with relu/pool interleaved → 46 nodes, pure chain."""
+    b = _B(SETTINGS["vgg19"][1])
+    plan = [(64, 2), (128, 2), (256, 4), (512, 4), (512, 4)]
+    hw = 224
+    prev = b.add("input_stem", 3, hw)
+    for c, reps in plan:
+        for _ in range(reps):
+            conv = b.add("conv", c, hw, prev)
+            prev = b.add("relu", c, hw, conv)
+        hw //= 2
+        prev = b.add("pool", c, hw, prev)
+    for i, c in enumerate((4096, 4096, 1000)):
+        fc = b.add("conv", c, 1, prev)  # FC ~ heavy
+        prev = b.add("relu", c, 1, fc) if i < 2 else fc
+    g = b.graph()
+    return g
+
+
+def _resnet(layers: Tuple[int, ...], name: str) -> Graph:
+    batch = SETTINGS[name][1]
+    b = _B(batch)
+    hw = 56
+    prev = b.add("conv", 64, 112)  # stem
+    prev = b.add("pool", 64, hw, prev)
+    c_in = 64
+    for stage, blocks in enumerate(layers):
+        c = 64 * (2**stage)
+        for blk in range(blocks):
+            if blk == 0 and stage > 0:
+                hw //= 2
+            identity = prev
+            x = b.cbr(c, hw, prev)
+            x = b.cbr(c, hw, x)
+            x = b.add("conv", c * 4, hw, x)
+            x = b.add("bn", c * 4, hw, x)
+            # projection shortcut on first block of each stage
+            if blk == 0:
+                identity = b.add("conv", c * 4, hw, identity)
+                identity = b.add("bn", c * 4, hw, identity)
+            add = b.add("add", c * 4, hw, x, identity)
+            prev = b.add("relu", c * 4, hw, add)
+    return b.graph()
+
+
+def resnet50() -> Graph:
+    return _resnet((3, 4, 6, 3), "resnet50")
+
+
+def resnet152() -> Graph:
+    return _resnet((3, 8, 36, 3), "resnet152")
+
+
+def densenet161() -> Graph:
+    """Dense blocks: every layer consumes the concat of all previous ones."""
+    b = _B(SETTINGS["densenet161"][1])
+    hw = 56
+    prev = b.add("conv", 96, 112)
+    prev = b.add("pool", 96, hw, prev)
+    growth = 48
+    c = 96
+    for stage, n_layers in enumerate((6, 12, 36, 24)):
+        block_feats = [prev]
+        for _ in range(n_layers):
+            bn1 = b.add("bn", c, hw, *block_feats)  # reads the concat
+            r1 = b.add("relu", c, hw, bn1)
+            cv1 = b.add("conv", 4 * growth, hw, r1)  # 1x1
+            bn2 = b.add("bn", 4 * growth, hw, cv1)
+            r2 = b.add("relu", 4 * growth, hw, bn2)
+            new = b.add("conv", growth, hw, r2)  # 3x3
+            block_feats.append(new)
+            c += growth
+        if stage < 3:
+            trans = b.add("conv", c // 2, hw, *block_feats)
+            hw //= 2
+            prev = b.add("pool", c // 2, hw, trans)
+            c = c // 2
+        else:
+            prev = b.add("pool", c, 1, *block_feats)  # global pool
+    b.add("conv", 1000, 1, prev)
+    return b.graph()
+
+
+def googlenet() -> Graph:
+    """Inception modules: 4 parallel branches re-joined by concat."""
+    b = _B(SETTINGS["googlenet"][1])
+    hw = 28
+    prev = b.add("conv", 64, 112)
+    prev = b.add("conv", 192, 56, prev)
+    prev = b.add("pool", 192, hw, prev)
+    inception = [(64, 128, 32, 32), (128, 192, 96, 64), None,  # pool
+                 (192, 208, 48, 64), (160, 224, 64, 64), (128, 256, 64, 64),
+                 (112, 288, 64, 64), (256, 320, 128, 128), None,
+                 (256, 320, 128, 128), (384, 384, 128, 128)]
+    for spec in inception:
+        if spec is None:
+            hw //= 2
+            prev = b.add("pool", 480, hw, prev)
+            continue
+        c1, c3, c5, cp = spec
+        br1 = b.cbr(c1, hw, prev)
+        br3a = b.cbr(c3 // 2, hw, prev)
+        br3 = b.cbr(c3, hw, br3a)
+        br5a = b.cbr(c5 // 2, hw, prev)
+        br5 = b.cbr(c5, hw, br5a)
+        brp_p = b.add("pool", 192, hw, prev)
+        brp = b.cbr(cp, hw, brp_p)
+        prev = b.add("concat", c1 + c3 + c5 + cp, hw, br1, br3, br5, brp)
+    prev = b.add("pool", 1024, 1, prev)
+    b.add("conv", 1000, 1, prev)
+    return b.graph()
+
+
+def unet() -> Graph:
+    """Contracting path + expanding path with long skip connections."""
+    b = _B(SETTINGS["unet"][1])
+    hw = 568
+    prev = None
+    skips = []
+    chans = (64, 128, 256, 512)
+    # down
+    for c in chans:
+        cv = b.add("conv", c, hw, *( [prev] if prev is not None else [] ))
+        prev = b.add("relu", c, hw, cv)
+        cv = b.add("conv", c, hw, prev)
+        prev = b.add("relu", c, hw, cv)
+        skips.append(prev)
+        hw //= 2
+        prev = b.add("pool", c, hw, prev)
+    # bottom
+    cv = b.add("conv", 1024, hw, prev)
+    prev = b.add("relu", 1024, hw, cv)
+    cv = b.add("conv", 1024, hw, prev)
+    prev = b.add("relu", 1024, hw, cv)
+    # up
+    for c, skip in zip(reversed(chans), reversed(skips)):
+        hw *= 2
+        up = b.add("conv", c, hw, prev)  # up-conv
+        cat = b.add("concat", 2 * c, hw, up, skip)
+        cv = b.add("conv", c, hw, cat)
+        prev = b.add("relu", c, hw, cv)
+        cv = b.add("conv", c, hw, prev)
+        prev = b.add("relu", c, hw, cv)
+    b.add("conv", 2, hw, prev)
+    return b.graph()
+
+
+def pspnet() -> Graph:
+    """ResNet50 dilated backbone + pyramid pooling with global skips."""
+    batch = SETTINGS["pspnet"][1]
+    b = _B(batch)
+    hw = 90  # 713/8 dilated output stride
+    prev = b.add("conv", 64, 357)
+    prev = b.add("pool", 64, 179, prev)
+    c_in = 64
+    for stage, blocks in enumerate((3, 4, 6, 3)):
+        c = 64 * (2**stage)
+        s_hw = 90 if stage >= 1 else 179
+        for blk in range(blocks):
+            identity = prev
+            x = b.cbr(c, s_hw, prev)
+            x = b.cbr(c, s_hw, x)
+            x = b.add("conv", c * 4, s_hw, x)
+            x = b.add("bn", c * 4, s_hw, x)
+            if blk == 0:
+                identity = b.add("conv", c * 4, s_hw, identity)
+                identity = b.add("bn", c * 4, s_hw, identity)
+            add = b.add("add", c * 4, s_hw, x, identity)
+            prev = b.add("relu", c * 4, s_hw, add)
+    backbone = prev
+    # pyramid pooling: 4 scales, each pool→conv→upsample, concat with backbone
+    pools = []
+    for scale in (1, 2, 3, 6):
+        p = b.add("pool", 2048, scale, backbone)
+        cv = b.cbr(512, scale, p)
+        up = b.add("upsample", 512, 90, cv)
+        pools.append(up)
+    cat = b.add("concat", 2048 + 4 * 512, 90, backbone, *pools)
+    x = b.cbr(512, 90, cat)
+    x = b.add("conv", 150, 90, x)
+    b.add("upsample", 150, 713, x)
+    # aux head off stage-3 (extra cross edge, as in the real PSPNet)
+    return b.graph()
+
+
+NETWORKS = {
+    "vgg19": vgg19,
+    "resnet50": resnet50,
+    "resnet152": resnet152,
+    "densenet161": densenet161,
+    "googlenet": googlenet,
+    "unet": unet,
+    "pspnet": pspnet,
+}
+
+PAPER_NODE_COUNTS = {
+    "pspnet": 385, "unet": 60, "resnet50": 176, "resnet152": 516,
+    "vgg19": 46, "densenet161": 568, "googlenet": 134,
+}

@@ -1,0 +1,108 @@
+"""Roofline analysis from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch × shape) on the single-pod mesh:
+
+  compute term    = FLOPs_per_chip / 197e12      (v5e bf16 peak)
+  memory term     = bytes_per_chip / 819e9       (HBM bandwidth)
+  collective term = coll_bytes_per_chip / 50e9   (ICI per link)
+
+FLOPs/bytes come from the scan-aware jaxpr totals (global ÷ chips) — XLA's
+cost_analysis counts while-loop bodies once and is reported alongside for
+reference.  Collective bytes are the trip-count-aware per-chip sums parsed
+from the post-SPMD HLO (launch/dryrun.py).
+
+MODEL_FLOPS = 6·N·D for training (3·N·D fwd+bwd split: 2 fwd + 4 bwd ≈ 6),
+2·N_active·D for inference steps.  The ratio MODEL/HLO exposes recompute
+and padding waste — for our plans the gap *is* the paper's overhead
+T(V \\ U_k), so it doubles as a faithfulness check.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import REGISTRY, SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    n_active = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        cells.append(r)
+    return cells
+
+
+def roofline_row(r: Dict) -> Optional[Dict]:
+    chips = r["devices"]
+    if "jaxpr_flops_global" not in r:
+        return None
+    flops_chip = r["jaxpr_flops_global"] / chips
+    bytes_chip = r["jaxpr_bytes_global"] / chips
+    coll_chip = r["collectives"]["total_bytes_per_chip"]
+    t_comp = flops_chip / PEAK_FLOPS_BF16
+    t_mem = bytes_chip / HBM_BW
+    t_coll = coll_chip / ICI_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    mf = model_flops(r["arch"], r["shape"])
+    useful = mf / max(r["jaxpr_flops_global"], 1.0)
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful-model-compute time over the bound term
+    frac = (mf / chips / PEAK_FLOPS_BF16) / bound if bound else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "devices": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom[1], "model_flops": mf,
+        "useful_flops_ratio": useful, "roofline_frac": frac,
+        "temp_gb_per_chip": r.get("temp_size_in_bytes", 0) / 1e9,
+        "n_micro": r.get("n_micro", 1),
+    }
+
+
+def main(mesh: str = "single") -> List[Dict]:
+    cells = load_cells(mesh)
+    rows = [x for x in (roofline_row(r) for r in cells) if x]
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    print(f"\n== Roofline (per chip, {mesh}-pod mesh, v5e constants) ==")
+    print(f"{'arch':24s} {'shape':12s} {'comp_s':>8s} {'mem_s':>8s} "
+          f"{'coll_s':>8s} {'bound':>10s} {'useful%':>8s} {'roofl%':>7s} "
+          f"{'temp GB':>8s}")
+    for x in rows:
+        print(f"{x['arch']:24s} {x['shape']:12s} {x['t_compute_s']:8.3f} "
+              f"{x['t_memory_s']:8.3f} {x['t_collective_s']:8.3f} "
+              f"{x['dominant']:>10s} {100*x['useful_flops_ratio']:7.1f}% "
+              f"{100*x['roofline_frac']:6.1f}% {x['temp_gb_per_chip']:8.1f}")
+    # aggregate
+    from collections import Counter
+
+    doms = Counter(x["dominant"] for x in rows)
+    print(f"  dominant-term distribution: {dict(doms)}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,115 @@
+"""Benchmark aggregator: one artifact per paper table/figure + the roofline.
+
+  table1    — Table 1: peak memory per network × method (with liveness)
+  table2    — Table 2 (Appendix C): the no-liveness ablation
+  fig3      — Figure 3: batch-size vs runtime trade-off
+  dp        — §5.1: exact-vs-approx planner runtime
+  roofline  — per-(arch × shape) roofline terms from the dry-run artifacts
+  claims    — the paper's quantitative claims checked programmatically
+
+Run everything:   PYTHONPATH=src python -m benchmarks.run
+One section:      PYTHONPATH=src python -m benchmarks.run table1
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _claims(t1, t2, dp_rows):
+    """Check the paper's headline claims on our reproduction."""
+    print("\n== Paper-claims check ==")
+    ok = True
+
+    def check(name, cond, detail=""):
+        nonlocal ok
+        ok &= bool(cond)
+        print(f"  [{'PASS' if cond else 'FAIL'}] {name} {detail}")
+
+    # 36%-81% reduction band (paper abstract) — best method per network
+    reductions = {}
+    for net, r in t1.items():
+        van = r["vanilla"]
+        best = min(
+            v for k, v in r.items()
+            if k in ("approx_mc", "approx_tc", "exact_mc", "exact_tc", "chen")
+            and v is not None
+        )
+        reductions[net] = 100 * (van - best) / van
+    lo, hi = min(reductions.values()), max(reductions.values())
+    check("peak-memory reduction band ~ paper's 36-81%",
+          20 <= lo and hi <= 95,
+          f"(ours {lo:.0f}%-{hi:.0f}%: " +
+          ", ".join(f"{k} {v:.0f}%" for k, v in reductions.items()) + ")")
+
+    # DP beats Chen on most networks (Table 1 trend)
+    wins = sum(
+        1 for r in t1.values()
+        if r.get("approx_mc") is not None and r["approx_mc"] <= r["chen"] + 1e-9
+    )
+    check("ApproxDP+MC <= Chen on most networks", wins >= len(t1) - 1,
+          f"({wins}/{len(t1)})")
+
+    # liveness ablation: no-liveness peaks >= with-liveness peaks
+    worse = all(
+        (t2[n]["approx_mc"] or 0) >= (t1[n]["approx_mc"] or 0) - 1e-9
+        for n in t1
+    )
+    check("removing liveness analysis never helps (Table 2 vs 1)", worse)
+
+    # MC <= TC on peak memory (with liveness), §4.4
+    mc_le_tc = sum(
+        1 for r in t1.values()
+        if r.get("approx_mc") is not None and r.get("approx_tc") is not None
+        and r["approx_mc"] <= r["approx_tc"] + 1e-9
+    )
+    check("MC peak <= TC peak (with liveness) on most networks",
+          mc_le_tc >= len(t1) - 2, f"({mc_le_tc}/{len(t1)})")
+
+    # TC overhead <= MC overhead
+    t_le = all(
+        r["approx_tc_overhead"] <= r["approx_mc_overhead"] + 1e-9
+        for r in t1.values()
+        if r.get("approx_tc_overhead") is not None
+        and r.get("approx_mc_overhead") is not None
+    )
+    check("TC overhead <= MC overhead", t_le)
+
+    # planner runtime: approx no slower than exact wherever exact ran
+    # (ties at the 10 ms scale on small chains are jitter, not signal)
+    fast = all(
+        r["approx_s"] <= (r["exact_s"] or float("inf")) * 1.1 + 0.05
+        for r in dp_rows.values()
+    )
+    check("approx DP faster than exact DP (10% + 50ms tolerance)", fast)
+    return ok
+
+
+def main() -> int:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    t0 = time.perf_counter()
+    from . import dp_runtime, fig3_tradeoff, roofline, table1_memory, table2_no_liveness
+
+    t1 = t2 = dp_rows = None
+    if which in ("all", "table1"):
+        t1 = table1_memory.main()
+    if which in ("all", "table2"):
+        t2 = table2_no_liveness.main()
+    if which in ("all", "fig3"):
+        fig3_tradeoff.main()
+    if which in ("all", "dp"):
+        dp_rows = dp_runtime.main()
+    if which in ("all", "roofline"):
+        try:
+            roofline.main("single")
+        except Exception as e:
+            print(f"roofline skipped: {e} (run launch.dryrun first)")
+    if which == "all" and t1 and t2 and dp_rows:
+        _claims(t1, t2, dp_rows)
+    print(f"\ntotal bench time: {time.perf_counter() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

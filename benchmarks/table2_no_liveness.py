@@ -1,0 +1,12 @@
+"""Table 2 (Appendix C) — the liveness-analysis ablation: same protocol as
+Table 1 with liveness disabled in the simulator."""
+
+from .table1_memory import main as _table1_main
+
+
+def main(nets=None):
+    return _table1_main(liveness=False, nets=nets)
+
+
+if __name__ == "__main__":
+    main()

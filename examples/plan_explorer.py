@@ -1,0 +1,74 @@
+"""Plan explorer: the paper's Table-1 methods on any benchmark network or
+assigned architecture, with an ASCII memory-vs-overhead frontier.
+
+Run: PYTHONPATH=src:. python examples/plan_explorer.py --network unet
+     PYTHONPATH=src:. python examples/plan_explorer.py --arch stablelm-3b
+"""
+
+import argparse
+
+from repro.core import (
+    approx_dp,
+    chen_sqrt_n,
+    min_feasible_budget,
+    simulate,
+    vanilla_peak,
+)
+from repro.core.lower_sets import pruned_lower_sets
+
+
+def frontier(g, n_points: int = 8):
+    """Sweep budgets from minimal to vanilla; print the trade-off curve."""
+    fam = pruned_lower_sets(g)
+    B_min = min_feasible_budget(g, family=fam, tol=1e-2)
+    van = vanilla_peak(g, liveness=True)
+    print(f"#V={g.n}  #L^pruned={len(fam)}  vanilla peak={van/1e9:.2f} GB  "
+          f"min feasible B={B_min/1e9:.2f} GB")
+    chen = chen_sqrt_n(g)
+    chen_pk = simulate(g, chen.sequence, liveness=True).peak_memory
+    print(f"Chen √n: peak {chen_pk/1e9:.2f} GB, overhead "
+          f"{100*chen.overhead/g.total_time:.0f}% of fwd\n")
+
+    rows = []
+    for i in range(n_points):
+        B = B_min * (1.0 + 3.0 * i / max(n_points - 1, 1))
+        res = approx_dp(g, B)
+        if not res.feasible:
+            continue
+        pk = simulate(g, res.sequence, liveness=True).peak_memory
+        oh = 100 * res.overhead / g.total_time
+        rows.append((pk, oh, res.num_segments))
+    print(f"{'peak GB':>8s} {'overhead%':>10s} {'segments':>9s}  frontier")
+    max_oh = max(oh for _, oh, _ in rows) or 1
+    for pk, oh, k in rows:
+        bar = "#" * int(1 + 40 * oh / max_oh)
+        print(f"{pk/1e9:8.2f} {oh:10.1f} {k:9d}  {bar}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--network", default=None,
+                    help="one of the paper's nets (benchmarks.networks)")
+    ap.add_argument("--arch", default=None, help="assigned architecture id")
+    args = ap.parse_args()
+
+    if args.arch:
+        from repro.configs import SHAPES, get_config
+        from repro.launch.plan import chain_graph, plan_inputs
+
+        cfg = get_config(args.arch)
+        pi = plan_inputs(cfg, SHAPES["train_4k"], dp_shards=16, model_shards=16)
+        g = chain_graph(pi)
+        print(f"arch {args.arch}: unit chain, {pi.n_units} units, "
+              f"interior {pi.bytes_interior/1e9:.2f} GB/unit")
+    else:
+        from benchmarks.networks import NETWORKS
+
+        name = args.network or "unet"
+        g = NETWORKS[name]()
+        print(f"network {name}:")
+    frontier(g)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .store import AsyncCheckpointer, latest_step, restore, retain, save
+
+__all__ = ["AsyncCheckpointer", "save", "restore", "latest_step", "retain"]

@@ -1,0 +1,210 @@
+"""Sharded, fault-tolerant checkpointing (numpy-backed, async writer).
+
+Layout — one directory per step, one ``.npy`` per pytree leaf plus a
+manifest:
+
+  <dir>/step_000123/
+      MANIFEST.json       {"step": 123, "leaves": {path: {file, dtype, shape}}}
+      <sanitized-path>.npy
+      COMMITTED           written last — a step directory without it is torn
+                          and ignored by ``latest_step`` / ``restore``
+
+Crash-safety: writes land in ``step_<n>.tmp`` and are renamed into place
+after the COMMITTED marker is written, so a process killed mid-save never
+corrupts the restore path (restart picks the previous committed step).
+``AsyncCheckpointer`` runs saves on a worker thread; ``wait()`` drains it
+(train.loop calls wait() at shutdown and before restores).
+
+On a multi-host deployment each host saves only the leaves it owns
+(``addressable_shards``) under a per-host subdirectory; this container is
+single-host, so host 0 owns everything — the layout and commit protocol are
+identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _sanitize(path: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", path)
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for kp, leaf in flat:
+        keys = []
+        for p in kp:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def save(base_dir: str, step: int, tree: Any) -> str:
+    """Synchronous committed save; returns the final step directory."""
+    os.makedirs(base_dir, exist_ok=True)
+    final = os.path.join(base_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+    for path, leaf in _leaf_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        store = arr
+        if arr.dtype.kind == "V" or dtype not in np.sctypeDict:
+            # ml_dtypes (bfloat16, float8, …) don't survive np.save — store
+            # the raw bits and re-view on restore from the manifest dtype
+            store = arr.view(np.uint8).reshape(arr.shape + (arr.itemsize,))
+        fname = _sanitize(path) + ".npy"
+        np.save(os.path.join(tmp, fname), store)
+        manifest["leaves"][path] = {
+            "file": fname,
+            "dtype": dtype,
+            "shape": list(arr.shape),
+        }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(base_dir: str) -> Optional[int]:
+    """Largest committed step, or None. Torn (.tmp / uncommitted) dirs skipped."""
+    if not os.path.isdir(base_dir):
+        return None
+    best = None
+    for name in os.listdir(base_dir):
+        m = _STEP_RE.match(name)
+        if not m:
+            continue
+        if not os.path.exists(os.path.join(base_dir, name, "COMMITTED")):
+            continue
+        s = int(m.group(1))
+        best = s if best is None else max(best, s)
+    return best
+
+
+def restore(base_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """Restore a pytree; ``like`` provides the structure (leaves ignored).
+
+    With ``shardings`` (a matching pytree of jax.sharding.Sharding), each leaf
+    is placed with jax.device_put onto its target sharding — this is how a
+    restarted job with a *different* mesh resharding-restores (elastic
+    scaling): the on-disk format is mesh-agnostic full arrays.
+    """
+    d = os.path.join(base_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    paths = _leaf_paths(like)
+    shard_leaves = (
+        [s for _, s in _leaf_paths(shardings)] if shardings is not None else None
+    )
+    leaves = []
+    for i, (path, _) in enumerate(paths):
+        entry = manifest["leaves"].get(path)
+        if entry is None:
+            raise KeyError(f"checkpoint at step {step} is missing leaf {path!r}")
+        arr = np.load(os.path.join(d, entry["file"]))
+        want = entry["dtype"]
+        if str(arr.dtype) != want:
+            # raw-bit storage of an ml_dtype: view back via the manifest
+            arr = arr.reshape(tuple(entry["shape"]) + (-1,)).view(
+                np.dtype(want)
+            )[..., 0]
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def retain(base_dir: str, keep: int) -> None:
+    """Garbage-collect all but the newest ``keep`` committed steps."""
+    if not os.path.isdir(base_dir):
+        return
+    steps = sorted(
+        int(m.group(1))
+        for name in os.listdir(base_dir)
+        if (m := _STEP_RE.match(name))
+        and os.path.exists(os.path.join(base_dir, name, "COMMITTED"))
+    )
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(base_dir, f"step_{s:09d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread writer overlapping serialization/disk I/O with the
+    next training steps.
+
+    ``save_async`` snapshots the tree to host memory *on the caller thread*
+    (device buffers may be donated to the very next step, so holding device
+    references across steps is unsafe) and enqueues the numpy copies; the
+    worker thread only does file I/O — the slow part on real clusters.
+    """
+
+    def __init__(self, base_dir: str, keep: int = 3):
+        self.base_dir = base_dir
+        self.keep = keep
+        self._q: "queue.Queue[Optional[Tuple[int, Any]]]" = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.base_dir, step, tree)
+                retain(self.base_dir, self.keep)
+            except BaseException as e:  # surfaced on the next wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save_async(self, step: int, tree: Any) -> None:
+        if self._err is not None:
+            raise self._err
+        host_tree = jax.tree_util.tree_map(
+            lambda l: np.asarray(jax.device_get(l)), tree
+        )
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err is not None:
+            raise self._err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

@@ -1,0 +1,58 @@
+"""repro.core — the paper's contribution as a library.
+
+Graph-theoretic recomputation planning (Kusumoto et al., NeurIPS 2019):
+lower-set sequences, exact/approximate DP, memory-/time-centric strategies,
+Chen's √n baseline, liveness simulation, and the bridges into JAX
+(jaxpr graph extraction, checkpoint-policy lowering, segmented executor).
+"""
+
+from .chen import articulation_points, candidate_split_points, chen_sqrt_n
+from .dfs import exhaustive_search
+from .dp import (
+    DPResult,
+    approx_dp,
+    cached_sets,
+    exact_dp,
+    overhead,
+    peak_memory,
+    quantize_times,
+    solve,
+)
+from .graph import Graph, Node, chain, from_cost_lists
+from .liveness import SimResult, simulate, vanilla_peak
+from .lower_sets import all_lower_sets, count_lower_sets, pruned_lower_sets
+from .planner import PlanReport, compare_methods, min_feasible_budget, plan
+from .schedule import ExecutionPlan, Segment, make_plan, plan_summary
+
+__all__ = [
+    "Graph",
+    "Node",
+    "chain",
+    "from_cost_lists",
+    "all_lower_sets",
+    "pruned_lower_sets",
+    "count_lower_sets",
+    "DPResult",
+    "solve",
+    "exact_dp",
+    "approx_dp",
+    "overhead",
+    "peak_memory",
+    "cached_sets",
+    "quantize_times",
+    "exhaustive_search",
+    "articulation_points",
+    "candidate_split_points",
+    "chen_sqrt_n",
+    "SimResult",
+    "simulate",
+    "vanilla_peak",
+    "ExecutionPlan",
+    "Segment",
+    "make_plan",
+    "plan_summary",
+    "PlanReport",
+    "plan",
+    "compare_methods",
+    "min_feasible_budget",
+]

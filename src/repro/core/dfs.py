@@ -1,0 +1,80 @@
+"""§4.1 — naive exhaustive search over lower-set sequences.
+
+Exponential; used as the correctness oracle for the DP in tests (the DP's
+optimum must match the exhaustive optimum on small graphs) and to expose the
+triplet-state ``(L, t, m)`` observation that motivates the DP.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from .dp import DPResult, INF, peak_memory
+from .graph import EMPTY, Graph, NodeSet
+from .lower_sets import all_lower_sets
+
+
+def exhaustive_search(
+    g: Graph,
+    budget: float,
+    objective: str = "time_centric",
+    family: Optional[Sequence[NodeSet]] = None,
+) -> DPResult:
+    """DFS over all increasing sequences {L₁ ≺ … ≺ L_k = V} within budget.
+
+    Tracks the triplet (L, t, m) exactly as §4.1 describes:
+      t = overhead so far, m = M(U_i) of the cache so far.
+    """
+    fam = list(family) if family is not None else all_lower_sets(g)
+    fam = [L for L in fam if L]  # drop ∅ as a sequence element
+    full = frozenset(range(g.n))
+    fam_sorted = sorted(fam, key=len)
+
+    best_t = INF if objective == "time_centric" else -INF
+    best_seq: List[NodeSet] = []
+    states = 0
+
+    # Precompute per-L terms.
+    info = {}
+    for L in fam_sorted:
+        b = g.boundary(L)
+        dplus_out = g.delta_plus(L) - L
+        dmd_out = g.delta_minus(g.delta_plus(L)) - L
+        info[L] = (b, g.M(dplus_out) + g.M(dmd_out))
+
+    def better(t: float) -> bool:
+        return t < best_t if objective == "time_centric" else t > best_t
+
+    def rec(L: NodeSet, t: float, m: float, seq: List[NodeSet]) -> None:
+        nonlocal best_t, best_seq, states
+        states += 1
+        if L == full:
+            if better(t):
+                best_t = t
+                best_seq = list(seq)
+            return
+        for Lp in fam_sorted:
+            if len(Lp) <= len(L) or not (L < Lp):
+                continue
+            b, m_after = info[Lp]
+            Vp = Lp - L
+            Mi = m + 2.0 * g.M(Vp) + m_after  # eq. (2) with M(U_{i-1}) = m
+            if Mi > budget:
+                continue
+            t2 = t + g.T(Vp - b)
+            m2 = m + g.M(b - L)
+            seq.append(Lp)
+            rec(Lp, t2, m2, seq)
+            seq.pop()
+
+    rec(EMPTY, 0.0, 0.0, [])
+
+    if not best_seq:
+        return DPResult([], INF, INF, feasible=False, states_visited=states)
+    return DPResult(
+        sequence=best_seq,
+        overhead=best_t,
+        peak_memory=peak_memory(g, best_seq),
+        feasible=True,
+        states_visited=states,
+    )

@@ -1,0 +1,413 @@
+"""Dynamic-programming solutions to the General Recomputation Problem.
+
+Implements Algorithm 1 of the paper (Appendix A) with the practical
+accelerations the paper describes in §4.2:
+
+* sparse DP table — ``opt[L, ·]`` holds only the *Pareto frontier* of
+  ``(t, m)`` pairs ("when t < t' and opt[L,t] < opt[L,t'], we can skip the
+  iteration for the entry opt[L,t']");
+* node sets as arbitrary-precision integer bitmasks, so ``L ⊆ L'`` is one
+  big-int AND;
+* per-``L'`` segment terms (∂(L'), δ⁺(L')\\L', δ⁻(δ⁺(L'))\\L') precomputed
+  once.
+
+Three entry points:
+
+* ``solve(graph, budget, family, objective="time_centric")`` — Algorithm 1;
+  ``objective="memory_centric"`` replaces ``min`` with ``max`` at line 15
+  (§4.4 / Appendix A note).
+* ``exact_dp(graph, budget, ...)``  — family = 𝓛_G        (§4.2)
+* ``approx_dp(graph, budget, ...)`` — family = 𝓛_G^Pruned (§4.3)
+
+The DP requires integer ``T_v`` (the ``t`` axis of the table).  The paper
+uses ``T_v ∈ {1, 10}``; for FLOP-derived costs use
+``quantize_times(graph, levels)`` first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from .graph import EMPTY, Graph, NodeSet
+from .lower_sets import all_lower_sets, pruned_lower_sets
+
+
+# ---------------------------------------------------------------------------
+# Bitmask helpers
+# ---------------------------------------------------------------------------
+
+
+def to_mask(s: NodeSet) -> int:
+    m = 0
+    for v in s:
+        m |= 1 << v
+    return m
+
+
+def from_mask(m: int) -> NodeSet:
+    out = []
+    v = 0
+    while m:
+        if m & 1:
+            out.append(v)
+        m >>= 1
+        v += 1
+    return frozenset(out)
+
+
+def mask_iter(m: int):
+    v = 0
+    while m:
+        if m & 1:
+            yield v
+        m >>= 1
+        v += 1
+
+
+# ---------------------------------------------------------------------------
+# Result container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DPResult:
+    """Solution of the general recomputation problem.
+
+    Attributes:
+      sequence: the increasing lower-set sequence {L₁ ≺ … ≺ L_k = V}.
+      overhead: T(V \\ U_k) — total recomputation overhead (eq. 1).
+      peak_memory: max_i 𝓜⁽ⁱ⁾ under the paper's model (eq. 2), *without*
+        liveness analysis (the paper applies liveness post-hoc; see
+        core.liveness for that refinement).
+      feasible: False if no sequence satisfies the budget ("Impossible").
+      states_visited: DP work counter (for the §5.1 runtime comparison).
+    """
+
+    sequence: List[NodeSet]
+    overhead: float
+    peak_memory: float
+    feasible: bool
+    states_visited: int = 0
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.sequence)
+
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Segment-term precomputation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _LowerSetInfo:
+    mask: int
+    size: int
+    T: float  # T(L)
+    M: float  # M(L)
+    boundary_mask: int  # ∂(L)
+    T_boundary: float  # T(∂(L))
+    m_after: float  # M(δ⁺(L) \ L) + M(δ⁻(δ⁺(L)) \ L)   (terms iii+iv of eq. 2)
+
+
+def _prepare(g: Graph, family: Sequence[NodeSet]) -> List[_LowerSetInfo]:
+    infos = []
+    for L in family:
+        mask = to_mask(L)
+        dplus = g.delta_plus(L)
+        dplus_out = to_mask(dplus) & ~mask  # δ⁺(L) \ L
+        dmd_out = to_mask(g.delta_minus(dplus)) & ~mask  # δ⁻(δ⁺(L)) \ L
+        boundary = g.boundary(L)
+        infos.append(
+            _LowerSetInfo(
+                mask=mask,
+                size=len(L),
+                T=g.T(L),
+                M=g.M(L),
+                boundary_mask=to_mask(boundary),
+                T_boundary=g.T(boundary),
+                m_after=sum(g.mem_v[v] for v in mask_iter(dplus_out))
+                + sum(g.mem_v[v] for v in mask_iter(dmd_out)),
+            )
+        )
+    return infos
+
+
+def _mask_M(g: Graph, mask: int) -> float:
+    return sum(g.mem_v[v] for v in mask_iter(mask))
+
+
+def _mask_T(g: Graph, mask: int) -> float:
+    return sum(g.time_v[v] for v in mask_iter(mask))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def solve(
+    g: Graph,
+    budget: float,
+    family: Sequence[NodeSet],
+    objective: str = "time_centric",
+) -> DPResult:
+    """Algorithm 1 (Appendix A) over an arbitrary lower-set family.
+
+    objective:
+      * "time_centric"   — minimize overhead (line 15: min)   §4.2/§4.3
+      * "memory_centric" — maximize overhead (line 15: max)   §4.4
+    """
+    if objective not in ("time_centric", "memory_centric"):
+        raise ValueError(f"unknown objective {objective!r}")
+
+    infos = _prepare(g, family)
+    # ascending order of set size (line 3)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    full_mask = (1 << g.n) - 1
+
+    empty_id = None
+    full_id = None
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            empty_id = i
+        if info.mask == full_mask:
+            full_id = i
+    if empty_id is None or full_id is None:
+        raise ValueError("family must contain ∅ and V")
+
+    # Sparse DP table: per lower-set id, a dict t -> (m, parent=(id, t)).
+    # Pareto pruning: keep only entries where no t'' < t has m'' <= m.
+    table: List[Dict[float, Tuple[float, Optional[Tuple[int, float]]]]] = [
+        {} for _ in infos
+    ]
+    table[empty_id][0.0] = (0.0, None)
+
+    states = 0
+    n_fam = len(order)
+    sizes = [infos[i].size for i in order]
+    import bisect
+
+    for pos, i in enumerate(order):
+        info_L = infos[i]
+        entries = table[i]
+        if not entries:
+            continue
+        # Pareto-prune the source entries once before expanding (§4.2 note).
+        # The dominance direction depends on the objective: TC keeps the
+        # (t↓, m↓) frontier; MC keeps the (t↑, m↓) frontier — an entry is
+        # dominated by one with ≥ overhead so far AND ≤ cache mass.
+        pruned = _pareto(entries) if objective == "time_centric" else _pareto_mc(entries)
+        table[i] = pruned
+        pruned_items = list(pruned.items())
+        mask_L = info_L.mask
+        # strictly larger sets only: start past the last equal-size entry
+        start = bisect.bisect_right(sizes, info_L.size)
+        for jpos in range(start, n_fam):
+            j = order[jpos]
+            info_Lp = infos[j]
+            if mask_L & ~info_Lp.mask:
+                continue  # L ⊄ L'
+            # Pair terms.
+            Vp_mask = info_Lp.mask & ~mask_L  # V' = L' \ L
+            M_Vp = info_Lp.M - info_L.M
+            # T(V' \ ∂(L')) = T(V') - T(V' ∩ ∂(L'))
+            inter = Vp_mask & info_Lp.boundary_mask
+            t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
+            # M(∂(L') \ L)
+            m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            m_fixed = 2.0 * M_Vp + info_Lp.m_after
+            row = table[j]
+            for t, (m, _parent) in pruned_items:
+                states += 1
+                Mi = m + m_fixed  # eq. (2): M(U_{i-1}) + 2M(V') + (iii) + (iv)
+                if Mi > budget:
+                    continue
+                t2 = t + t_step
+                m2 = m + m_step
+                cur = row.get(t2)
+                if cur is None or cur[0] > m2:
+                    row[t2] = (m2, (i, t))
+
+    final = table[full_id]
+    if not final:
+        return DPResult([], INF, INF, feasible=False, states_visited=states)
+
+    if objective == "time_centric":
+        t_star = min(final)
+    else:  # memory_centric: max at line 15
+        t_star = max(final)
+
+    # Traceback (line 16).
+    seq_ids: List[Tuple[int, float]] = []
+    cur: Optional[Tuple[int, float]] = (full_id, t_star)
+    while cur is not None:
+        seq_ids.append(cur)
+        _m, parent = table[cur[0]][cur[1]]
+        cur = parent
+    seq_ids.reverse()
+    sequence = [from_mask(infos[i].mask) for i, _t in seq_ids if infos[i].mask != 0]
+
+    peak = peak_memory(g, sequence)
+    return DPResult(
+        sequence=sequence,
+        overhead=t_star,
+        peak_memory=peak,
+        feasible=True,
+        states_visited=states,
+    )
+
+
+def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
+             infos: Optional[List[_LowerSetInfo]] = None) -> bool:
+    """Fast feasibility oracle for the budget binary search (§5.1).
+
+    For feasibility the t axis is irrelevant and smaller cache mass m is
+    always at least as good, so one min-m entry per lower set suffices —
+    O(#𝓛²) instead of O(T(V)·#𝓛²).
+    """
+    import bisect
+
+    infos = infos if infos is not None else _prepare(g, family)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    sizes = [infos[i].size for i in order]
+    full_mask = (1 << g.n) - 1
+    best: List[float] = [INF] * len(infos)
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            best[i] = 0.0
+    n_fam = len(order)
+    for pos, i in enumerate(order):
+        m = best[i]
+        if m == INF:
+            continue
+        info_L = infos[i]
+        mask_L = info_L.mask
+        start = bisect.bisect_right(sizes, info_L.size)
+        for jpos in range(start, n_fam):
+            j = order[jpos]
+            info_Lp = infos[j]
+            if mask_L & ~info_Lp.mask:
+                continue
+            Mi = m + 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            if Mi > budget:
+                continue
+            m2 = m + _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            if m2 < best[j]:
+                best[j] = m2
+    for i, info in enumerate(infos):
+        if info.mask == full_mask:
+            return best[i] < INF
+    return False
+
+
+def _pareto(
+    entries: Dict[float, Tuple[float, Optional[Tuple[int, float]]]]
+) -> Dict[float, Tuple[float, Optional[Tuple[int, float]]]]:
+    """Keep only (t, m) not dominated by some (t'' ≤ t, m'' ≤ m), except both equal."""
+    out: Dict[float, Tuple[float, Optional[Tuple[int, float]]]] = {}
+    best = INF
+    for t in sorted(entries):
+        m, parent = entries[t]
+        if m < best:
+            out[t] = (m, parent)
+            best = m
+    return out
+
+
+def _pareto_mc(
+    entries: Dict[float, Tuple[float, Optional[Tuple[int, float]]]]
+) -> Dict[float, Tuple[float, Optional[Tuple[int, float]]]]:
+    """MC dominance: (t, m) is dominated by (t'' ≥ t, m'' ≤ m) — any feasible
+    continuation of the dominated entry is feasible from the dominating one
+    and ends with at least as much total overhead."""
+    out: Dict[float, Tuple[float, Optional[Tuple[int, float]]]] = {}
+    best = INF
+    for t in sorted(entries, reverse=True):
+        m, parent = entries[t]
+        if m < best:
+            out[t] = (m, parent)
+            best = m
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def exact_dp(
+    g: Graph, budget: float, objective: str = "time_centric", limit: int = 500_000
+) -> DPResult:
+    """§4.2 — DP over the full lattice 𝓛_G."""
+    return solve(g, budget, all_lower_sets(g, limit=limit), objective)
+
+
+def approx_dp(g: Graph, budget: float, objective: str = "time_centric") -> DPResult:
+    """§4.3 — DP over 𝓛_G^Pruned (keys = principal lower sets L^v)."""
+    return solve(g, budget, pruned_lower_sets(g), objective)
+
+
+# ---------------------------------------------------------------------------
+# Strategy evaluation (shared with DFS / Chen / tests)
+# ---------------------------------------------------------------------------
+
+
+def cached_sets(g: Graph, sequence: Sequence[NodeSet]) -> List[NodeSet]:
+    """U_i = ∪_{j≤i} ∂(L_j) for each prefix."""
+    u: set = set()
+    out = []
+    for L in sequence:
+        u |= g.boundary(L)
+        out.append(frozenset(u))
+    return out
+
+
+def overhead(g: Graph, sequence: Sequence[NodeSet]) -> float:
+    """Eq. (1): T(V \\ U_k)."""
+    U_k = cached_sets(g, sequence)[-1]
+    allv = frozenset(range(g.n))
+    return g.T(allv - U_k)
+
+
+def peak_memory(g: Graph, sequence: Sequence[NodeSet]) -> float:
+    """Eq. (2): max_i 𝓜⁽ⁱ⁾ (no liveness analysis — paper's analytic model)."""
+    Us = cached_sets(g, sequence)
+    peak = 0.0
+    prev: NodeSet = EMPTY
+    for i, L in enumerate(sequence):
+        Vi = L - prev
+        U_prev = Us[i - 1] if i > 0 else EMPTY
+        dplus_out = g.delta_plus(L) - L
+        dmd_out = g.delta_minus(g.delta_plus(L)) - L
+        Mi = g.M(U_prev) + 2.0 * g.M(Vi) + g.M(dplus_out) + g.M(dmd_out)
+        peak = max(peak, Mi)
+        prev = L
+    return peak
+
+
+def quantize_times(g: Graph, levels: int = 64) -> Graph:
+    """Rescale T_v to small positive integers so the DP's t-axis stays compact.
+
+    Beyond-paper utility for FLOP-derived costs: T_v → max(1,
+    round(levels · T_v / max_v T_v)).  The paper's {1, 10} costs pass through
+    unchanged when levels ≥ 10·max/max.
+    """
+    from .graph import Node
+
+    tmax = max(g.time_v)
+    nodes = [
+        Node(
+            nd.idx,
+            nd.name,
+            float(max(1, round(levels * nd.time / tmax))),
+            nd.memory,
+            nd.kind,
+        )
+        for nd in g.nodes
+    ]
+    return Graph(nodes, g.edges)

@@ -1,0 +1,245 @@
+"""Computation-graph language of the paper (§2).
+
+A directed acyclic graph ``G = (V, E)`` over the *intermediate* nodes of a
+neural network.  Input nodes and parameters are excluded (§2).  Each node
+``v`` carries a forward-computation cost ``T_v > 0`` and a memory cost
+``M_v > 0``.
+
+Definitions implemented here, verbatim from the paper:
+
+* ``δ⁺(S) = {v ∈ V | (s, v) ∈ E for some s ∈ S}``
+* ``δ⁻(S) = {v ∈ V | (v, s) ∈ E for some s ∈ S}``
+* ``L ⊆ V`` is a *lower set* iff there is no edge from ``V \\ L`` into ``L``
+  (equivalently ``δ⁻(L) ⊆ L``), written ``L ≺ V``.
+* the *boundary* ``∂(L) = δ⁻(V \\ L) ∩ L``.
+
+Node sets are represented as Python ``frozenset`` of integer node ids for
+hashability (DP table keys), with bitmask fast paths for small graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+NodeSet = FrozenSet[int]
+
+EMPTY: NodeSet = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """A single intermediate value in the network.
+
+    Attributes:
+      idx: integer id, also the index into ``Graph.nodes``.
+      name: human-readable name (layer / jaxpr eqn primitive).
+      time: forward computation cost ``T_v`` (paper: 10 for conv, 1 otherwise).
+      memory: memory consumption cost ``M_v`` (bytes, or abstract units).
+      kind: free-form tag ("conv", "matmul", "elementwise", ...).
+    """
+
+    idx: int
+    name: str
+    time: float
+    memory: float
+    kind: str = "generic"
+
+
+class Graph:
+    """Directed graph ``G = (V, E)`` with per-node costs ``T_v``, ``M_v``.
+
+    Edges mean: ``(v, w) ∈ E`` iff the value of ``v`` is directly required to
+    compute ``w``.
+    """
+
+    def __init__(self, nodes: Sequence[Node], edges: Iterable[Tuple[int, int]]):
+        self.nodes: List[Node] = list(nodes)
+        n = len(self.nodes)
+        for i, node in enumerate(self.nodes):
+            if node.idx != i:
+                raise ValueError(f"node {node.name} has idx {node.idx}, expected {i}")
+            if node.time <= 0 or node.memory <= 0:
+                raise ValueError(
+                    f"node {node.name}: costs must be positive (T={node.time}, M={node.memory})"
+                )
+        self.succ: List[List[int]] = [[] for _ in range(n)]
+        self.pred: List[List[int]] = [[] for _ in range(n)]
+        seen = set()
+        for v, w in edges:
+            if not (0 <= v < n and 0 <= w < n):
+                raise ValueError(f"edge ({v},{w}) out of range")
+            if v == w:
+                raise ValueError(f"self loop at {v}")
+            if (v, w) in seen:
+                continue
+            seen.add((v, w))
+            self.succ[v].append(w)
+            self.pred[w].append(v)
+        self.edges: FrozenSet[Tuple[int, int]] = frozenset(seen)
+        self._topo: Optional[List[int]] = None
+        self._assert_acyclic()
+        # Cost vectors.
+        self.time_v: List[float] = [nd.time for nd in self.nodes]
+        self.mem_v: List[float] = [nd.memory for nd in self.nodes]
+
+    # ------------------------------------------------------------------ basics
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def n(self) -> int:
+        return len(self.nodes)
+
+    def _assert_acyclic(self) -> None:
+        order = self.topological_order()
+        if len(order) != len(self.nodes):
+            raise ValueError("graph has a cycle")
+
+    def topological_order(self) -> List[int]:
+        """Kahn topological order; cached."""
+        if self._topo is not None:
+            return self._topo
+        indeg = [len(p) for p in self.pred]
+        stack = [v for v in range(len(self.nodes)) if indeg[v] == 0]
+        order: List[int] = []
+        while stack:
+            v = stack.pop()
+            order.append(v)
+            for w in self.succ[v]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    stack.append(w)
+        if len(order) == len(self.nodes):
+            self._topo = order
+        return order
+
+    # --------------------------------------------------------- paper notation
+
+    def delta_plus(self, s: Iterable[int]) -> NodeSet:
+        """δ⁺(S): nodes with an incoming edge from S."""
+        out = set()
+        for v in s:
+            out.update(self.succ[v])
+        return frozenset(out)
+
+    def delta_minus(self, s: Iterable[int]) -> NodeSet:
+        """δ⁻(S): nodes with an outgoing edge into S."""
+        out = set()
+        for v in s:
+            out.update(self.pred[v])
+        return frozenset(out)
+
+    def is_lower_set(self, L: Iterable[int]) -> bool:
+        """L ≺ V  ⇔  δ⁻(L) ⊆ L (no edge from V\\L into L)."""
+        Ls = set(L)
+        return all(p in Ls for v in Ls for p in self.pred[v])
+
+    def boundary(self, L: Iterable[int]) -> NodeSet:
+        """∂(L) = δ⁻(V \\ L) ∩ L — the nodes of L still needed outside L."""
+        Ls = frozenset(L)
+        comp = [v for v in range(len(self.nodes)) if v not in Ls]
+        return self.delta_minus(comp) & Ls
+
+    # ------------------------------------------------------------- aggregates
+
+    def T(self, s: Iterable[int]) -> float:
+        """T(S) = Σ_{v∈S} T_v."""
+        return sum(self.time_v[v] for v in s)
+
+    def M(self, s: Iterable[int]) -> float:
+        """M(S) = Σ_{v∈S} M_v."""
+        return sum(self.mem_v[v] for v in s)
+
+    @property
+    def total_time(self) -> float:
+        return sum(self.time_v)
+
+    @property
+    def total_memory(self) -> float:
+        return sum(self.mem_v)
+
+    # ------------------------------------------------------------ reachability
+
+    def reachable_from(self, v: int) -> NodeSet:
+        """All nodes reachable from v (including v) following edges forward."""
+        seen = {v}
+        stack = [v]
+        while stack:
+            u = stack.pop()
+            for w in self.succ[u]:
+                if w not in seen:
+                    seen.add(w)
+                    stack.append(w)
+        return frozenset(seen)
+
+    def ancestors_of(self, v: int) -> NodeSet:
+        """L^v = {w | v reachable from w} — the principal lower set at v (§4.3)."""
+        seen = {v}
+        stack = [v]
+        while stack:
+            u = stack.pop()
+            for w in self.pred[u]:
+                if w not in seen:
+                    seen.add(w)
+                    stack.append(w)
+        return frozenset(seen)
+
+    # --------------------------------------------------------------- closure
+
+    def lower_closure(self, s: Iterable[int]) -> NodeSet:
+        """Smallest lower set containing S (union of ancestor sets)."""
+        out: set = set()
+        for v in s:
+            if v not in out:
+                out.update(self.ancestors_of(v))
+        return frozenset(out)
+
+    # ------------------------------------------------------------- validation
+
+    def check_increasing_sequence(self, seq: Sequence[NodeSet]) -> None:
+        """Validate {L₁ ≺ … ≺ L_k = V}: each Lᵢ a lower set, strictly increasing,
+        terminating at V."""
+        if not seq:
+            raise ValueError("empty sequence")
+        prev: NodeSet = EMPTY
+        for i, L in enumerate(seq):
+            if not self.is_lower_set(L):
+                raise ValueError(f"L_{i+1} is not a lower set")
+            if not (prev < L):
+                raise ValueError(f"L_{i+1} does not strictly contain L_{i}")
+            prev = L
+        if seq[-1] != frozenset(range(len(self.nodes))):
+            raise ValueError("sequence must terminate at V")
+
+    # ------------------------------------------------------------------ debug
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Graph(n={len(self.nodes)}, e={len(self.edges)})"
+
+
+# ---------------------------------------------------------------------------
+# Constructors for common topologies (used by tests and benchmarks).
+# ---------------------------------------------------------------------------
+
+
+def chain(n: int, time: float = 1.0, memory: float = 1.0, **kw) -> Graph:
+    """A simple path v₀ → v₁ → … → v_{n-1} (feed-forward net)."""
+    nodes = [Node(i, f"v{i}", time, memory, **kw) for i in range(n)]
+    return Graph(nodes, [(i, i + 1) for i in range(n - 1)])
+
+
+def from_cost_lists(
+    times: Sequence[float],
+    mems: Sequence[float],
+    edges: Iterable[Tuple[int, int]],
+    names: Optional[Sequence[str]] = None,
+    kinds: Optional[Sequence[str]] = None,
+) -> Graph:
+    n = len(times)
+    assert len(mems) == n
+    names = names or [f"v{i}" for i in range(n)]
+    kinds = kinds or ["generic"] * n
+    nodes = [Node(i, names[i], times[i], mems[i], kinds[i]) for i in range(n)]
+    return Graph(nodes, edges)

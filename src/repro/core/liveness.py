@@ -1,0 +1,233 @@
+"""Liveness analysis [Appel & Palsberg] + an event-level execution simulator
+for the canonical strategy (§3, §4.4, Appendix C).
+
+The paper scores strategies three ways:
+
+* the analytic model, eq. (2)            → ``core.dp.peak_memory``
+* measured execution *with liveness analysis*, where every buffer is freed at
+  its last use                           → ``simulate(..., liveness=True)``
+* measured execution *without* liveness (Appendix C ablation), where buffers
+  are freed only at the canonical strategy's own segment-boundary rules
+                                          → ``simulate(..., liveness=False)``
+
+The simulator expands the canonical strategy into a linear event list:
+
+  forward  : for each segment i, compute f(v) for v ∈ V_i in topo order;
+             at segment end, discard f(V_i \\ ∂(L_i)) (canonical rule).
+  backward : for each segment i = k…1:
+               recompute f(v) for uncached v ∈ V_i from the live caches;
+               for w ∈ V_i in reverse topo order, run VJP(w): reads
+               {f(p) : p ∈ pred(w)} ∪ {f(w), g(w)}, writes {g(p)};
+             at segment end discard f/g buffers of V_i, keeping gradient
+             contributions flowing to earlier segments
+             (the δ⁺(L_{i-1}) ∩ V_i backward-cache rule of §3).
+
+Because a discarded value is *recomputed* later, the same logical buffer has
+several **versions** (live intervals).  The canonical strategy's explicit
+discards delimit versions; liveness analysis can only shorten a version (free
+at its last use inside the interval), never extend it.
+
+Buffer sizes: both f(v) and g(v) occupy M_v (a gradient has the shape of its
+value).  Parameters and inputs are excluded, as in §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Sequence, Set, Tuple
+
+from .graph import EMPTY, Graph, NodeSet
+
+Buffer = Tuple[str, int]  # ("f"|"g", node)
+
+
+@dataclasses.dataclass
+class SimResult:
+    peak_memory: float
+    total_compute: float  # forward + recompute T (backward T excluded, §2)
+    recompute_overhead: float  # T of recomputed nodes only
+    num_events: int
+
+
+@dataclasses.dataclass
+class _Event:
+    reads: List[Buffer]
+    writes: List[Buffer]
+    cost: float  # T_v for fwd/recompute events, 0 for VJP events (§2)
+    frees_after: List[Buffer]  # explicit canonical-strategy discards
+
+
+def _topo_within(g: Graph, nodes: NodeSet) -> List[int]:
+    order = g.topological_order()
+    return [v for v in order if v in nodes]
+
+
+def build_events(g: Graph, sequence: Sequence[NodeSet]) -> List[_Event]:
+    """Expand a lower-set sequence into the canonical-strategy event list."""
+    g.check_increasing_sequence(sequence)
+    events: List[_Event] = []
+    k = len(sequence)
+    prev: NodeSet = EMPTY
+    segs: List[NodeSet] = []
+    bounds: List[NodeSet] = []
+    for L in sequence:
+        segs.append(L - prev)
+        bounds.append(g.boundary(L))
+        prev = L
+    # U_i = ∪_{j≤i} ∂(L_j)
+    Us: List[NodeSet] = []
+    acc: Set[int] = set()
+    for b in bounds:
+        acc |= b
+        Us.append(frozenset(acc))
+    U_k = Us[-1]
+
+    # ---------------- forward ----------------
+    for i, Vi in enumerate(segs):
+        for v in _topo_within(g, Vi):
+            events.append(
+                _Event(
+                    reads=[("f", p) for p in g.pred[v]],
+                    writes=[("f", v)],
+                    cost=g.time_v[v],
+                    frees_after=[],
+                )
+            )
+        # canonical rule: cache U_k ∩ V_i (its boundary nodes), discard rest
+        drop = Vi - U_k
+        if drop and events:
+            events[-1].frees_after.extend(("f", v) for v in drop)
+
+    # ---------------- backward ----------------
+    for i in range(k - 1, -1, -1):
+        Vi = segs[i]
+        # recompute uncached forward values of V_i
+        for v in _topo_within(g, Vi):
+            if v in U_k:
+                continue  # cached since the forward pass
+            events.append(
+                _Event(
+                    reads=[("f", p) for p in g.pred[v]],
+                    writes=[("f", v)],
+                    cost=g.time_v[v],
+                    frees_after=[],
+                )
+            )
+        # VJP sweep in reverse topological order
+        for w in reversed(_topo_within(g, Vi)):
+            reads: List[Buffer] = [("f", p) for p in g.pred[w]]
+            reads.append(("f", w))
+            if g.succ[w]:
+                reads.append(("g", w))
+            events.append(
+                _Event(
+                    reads=reads,
+                    writes=[("g", p) for p in g.pred[w]] or [("g", w)],
+                    cost=0.0,
+                    frees_after=[],
+                )
+            )
+        # segment-end frees: drop f/g of V_i; gradient contributions to
+        # earlier segments are ("g", p) with p ∉ V_i and thus survive.
+        frees = [("f", v) for v in Vi] + [("g", v) for v in Vi]
+        if events:
+            events[-1].frees_after.extend(frees)
+    return events
+
+
+def build_vanilla_events(g: Graph) -> List[_Event]:
+    """No-recomputation baseline: cache every forward value, then backprop."""
+    events: List[_Event] = []
+    order = g.topological_order()
+    for v in order:
+        events.append(
+            _Event([("f", p) for p in g.pred[v]], [("f", v)], g.time_v[v], [])
+        )
+    for w in reversed(order):
+        reads: List[Buffer] = [("f", p) for p in g.pred[w]] + [("f", w)]
+        if g.succ[w]:
+            reads.append(("g", w))
+        events.append(
+            _Event(reads, [("g", p) for p in g.pred[w]] or [("g", w)], 0.0, [])
+        )
+    if events:
+        events[-1].frees_after = [("f", v) for v in order] + [
+            ("g", v) for v in order
+        ]
+    return events
+
+
+def simulate_events(
+    g: Graph, events: List[_Event], liveness: bool
+) -> SimResult:
+    """Peak live bytes over an event list, with versioned buffer intervals.
+
+    A buffer *version* opens at its first write (or lazy-read for gradient
+    seeds) and closes at the strategy's explicit discard.  liveness=True
+    shrinks each version to end at its last use instead.
+    """
+
+    def size(buf: Buffer) -> float:
+        return g.mem_v[buf[1]]
+
+    # Pass 1: version intervals.
+    open_ver: Dict[Buffer, int] = {}
+    nver: Dict[Buffer, int] = defaultdict(int)
+    start: Dict[Tuple[Buffer, int], int] = {}
+    last_touch: Dict[Tuple[Buffer, int], int] = {}
+    end: Dict[Tuple[Buffer, int], int] = {}
+
+    def touch(b: Buffer, idx: int) -> None:
+        if b not in open_ver:
+            v = nver[b]
+            nver[b] += 1
+            open_ver[b] = v
+            start[(b, v)] = idx
+        last_touch[(b, open_ver[b])] = idx
+
+    n_events = len(events)
+    for idx, ev in enumerate(events):
+        for b in ev.reads:
+            touch(b, idx)
+        for b in ev.writes:
+            touch(b, idx)
+        for b in ev.frees_after:
+            if b in open_ver:
+                end[(b, open_ver[b])] = idx
+                del open_ver[b]
+    for b, v in open_ver.items():
+        end[(b, v)] = n_events - 1
+
+    # Pass 2: sweep with a difference array.
+    delta = [0.0] * (n_events + 1)
+    for key, s_idx in start.items():
+        e_idx = last_touch[key] if liveness else end[key]
+        e_idx = min(e_idx, end.get(key, e_idx))
+        delta[s_idx] += size(key[0])
+        delta[e_idx + 1] -= size(key[0])
+    peak = 0.0
+    cur = 0.0
+    for idx in range(n_events):
+        cur += delta[idx]
+        peak = max(peak, cur)
+
+    total_T = sum(ev.cost for ev in events)
+    return SimResult(
+        peak_memory=peak,
+        total_compute=total_T,
+        recompute_overhead=total_T - g.total_time,
+        num_events=n_events,
+    )
+
+
+def simulate(
+    g: Graph, sequence: Sequence[NodeSet], liveness: bool = True
+) -> SimResult:
+    """Simulate the canonical strategy for a lower-set sequence."""
+    return simulate_events(g, build_events(g, sequence), liveness)
+
+
+def vanilla_peak(g: Graph, liveness: bool = True) -> float:
+    """Peak of the no-recomputation baseline (cache everything)."""
+    return simulate_events(g, build_vanilla_events(g), liveness).peak_memory

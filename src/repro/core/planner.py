@@ -1,0 +1,149 @@
+"""High-level planning API: solve the general recomputation problem for a
+graph (or a traced JAX function) under a memory budget.
+
+The paper's §5.1 protocol: "for the memory budget B … we chose the minimal
+value B for which the solution … exists.  This value was determined using
+binary search."  ``min_feasible_budget`` implements that search;
+``plan`` is the one-call front door used by the framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from . import dp as dp_mod
+from .chen import chen_sqrt_n
+from .dp import DPResult, approx_dp, exact_dp, solve
+from .graph import Graph, NodeSet
+from .liveness import simulate, vanilla_peak
+from .lower_sets import all_lower_sets, pruned_lower_sets
+from .schedule import ExecutionPlan, make_plan
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """Everything the framework (and the benchmarks) need about one plan."""
+
+    method: str  # "exact_dp" | "approx_dp" | "chen" | "vanilla"
+    objective: str  # "time_centric" | "memory_centric" | "-"
+    budget: float
+    result: DPResult
+    plan: Optional[ExecutionPlan]
+    peak_with_liveness: float
+    peak_without_liveness: float
+    plan_seconds: float
+
+    @property
+    def feasible(self) -> bool:
+        return self.result.feasible
+
+
+def _family(g: Graph, method: str) -> Sequence[NodeSet]:
+    if method == "exact_dp":
+        return all_lower_sets(g)
+    if method == "approx_dp":
+        return pruned_lower_sets(g)
+    raise ValueError(method)
+
+
+def min_feasible_budget(
+    g: Graph,
+    method: str = "approx_dp",
+    tol: float = 1e-3,
+    family: Optional[Sequence[NodeSet]] = None,
+) -> float:
+    """Binary search the minimal B with a feasible canonical strategy (§5.1).
+
+    Bounds: any strategy needs at least max_i 2·M_v-ish memory; the
+    single-segment strategy needs ≤ vanilla 2·M(V).  We search in
+    [max_v M_v, 2·M(V)] to relative tolerance ``tol``, using the fast
+    feasibility-only DP (core.dp.feasible) per probe.
+    """
+    from .dp import _prepare, feasible
+
+    fam = list(family) if family is not None else list(_family(g, method))
+    infos = _prepare(g, fam)
+    lo = max(g.mem_v)
+    hi = 2.0 * g.total_memory + max(g.mem_v)
+    # verify hi feasible
+    if not feasible(g, hi, fam, infos):
+        raise RuntimeError("even the maximal budget is infeasible — bug")
+    while hi - lo > tol * max(1.0, hi):
+        mid = 0.5 * (lo + hi)
+        if feasible(g, mid, fam, infos):
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def plan(
+    g: Graph,
+    budget: Optional[float] = None,
+    method: str = "approx_dp",
+    objective: str = "time_centric",
+) -> PlanReport:
+    """Solve and lower to an ExecutionPlan.
+
+    budget=None reproduces the paper's protocol: minimal feasible B.
+    method ∈ {"exact_dp", "approx_dp", "chen", "vanilla"}.
+    """
+    t0 = _time.perf_counter()
+    full = frozenset(range(g.n))
+
+    if method == "vanilla":
+        res = DPResult(
+            sequence=[full],
+            overhead=0.0,
+            peak_memory=dp_mod.peak_memory(g, [full]),
+            feasible=True,
+        )
+    elif method == "chen":
+        res = chen_sqrt_n(g, budget=None)
+    else:
+        fam = list(_family(g, method))
+        if budget is None:
+            budget = min_feasible_budget(g, method, family=fam)
+        res = solve(g, budget, fam, objective)
+    dt = _time.perf_counter() - t0
+
+    if not res.feasible:
+        return PlanReport(
+            method=method,
+            objective=objective if method.endswith("dp") else "-",
+            budget=budget if budget is not None else float("nan"),
+            result=res,
+            plan=None,
+            peak_with_liveness=float("inf"),
+            peak_without_liveness=float("inf"),
+            plan_seconds=dt,
+        )
+
+    ep = make_plan(g, res.sequence)
+    sim_live = simulate(g, res.sequence, liveness=True)
+    sim_nolive = simulate(g, res.sequence, liveness=False)
+    return PlanReport(
+        method=method,
+        objective=objective if method.endswith("dp") else "-",
+        budget=budget if budget is not None else res.peak_memory,
+        result=res,
+        plan=ep,
+        peak_with_liveness=sim_live.peak_memory,
+        peak_without_liveness=sim_nolive.peak_memory,
+        plan_seconds=dt,
+    )
+
+
+def compare_methods(
+    g: Graph, budget: Optional[float] = None, include_exact: bool = True
+) -> List[PlanReport]:
+    """The paper's Table-1 row for one network: all methods, one graph."""
+    reports = [plan(g, method="vanilla")]
+    reports.append(plan(g, method="chen"))
+    for objective in ("memory_centric", "time_centric"):
+        reports.append(plan(g, budget, "approx_dp", objective))
+        if include_exact:
+            reports.append(plan(g, budget, "exact_dp", objective))
+    return reports

@@ -1,0 +1,102 @@
+"""Canonical strategy (§3) as an executable plan.
+
+``ExecutionPlan`` is the bridge between the DP output (a lower-set sequence)
+and the two execution backends:
+
+* ``core.executor``  — segment-by-segment custom-VJP interpreter (paper-
+  faithful semantics, used to validate gradients bit-for-bit);
+* ``core.remat``     — ``jax.checkpoint``/``save_only_these_names`` lowering
+  (production path that composes with jit/pjit sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from .graph import EMPTY, Graph, NodeSet
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One V_i = L_i \\ L_{i-1} with its caching decisions."""
+
+    index: int
+    nodes: Tuple[int, ...]  # V_i in topological order
+    lower_set: NodeSet  # L_i
+    boundary: NodeSet  # ∂(L_i) — cached at end of this segment's forward
+    keep: NodeSet  # boundary ∩ V_i — newly cached nodes
+    recompute: NodeSet  # V_i \ U_k — recomputed during backward
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    segments: Tuple[Segment, ...]
+    cached: NodeSet  # U_k — everything ever cached
+    overhead: float  # eq. (1)
+    peak_memory: float  # eq. (2)
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    def segment_of(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for seg in self.segments:
+            for v in seg.nodes:
+                out[v] = seg.index
+        return out
+
+
+def make_plan(g: Graph, sequence: Sequence[NodeSet]) -> ExecutionPlan:
+    """Lower a validated lower-set sequence into an ExecutionPlan."""
+    from .dp import overhead as _overhead, peak_memory as _peak
+
+    g.check_increasing_sequence(sequence)
+    order = g.topological_order()
+    pos = {v: i for i, v in enumerate(order)}
+
+    segments: List[Segment] = []
+    prev: NodeSet = EMPTY
+    cached: set = set()
+    for i, L in enumerate(sequence):
+        Vi = L - prev
+        b = g.boundary(L)
+        cached |= b
+        segments.append(
+            Segment(
+                index=i,
+                nodes=tuple(sorted(Vi, key=pos.get)),
+                lower_set=L,
+                boundary=b,
+                keep=frozenset(b & Vi),
+                recompute=EMPTY,  # filled below once U_k is known
+            )
+        )
+        prev = L
+    U_k = frozenset(cached)
+    segments = [
+        dataclasses.replace(s, recompute=frozenset(set(s.nodes) - U_k))
+        for s in segments
+    ]
+    return ExecutionPlan(
+        segments=tuple(segments),
+        cached=U_k,
+        overhead=_overhead(g, sequence),
+        peak_memory=_peak(g, sequence),
+    )
+
+
+def plan_summary(g: Graph, plan: ExecutionPlan) -> str:
+    lines = [
+        f"ExecutionPlan: {plan.num_segments} segments, "
+        f"overhead T={plan.overhead:.3g} "
+        f"({100 * plan.overhead / g.total_time:.1f}% of fwd), "
+        f"analytic peak M={plan.peak_memory:.4g}"
+    ]
+    for s in plan.segments:
+        lines.append(
+            f"  seg {s.index}: |V|={len(s.nodes)} keep={sorted(s.keep)} "
+            f"recompute={len(s.recompute)} nodes"
+        )
+    return "\n".join(lines)

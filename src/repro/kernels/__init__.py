@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical substrate hot-spot.
+
+flash_attention: online-softmax attention whose backward *recomputes* the
+probability blocks instead of caching the O(S^2) score matrix — the paper's
+recompute-don't-cache trade at the tile level (DESIGN.md §3.5).
+Validated in interpret mode against kernels.ref (pure jnp oracle).
+"""
+
+from .ops import flash_attention
+
+__all__ = ["flash_attention"]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets).
+
+Everything here is straight-line jnp with explicit f32 softmax — no tricks,
+no chunking — so a disagreement with the kernels localizes to the kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, KV, S, D) → (B, H, S, D), repeating each kv head H/KV times."""
+    B, KV, S, D = k.shape
+    rep = n_heads // KV
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=1)
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KV, Sk, D)
+    v: jax.Array,  # (B, KV, Sk, D)
+    causal: bool = True,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    k = expand_kv(k, H)
+    v = expand_kv(v, H)
+    Sk = k.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / math.sqrt(D)
+    if causal:
+        # decode-style alignment: query i attends to keys ≤ i + (Sk - Sq)
+        off = Sk - Sq
+        mask = jnp.arange(Sq)[:, None] + off >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def attention_with_lse_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """Also return the per-row logsumexp (B, H, Sq) the backward recomputes
+    probabilities from."""
+    B, H, Sq, D = q.shape
+    k = expand_kv(k, H)
+    v = expand_kv(v, H)
+    Sk = k.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / math.sqrt(D)
+    if causal:
+        off = Sk - Sq
+        mask = jnp.arange(Sq)[:, None] + off >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    lse = jax.nn.logsumexp(scores, axis=-1)  # (B,H,Sq)
+    probs = jnp.exp(scores - lse[..., None])
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype), lse
+
+
+def attention_vjp_ref(q, k, v, do, causal: bool = True):
+    """Reference gradients via jax.vjp over the oracle."""
+    f = lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal)
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(do)

@@ -1,0 +1,6 @@
+"""Launchers: production mesh, dry-run, training and serving CLIs.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+fresh process (python -m repro.launch.dryrun).  Everything else here is
+import-safe.
+"""

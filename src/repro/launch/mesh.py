@@ -1,0 +1,46 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: 16 × 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 × 16 × 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis composes with "data" for hierarchical gradient reduction
+(reduce-scatter intra-pod over ICI, all-reduce across pods over DCI).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS *before* the first jax call).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants used by the roofline (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+HBM_BYTES = 16 * 1024**3  # 16 GiB per chip
+
+
+def _auto(n):
+    from jax.sharding import AxisType
+
+    return (AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host has (tests / examples): (n_dev/model, model)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_num_devices(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

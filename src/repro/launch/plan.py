@@ -1,0 +1,249 @@
+"""Apply the paper's planner to the production models.
+
+The scan-over-units LM is, at unit granularity, a *chain* — and on a chain
+the lower-set lattice is exactly the set of prefixes, so the DP solution is
+the true optimum (DESIGN.md §3).  Each unit is modelled as two nodes:
+
+  interior  (M_v = unit's interior activation bytes, T_v = unit FLOPs)
+  boundary  (M_v = bytes of the unit output h = (B_loc, S_loc, d),  T_v ≈ 0)
+
+so eq. (2)'s ``2M(V_i)`` sees the real working set while the cached
+boundary ∂(L_i) costs only the h tensor — the same accounting XLA applies to
+the per-segment ``jax.checkpoint`` this plan lowers to (models.transformer
+``segment_sizes``).
+
+Budget: per-device HBM minus params+optimizer+workspace, i.e. the activation
+budget the paper's B represents (§3 "budget semantics on TPU").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import Graph, exact_dp
+from repro.core.dp import DPResult, quantize_times
+from repro.core.graph import Node
+from repro.launch.mesh import HBM_BYTES
+from repro.models.transformer import unit_pattern
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanInputs:
+    n_units: int
+    bytes_boundary: float  # unit output h, per device
+    bytes_interior: float  # unit interior activations, per device
+    flops_unit: float
+    budget: float
+
+
+def activation_expansion(cfg: ModelConfig, model_shards: int = 1) -> float:
+    """Interior-activation bytes of one unit, in units of the h tensor.
+
+    Tensors whose live axis is TP-sharded (ffn hidden, q/k/v heads, expert
+    rows) are divided by ``model_shards`` — the planner budgets *per-device*
+    bytes, matching the sharded step it lowers to.
+    """
+    d = cfg.d_model
+    replicated = 6.0  # ln outs, attn/ssm out, residual adds (batch-sharded only)
+    sharded = 0.0
+    if cfg.d_ff > 0:
+        sharded += 3.0 * cfg.d_ff / d  # gate/up/act
+    heads_dim = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim / d  # q,k,v
+    if cfg.n_kv_heads % model_shards == 0 and cfg.n_heads % model_shards == 0:
+        sharded += heads_dim
+    else:
+        replicated += heads_dim  # divisibility guard replicates these
+    if cfg.moe is not None:
+        e_term = cfg.moe.capacity_factor * cfg.moe.top_k * 3.0 * cfg.moe.d_ff_expert / d
+        if cfg.moe.num_experts % model_shards == 0:
+            sharded += e_term
+        else:
+            replicated += e_term
+    if cfg.ssm is not None:
+        sharded += 2.0 * cfg.ssm.expand  # z / x branches (ffn-sharded)
+    kinds, _ = unit_pattern(cfg)
+    return (replicated + sharded / max(model_shards, 1)) * len(kinds)
+
+
+def unit_flops(cfg: ModelConfig, tokens: int) -> float:
+    """Forward FLOPs of one unit (≈ 2 · active-params-per-unit · tokens)."""
+    kinds, n_units = unit_pattern(cfg)
+    per_unit_params = (cfg.num_active_params() - 2 * cfg.vocab_size * cfg.d_model) / max(
+        n_units, 1
+    )
+    return 2.0 * max(per_unit_params, 1.0) * tokens
+
+
+def chain_graph(pi: PlanInputs) -> Graph:
+    """2-node-per-unit chain: interior → boundary → interior → …"""
+    nodes = []
+    edges = []
+    for u in range(pi.n_units):
+        i_int = 2 * u
+        nodes.append(
+            Node(i_int, f"u{u}_interior", max(pi.flops_unit, 1.0), max(pi.bytes_interior, 1.0), "unit")
+        )
+        nodes.append(
+            Node(i_int + 1, f"u{u}_out", 1.0, max(pi.bytes_boundary, 1.0), "boundary")
+        )
+        edges.append((i_int, i_int + 1))
+        if u:
+            edges.append((i_int - 1, i_int))
+    return Graph(nodes, edges)
+
+
+def static_bytes(cfg: ModelConfig, model_shards: int, fsdp_shards: int = 1) -> float:
+    """Per-device params (f32) + AdamW mu/nu (f32)."""
+    return cfg.num_params() * (4 + 8) / max(model_shards, 1) / max(fsdp_shards, 1)
+
+
+def needs_fsdp(cfg: ModelConfig, model_shards: int,
+               hbm_bytes: float = HBM_BYTES) -> bool:
+    """TP-only static state over ~35% of HBM → also shard params over data."""
+    return static_bytes(cfg, model_shards) > 0.35 * hbm_bytes
+
+
+def plan_inputs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    dp_shards: int,
+    seq_shards: int = 1,
+    model_shards: int = 16,
+    n_micro: int = 1,
+    hbm_bytes: float = HBM_BYTES,
+    act_bytes: int = 2,  # bf16
+) -> PlanInputs:
+    _, n_units = unit_pattern(cfg)
+    b_loc = max(1, shape.global_batch // max(dp_shards, 1) // max(n_micro, 1))
+    s_loc = shape.seq_len // max(seq_shards, 1)
+    h_full = b_loc * s_loc * cfg.d_model * act_bytes
+    # boundary caches are sequence-parallel (models shard(h, batch, seq_act))
+    h_boundary = h_full / max(model_shards, 1)
+    # interior: ~2h of gathered full-sequence tensors (attention k/v/ctx) plus
+    # the rest either feature-sharded (activation_expansion already divides
+    # those by tp) or sequence-shardable under SP — halve the replicated part
+    # as the conservative middle ground between the two GSPMD layouts.
+    interior = h_full * (2.0 + activation_expansion(cfg, model_shards) / 2.0)
+    flops = unit_flops(cfg, b_loc * s_loc)
+    fsdp = dp_shards if needs_fsdp(cfg, model_shards, hbm_bytes) else 1
+    static = static_bytes(cfg, model_shards, fsdp)
+    if n_micro > 1:
+        static += cfg.num_params() * 4 / max(model_shards, 1) / max(fsdp, 1)  # grad accum f32
+    budget = max(hbm_bytes - static, 0.05 * hbm_bytes)
+    return PlanInputs(
+        n_units=n_units,
+        bytes_boundary=float(h_boundary),
+        bytes_interior=float(interior),
+        flops_unit=float(flops),
+        budget=float(budget),
+    )
+
+
+def segments_from_result(
+    res: DPResult, n_units: int
+) -> Tuple[Tuple[int, ...], Tuple[bool, ...]]:
+    """Lower-set sequence on the 2-node chain → (group sizes, remat flags).
+
+    On the chain, ∂(L) = {max(L)}: a lower set ending at a unit's *interior*
+    node caches that interior — the unit runs unwrapped (vanilla residuals,
+    no recompute).  Lower sets ending at *boundary* nodes delimit
+    jax.checkpoint groups whose interiors are recomputed.  With ample budget
+    the time-centric DP caches everything (overhead 0 = vanilla); under
+    pressure it mixes — exactly the paper's trade, lowered to XLA.
+    """
+    cached_units = set()
+    end_units = []
+    for L in res.sequence:
+        m = max(L)
+        if m % 2 == 0:
+            cached_units.add(m // 2)
+        else:
+            end_units.append(m // 2)
+    sizes: list = []
+    remat: list = []
+
+    def emit(lo: int, hi: int) -> None:
+        """units [lo, hi] — split into maximal cached/uncached runs."""
+        u = lo
+        while u <= hi:
+            flag = u in cached_units
+            v = u
+            while v + 1 <= hi and ((v + 1) in cached_units) == flag:
+                v += 1
+            sizes.append(v - u + 1)
+            remat.append(not flag)
+            u = v + 1
+
+    prev = -1
+    for e in end_units:
+        if e > prev:
+            emit(prev + 1, e)
+            prev = e
+    if prev < n_units - 1:
+        emit(prev + 1, n_units - 1)
+    return tuple(sizes), tuple(remat)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    sizes: Tuple[int, ...]
+    remat: Tuple[bool, ...]
+    n_micro: int = 1
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.sizes)
+
+
+def plan_unit_segments(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    dp_shards: int,
+    seq_shards: int = 1,
+    model_shards: int = 16,
+    n_micro: int = 1,
+    budget: Optional[float] = None,
+    objective: str = "time_centric",
+) -> Tuple[SegmentPlan, DPResult]:
+    """One-call front door used by the launchers and the dry-run."""
+    pi = plan_inputs(cfg, shape, dp_shards, seq_shards, model_shards, n_micro)
+    g = quantize_times(chain_graph(pi), levels=32)
+    B = budget if budget is not None else pi.budget
+    res = exact_dp(g, B, objective=objective)
+    if not res.feasible:
+        sp = SegmentPlan(tuple(1 for _ in range(pi.n_units)),
+                         tuple(True for _ in range(pi.n_units)), n_micro)
+        return sp, res
+    sizes, remat = segments_from_result(res, pi.n_units)
+    return SegmentPlan(sizes, remat, n_micro), res
+
+
+def plan_with_microbatching(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    dp_shards: int,
+    seq_shards: int = 1,
+    model_shards: int = 16,
+    objective: str = "time_centric",
+    max_micro: int = 16,
+) -> Tuple[SegmentPlan, DPResult]:
+    """§5.1 protocol, production edition: find the smallest gradient-
+    accumulation factor for which the general recomputation problem has a
+    solution, then take the DP-optimal canonical strategy at that factor."""
+    b_loc = max(1, shape.global_batch // max(dp_shards, 1))
+    n_micro = 1
+    while n_micro <= min(max_micro, b_loc):
+        sp, res = plan_unit_segments(
+            cfg, shape, dp_shards, seq_shards, model_shards, n_micro,
+            objective=objective,
+        )
+        if res.feasible:
+            return sp, res
+        n_micro *= 2
+    return plan_unit_segments(
+        cfg, shape, dp_shards, seq_shards, model_shards,
+        min(max_micro, b_loc), objective=objective,
+    )

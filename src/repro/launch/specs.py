@@ -1,0 +1,198 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns the exact pytree the corresponding step
+function consumes — weak-type-correct, shardable, zero device allocation.
+``state_specs`` eval_shapes the model init (and AdamW init) the same way.
+``input_shardings`` / ``cache_shardings`` / ``param_shardings`` map those
+trees onto a mesh under the active logical rules with the divisibility guard
+(repro.parallel.sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.optim import adamw
+from repro.parallel.sharding import (
+    _axis_sizes,
+    drop_indivisible,
+    named_sharding_tree,
+)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    from repro.parallel.sharding import get_rules
+
+    rule = get_rules().get("batch", ("pod", "data"))
+    if isinstance(rule, str):
+        rule = (rule,)
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in rule if a in names)
+
+
+# --------------------------------------------------------------------- inputs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """The step-function batch for one cell (ShapeDtypeStructs only)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.encoder_decoder:
+            batch["frames"] = _sds((B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+        elif cfg.frontend != "none":
+            batch["extra_embeds"] = _sds(
+                (B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.encoder_decoder:
+            batch["frames"] = _sds((B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+        elif cfg.frontend != "none":
+            batch["extra_embeds"] = _sds(
+                (B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "positions": _sds((B,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """KV/state caches for the decode step, via eval_shape (no allocation)."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encoder_decoder:
+        params = params_specs(cfg)
+        frames = _sds((B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+        return jax.eval_shape(lambda p, f: model.init_caches(p, f, S), params, frames)
+    return jax.eval_shape(lambda: model.init_caches(B, S))
+
+
+def params_specs(cfg: ModelConfig, serving: bool = False) -> Any:
+    """serving=True casts float params to the activation dtype (bf16
+    inference weights; the f32 master copy exists only in training)."""
+    model = build_model(cfg)
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params = jax.eval_shape(model.init, rng)
+    if not serving:
+        return params
+    act = cfg.activation_dtype
+
+    def cast(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, act)
+        return l
+
+    return jax.tree_util.tree_map(cast, params)
+
+
+def opt_specs(params: Any) -> Any:
+    return jax.eval_shape(adamw.init, params)
+
+
+# ------------------------------------------------------------------ shardings
+
+
+def input_shardings(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+) -> Dict[str, Any]:
+    sizes = _axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    specs = input_specs(cfg, shape)
+
+    def one(name: str, sds) -> NamedSharding:
+        spec = [ba] + [None] * (len(sds.shape) - 1)
+        p = drop_indivisible(P(*spec), sds.shape, sizes)
+        return NamedSharding(mesh, p)
+
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def cache_shardings(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, caches: Any
+) -> Any:
+    """Decode caches: batch → ("pod","data"); long-context (B=1) instead
+    shards the sequence axis over "data" (SP); heads/kv axis → "model"."""
+    sizes = _axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    long_ctx = shape.global_batch == 1
+
+    def leaf_spec(path: str, sds) -> NamedSharding:
+        shp = sds.shape
+        nd = len(shp)
+        spec = [None] * nd
+        # leading axis is the unit/layer stack for every cache leaf
+        if nd >= 2:
+            spec[1] = None if long_ctx else ba
+        last = path.split("/")[-1]
+        if last in ("k", "v", "xk", "xv") and nd == 5:
+            # (L, B, S, KV, D): prefer kv-heads over "model"; when KV doesn't
+            # divide the model axis (GQA kv < tp), shard the sequence instead
+            # — an S-sharded KV cache decodes with small softmax collectives,
+            # while an unsharded one simply does not fit (mistral 32k ≈ 94
+            # GB/device otherwise).
+            if long_ctx:
+                spec[2] = "data"
+            if shp[3] % sizes.get("model", 1) == 0:
+                spec[3] = "model"
+            elif shp[2] % sizes.get("model", 1) == 0 and spec[2] is None:
+                spec[2] = "model"
+        elif last in ("ssm", "C") and nd == 5:
+            # (L, B, H, P, N)
+            spec[2] = "model"
+        elif last == "n" and nd == 5:
+            spec[2] = "model"
+        elif last == "conv" and nd == 4:
+            spec[3] = "model"
+        p = drop_indivisible(P(*spec), shp, sizes)
+        return NamedSharding(mesh, p)
+
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    treedef = jax.tree_util.tree_structure(caches)
+    out = []
+    for kp, leaf in flat:
+        keys = []
+        for pp in kp:
+            keys.append(str(getattr(pp, "key", getattr(pp, "idx", pp))))
+        out.append(leaf_spec("/".join(keys), leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params: Optional[Any] = None):
+    from repro.launch.plan import needs_fsdp
+    from repro.launch.steps import _model_shards
+    from repro.parallel.sharding import get_rules
+
+    if params is None:
+        params = params_specs(cfg)
+    rules = get_rules()
+    if rules.get("heads") is None and rules.get("experts") is None:
+        # dp_only mode: full ZeRO-3 over both axes
+        return named_sharding_tree(
+            params, mesh, fsdp=True, fsdp_axes=("data", "model")
+        )
+    if rules.get("heads") is None:  # dp_attn: ZeRO dense parts, EP experts
+        return named_sharding_tree(params, mesh, fsdp=True)
+    fsdp = needs_fsdp(cfg, _model_shards(mesh))
+    return named_sharding_tree(params, mesh, fsdp=fsdp)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,272 @@
+"""Step-function builders: the exact functions the dry-run lowers and the
+launchers run.
+
+Each builder returns ``(fn, in_shardings, out_shardings, example_inputs)``
+where ``example_inputs`` are ShapeDtypeStructs — so
+
+    with jax.sharding.set_mesh(mesh):
+        jax.jit(fn, in_shardings=..., out_shardings=...).lower(*example_inputs)
+
+is the whole dry-run for one cell, and the same jitted function accepts real
+arrays in the launchers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import specs as S
+from repro.launch.plan import needs_fsdp, plan_with_microbatching
+from repro.models import build_model
+from repro.optim import adamw
+
+
+def _dp_shards(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def _model_shards(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("model", 1)
+
+
+def _logits_sharding(cfg: ModelConfig, global_batch: int, mesh: Mesh):
+    """Logits (B, S, V): batch over dp axes, vocab over model — guarded for
+    odd vocabs (49155, 51865) and batch=1 long-context cells."""
+    from repro.parallel.sharding import _axis_sizes, drop_indivisible
+
+    ba = S.batch_axes(mesh)
+    spec = P(None if global_batch == 1 else ba, None, "model")
+    spec = drop_indivisible(
+        spec, (global_batch, 1, cfg.vocab_size), _axis_sizes(mesh)
+    )
+    return NamedSharding(mesh, spec)
+
+
+def _seq_shards(mesh: Mesh, shape: ShapeConfig) -> int:
+    if shape.global_batch > 1:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1)
+
+
+def segment_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 objective: Optional[str] = None,
+                 model_shards_override: Optional[int] = None):
+    """The paper's technique, applied: DP-plan the remat segmentation, with
+    the smallest feasible gradient-accumulation factor (§5.1's minimal-budget
+    protocol turned inside out for a fixed per-device HBM).
+
+    Returns (SegmentPlan, DPResult)."""
+    if cfg.remat_method == "none":
+        return None, None
+    obj = objective or cfg.remat_objective
+    ms = model_shards_override or _model_shards(mesh)
+    dp = _dp_shards(mesh)
+    if model_shards_override == 1:  # dp_only: "model" joins the batch axes
+        dp *= _model_shards(mesh)
+    return plan_with_microbatching(
+        cfg, shape, dp, _seq_shards(mesh, shape),
+        model_shards=ms, objective=obj,
+    )
+
+
+# ---------------------------------------------------------------------- train
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    opt: Optional[adamw.AdamWConfig] = None,
+    segment_sizes: Optional[Tuple[int, ...]] = None,
+    n_micro: Optional[int] = None,
+    opts: Tuple[str, ...] = (),
+):
+    """opts (§Perf hillclimb knobs, default = paper-faithful baseline):
+      "mp"      — bf16 compute copy of the f32 master params: halves weight
+                  all-gather bytes (ZeRO/FSDP paths).
+      "dp_only" — drop tensor parallelism; "model" axis joins data
+                  parallelism, params fully sharded (ZeRO-3).  For ≤ ~4B
+                  models at 256 chips this removes the per-layer
+                  activation-cotangent all-reduces entirely.
+    """
+    from repro.parallel.sharding import (
+        DEFAULT_RULES,
+        DP_ATTN_RULES,
+        DP_ONLY_RULES,
+        set_rules,
+    )
+
+    if "dp_only" in opts:
+        set_rules(DP_ONLY_RULES)
+    elif "dp_attn" in opts:
+        set_rules(DP_ATTN_RULES)
+    else:
+        set_rules(DEFAULT_RULES)
+    model = build_model(cfg)
+    ocfg = opt or adamw.AdamWConfig()
+    model_shards = 1 if "dp_only" in opts else _model_shards(mesh)
+    segment_remat = None
+    if segment_sizes is None:
+        sp, _ = segment_plan(cfg, shape, mesh, model_shards_override=model_shards)
+        if sp is not None:
+            segment_sizes, segment_remat = sp.sizes, sp.remat
+            n_micro = n_micro or sp.n_micro
+    n_micro = n_micro or 1
+    mp = "mp" in opts
+
+    def loss_fn(p, b):
+        if mp:
+            p = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32
+                else x,
+                p,
+            )
+        return model.loss(p, b, segment_sizes=segment_sizes,
+                          segment_remat=segment_remat)
+
+    grad_sharding = S.param_shardings(cfg, mesh) if "rs" in opts else None
+
+    def _constrain_grads(grads):
+        # ZeRO: pin gradients to the (sharded) parameter layout immediately,
+        # so GSPMD lowers the data-axis reduction as a reduce-scatter instead
+        # of all-reduce + slice-at-update.
+        if grad_sharding is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads,
+            grad_sharding,
+        )
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            # gradient accumulation over n_micro microbatches (lax.scan keeps
+            # one live microbatch of activations at a time)
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+                batch,
+            )
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(acc, b):
+                acc_loss, acc_g = acc
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                g = _constrain_grads(g)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g
+                )
+                return (acc_loss + l, acc_g), None
+
+            (loss, grads), _ = jax.lax.scan(body, (0.0, g0), micro)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        new_params, new_opt, metrics = adamw.update(ocfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    params = S.params_specs(cfg)
+    opt_state = S.opt_specs(params)
+    batch = S.input_specs(cfg, shape)
+
+    p_sh = S.param_shardings(cfg, mesh, params)
+    # mu/nu shaped like params → same shardings; step counter replicated
+    o_sh = adamw.AdamWState(step=S.replicated(mesh), mu=p_sh, nu=p_sh)
+    b_sh = S.input_shardings(cfg, shape, mesh)
+    rep = S.replicated(mesh)
+    metric_sh = {"grad_norm": rep, "lr": rep, "loss": rep}
+    in_sh = (p_sh, o_sh, b_sh)
+    out_sh = (p_sh, o_sh, metric_sh)
+    return train_step, in_sh, out_sh, (params, opt_state, batch)
+
+
+# -------------------------------------------------------------------- prefill
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       segment_sizes: Optional[Tuple[int, ...]] = None):
+    model = build_model(cfg)
+
+    if cfg.encoder_decoder:
+
+        def prefill(params, batch):
+            enc = model.encode(params, batch["frames"])
+            return model.decode_train(params, batch["tokens"], enc)
+
+    else:
+
+        def prefill(params, batch):
+            return model.forward(
+                params,
+                batch["tokens"],
+                extra_embeds=batch.get("extra_embeds"),
+                segment_sizes=segment_sizes,
+            )
+
+    params = S.params_specs(cfg, serving=True)
+    batch = S.input_specs(cfg, shape)
+    p_sh = S.param_shardings(cfg, mesh, params)
+    b_sh = S.input_shardings(cfg, shape, mesh)
+    logits_sh = _logits_sharding(cfg, shape.global_batch, mesh)
+    return prefill, (p_sh, b_sh), logits_sh, (params, batch)
+
+
+# --------------------------------------------------------------------- decode
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      opts: Tuple[str, ...] = ()):
+    """opts:
+      "ws" — weight-stationary decode: the residual-stream feature axis is
+             sharded over "data", so FSDP'd weights are consumed in place by
+             distributed matmuls (small activation partial-sum all-reduces)
+             instead of being all-gathered every token step.
+    """
+    from repro.parallel.sharding import DEFAULT_RULES, set_rules
+
+    model = build_model(cfg)
+    if "ws" in opts:
+        set_rules({**DEFAULT_RULES, "model": "data"})
+
+    def serve_step(params, caches, tokens, positions):
+        logits, new_caches = model.decode_step(params, tokens, caches, positions)
+        return logits, new_caches
+
+    params = S.params_specs(cfg, serving=True)
+    caches = S.cache_specs(cfg, shape)
+    inputs = S.input_specs(cfg, shape)
+    tokens, positions = inputs["tokens"], inputs["positions"]
+
+    p_sh = S.param_shardings(cfg, mesh, params)
+    c_sh = S.cache_shardings(cfg, shape, mesh, caches)
+    ba = S.batch_axes(mesh)
+    long_ctx = shape.global_batch == 1
+    tok_sh = NamedSharding(mesh, P(None if long_ctx else ba, None))
+    pos_sh = NamedSharding(mesh, P(None if long_ctx else ba))
+    logits_sh = _logits_sharding(cfg, shape.global_batch, mesh)
+    in_sh = (p_sh, c_sh, tok_sh, pos_sh)
+    out_sh = (logits_sh, c_sh)
+    return serve_step, in_sh, out_sh, (params, caches, tokens, positions)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               opts: Tuple[str, ...] = (), **kw):
+    """Dispatch on the shape kind: train / prefill / decode."""
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, opts=opts, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, **kw)
+    return build_decode_step(cfg, shape, mesh, opts=opts)

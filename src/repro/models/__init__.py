@@ -1,0 +1,17 @@
+"""Model substrate: layers, attention, MoE, SSM blocks, and the LM/Whisper
+assemblies for the 10 assigned architectures."""
+
+from repro.configs.base import ModelConfig
+
+from .transformer import LM, default_segments, unit_pattern
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ModelConfig):
+    """Factory: arch family → model object with init/loss/decode_step."""
+    if cfg.encoder_decoder:
+        return WhisperModel(cfg)
+    return LM(cfg)
+
+
+__all__ = ["LM", "WhisperModel", "build_model", "default_segments", "unit_pattern"]

@@ -1,0 +1,373 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Training runs the *chunked* formulation — quadratic only within a chunk,
+recurrent across chunks — O(S·Q) memory, sub-quadratic compute, and a single
+O(1) state for decode.  This is what makes the ``long_500k`` shape feasible
+for the ssm/hybrid architectures (DESIGN.md §Arch-applicability).
+
+Simplifications vs. the reference CUDA implementations (documented per
+DESIGN.md hardware-adaptation): depthwise conv applies to the x-branch only
+(Mamba2), and mLSTM uses sigmoid input/forget gates instead of the
+stabilized-exponential pair — shapes, costs and state layout are faithful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.parallel.sharding import shard
+from .layers import _init_normal, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core (shared by Mamba2): h_t = a_t·h_{t-1} + b_t ⊗ x_t
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a_log: jax.Array) -> jax.Array:
+    """(…, Q) → (…, Q, Q) lower-triangular decay: out[i,j] = Σ_{k=j+1..i} a."""
+    Q = a_log.shape[-1]
+    cs = jnp.cumsum(a_log, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (…, i, j) = Σ_{j+1..i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)   dt-scaled inputs
+    a_log: jax.Array,  # (B, S, H)  log decay per step (≤ 0)
+    Bm: jax.Array,  # (B, S, H, N)
+    Cm: jax.Array,  # (B, S, H, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xr = x.reshape(B, nc, Q, H, P)
+    ar = a_log.reshape(B, nc, Q, H).astype(jnp.float32)
+    Br = Bm.reshape(B, nc, Q, H, N)
+    Cr = Cm.reshape(B, nc, Q, H, N)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def per_chunk(h, inputs):
+        xq, aq, Bq, Cq = inputs  # (B,Q,H,P), (B,Q,H), (B,Q,H,N), (B,Q,H,N)
+        a_cum = jnp.cumsum(aq, axis=1)  # (B,Q,H)
+        # intra-chunk (flash-style blockwise "attention" with decay)
+        L = jnp.exp(_segsum(aq.transpose(0, 2, 1)))  # (B,H,Q,Q)
+        G = jnp.einsum("bqhn,bshn->bhqs", Cq, Bq).astype(jnp.float32)
+        Y_diag = jnp.einsum("bhqs,bhqs,bshp->bqhp", G, L, xr_f(xq))
+        # contribution of the carried state
+        state_decay = jnp.exp(a_cum)  # (B,Q,H)
+        Y_off = jnp.einsum(
+            "bqhn,bhpn,bqh->bqhp", Cq.astype(jnp.float32), h, state_decay
+        )
+        # new carried state
+        decay_to_end = jnp.exp(a_cum[:, -1:, :] - a_cum)  # (B,Q,H)
+        new_h = h * jnp.exp(a_cum[:, -1, :])[:, :, None, None].transpose(
+            0, 1, 2, 3
+        ) + jnp.einsum(
+            "bqhn,bqh,bqhp->bhpn", Bq.astype(jnp.float32), decay_to_end, xr_f(xq)
+        )
+        return new_h, (Y_diag + Y_off).astype(x.dtype)
+
+    def xr_f(v):
+        return v.astype(jnp.float32)
+
+    xs = xr.transpose(1, 0, 2, 3, 4)
+    as_ = ar.transpose(1, 0, 2, 3)
+    Bs = Br.transpose(1, 0, 2, 3, 4)
+    Cs = Cr.transpose(1, 0, 2, 3, 4)
+    # checkpoint per chunk: the (B,H,Q,Q) decay/score blocks are recomputed in
+    # the backward instead of being saved for all S/Q chunks — the paper's
+    # recompute-don't-cache trade at the chunk level (cf. kernels/flash_attention)
+    hT, ys = jax.lax.scan(jax.checkpoint(per_chunk), h0, (xs, as_, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, hT
+
+
+def ssd_step(
+    x: jax.Array,  # (B, H, P)
+    a_log: jax.Array,  # (B, H)
+    Bm: jax.Array,  # (B, H, N)
+    Cm: jax.Array,  # (B, H, N)
+    h: jax.Array,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step of the SSD recurrence."""
+    a = jnp.exp(a_log.astype(jnp.float32))[..., None, None]
+    h = h * a + jnp.einsum(
+        "bhp,bhn->bhpn", x.astype(jnp.float32), Bm.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_sizes(d_model: int, cfg: SSMConfig, head_p: int = 64):
+    d_inner = cfg.expand * d_model
+    H = max(1, d_inner // head_p)
+    P = d_inner // H
+    return d_inner, H, P
+
+
+def mamba2_init(rng, d_model: int, cfg: SSMConfig):
+    d_inner, H, P = mamba2_sizes(d_model, cfg)
+    N = cfg.d_state
+    r = jax.random.split(rng, 5)
+    proj_out = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    return {
+        "norm": rmsnorm_init(d_model),
+        "in_proj": {"w": _init_normal(r[0], (d_model, proj_out), d_model**-0.5)},
+        "conv_w": _init_normal(r[1], (cfg.d_conv, d_inner), 0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),  # A = -exp(A_log) < 0
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_out": rmsnorm_init(d_inner),
+        "out_proj": {"w": _init_normal(r[2], (d_inner, d_model), d_inner**-0.5)},
+    }
+
+
+def _split_proj(zxbcdt, d_inner, N, H):
+    z = zxbcdt[..., :d_inner]
+    xs = zxbcdt[..., d_inner : 2 * d_inner]
+    Bm = zxbcdt[..., 2 * d_inner : 2 * d_inner + N]
+    Cm = zxbcdt[..., 2 * d_inner + N : 2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N :]
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out
+
+
+def mamba2_apply(
+    p, x: jax.Array, cfg: SSMConfig, state: Optional[Dict] = None
+):
+    """Full-sequence forward.  x (B,S,D) → (B,S,D)."""
+    B, S, D = x.shape
+    dt_ = x.dtype
+    d_inner, H, P = mamba2_sizes(D, cfg)
+    N = cfg.d_state
+    h = rmsnorm(p["norm"], x)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"]["w"].astype(dt_))
+    z, xs, Bm, Cm, dt = _split_proj(zxbcdt, d_inner, N, H)
+    xs = _causal_conv(xs, p["conv_w"].astype(dt_))
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(dt_)
+    xs = shard(xs, "batch", None, "ffn")
+
+    dt_soft = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a_log = dt_soft * A  # (B,S,H) ≤ 0
+
+    xh = xs.reshape(B, S, H, P) * dt_soft[..., None].astype(dt_)
+    Bh = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    Ch = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+
+    y, _hT = ssd_chunked(xh, a_log, Bh, Ch, cfg.chunk)
+    y = y + xs.reshape(B, S, H, P) * p["D_skip"][None, None, :, None].astype(dt_)
+    y = y.reshape(B, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    y = rmsnorm(p["norm_out"], y)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"]["w"].astype(dt_))
+    return x + shard(out, "batch", None, "model")
+
+
+def mamba2_init_state(batch: int, d_model: int, cfg: SSMConfig, dtype):
+    d_inner, H, P = mamba2_sizes(d_model, cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, P, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+    }
+
+
+def mamba2_step(p, x: jax.Array, state: Dict, cfg: SSMConfig):
+    """One decode step.  x (B,1,D) → (B,1,D), new state."""
+    B, _, D = x.shape
+    dt_ = x.dtype
+    d_inner, H, P = mamba2_sizes(D, cfg)
+    N = cfg.d_state
+    h = rmsnorm(p["norm"], x)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"]["w"].astype(dt_))
+    z, xs, Bm, Cm, dt = _split_proj(zxbcdt[:, 0], d_inner, N, H)
+
+    conv_buf = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)
+    w = p["conv_w"].astype(dt_)
+    xs = jnp.einsum("bkc,kc->bc", conv_buf, w)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(dt_)
+    new_conv = conv_buf[:, 1:, :]
+
+    dt_soft = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a_log = dt_soft * A
+    xh = xs.reshape(B, H, P) * dt_soft[..., None].astype(dt_)
+    Bh = jnp.broadcast_to(Bm[:, None, :], (B, H, N))
+    Ch = jnp.broadcast_to(Cm[:, None, :], (B, H, N))
+    y, new_ssm = ssd_step(xh, a_log, Bh, Ch, state["ssm"])
+    y = y + xs.reshape(B, H, P) * p["D_skip"][None, :, None].astype(dt_)
+    y = y.reshape(B, d_inner) * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    y = rmsnorm(p["norm_out"], y)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"]["w"].astype(dt_))
+    return x + out[:, None, :], {"ssm": new_ssm, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, d_model: int, n_heads: int):
+    r = jax.random.split(rng, 6)
+    s = d_model**-0.5
+    return {
+        "norm": rmsnorm_init(d_model),
+        "wq": _init_normal(r[0], (d_model, d_model), s),
+        "wk": _init_normal(r[1], (d_model, d_model), s),
+        "wv": _init_normal(r[2], (d_model, d_model), s),
+        "w_gates": _init_normal(r[3], (d_model, 2 * n_heads), s),
+        "wo": _init_normal(r[4], (d_model, d_model), s),
+        "out_norm": rmsnorm_init(d_model),
+    }
+
+
+def mlstm_apply(p, x: jax.Array, n_heads: int, chunk: int):
+    """mLSTM layer: C_t = f_t·C_{t-1} + i_t·v_t k_tᵀ ;  y_t = C_t q_t / nrm.
+
+    Expressed through the same chunked recurrence as SSD with N = P = d_head;
+    the normalizer runs as a parallel recurrence with P = 1.
+    """
+    B, S, D = x.shape
+    dt_ = x.dtype
+    H = n_heads
+    Dh = D // H
+    h = rmsnorm(p["norm"], x)
+    q = jnp.einsum("bsd,de->bse", h, p["wq"].astype(dt_)).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", h, p["wk"].astype(dt_)).reshape(B, S, H, Dh)
+    v = jnp.einsum("bsd,de->bse", h, p["wv"].astype(dt_)).reshape(B, S, H, Dh)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_gates"].astype(dt_)).astype(
+        jnp.float32
+    )
+    i_gate = jax.nn.sigmoid(gates[..., :H])  # (B,S,H)
+    f_gate = jax.nn.sigmoid(gates[..., H:] + 2.0)
+    a_log = jnp.log(f_gate + 1e-9)
+
+    k = k * (Dh**-0.5)
+    # value recurrence: state (B,H,Dh_v,Dh_k)
+    y, _ = ssd_chunked(v * i_gate[..., None].astype(dt_), a_log, k, q, chunk)
+    # normalizer recurrence: P = 1
+    ones = i_gate[..., None].astype(dt_)
+    nrm, _ = ssd_chunked(ones, a_log, k, q, chunk)  # (B,S,H,1)
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = rmsnorm(p["out_norm"], y.reshape(B, S, D))
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_))
+    return x + shard(out, "batch", None, "model")
+
+
+def mlstm_init_state(batch: int, d_model: int, n_heads: int):
+    Dh = d_model // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, 1, Dh), jnp.float32),
+    }
+
+
+def mlstm_step(p, x: jax.Array, state: Dict, n_heads: int):
+    B, _, D = x.shape
+    dt_ = x.dtype
+    H, Dh = n_heads, D // n_heads
+    h = rmsnorm(p["norm"], x)[:, 0]
+    q = jnp.einsum("bd,de->be", h, p["wq"].astype(dt_)).reshape(B, H, Dh)
+    k = jnp.einsum("bd,de->be", h, p["wk"].astype(dt_)).reshape(B, H, Dh)
+    v = jnp.einsum("bd,de->be", h, p["wv"].astype(dt_)).reshape(B, H, Dh)
+    gates = jnp.einsum("bd,dg->bg", h, p["w_gates"].astype(dt_)).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gates[..., :H])
+    f_gate = jax.nn.sigmoid(gates[..., H:] + 2.0)
+    a_log = jnp.log(f_gate + 1e-9)
+    k = k * (Dh**-0.5)
+    y, C = ssd_step(v * i_gate[..., None].astype(dt_), a_log, k, q, state["C"])
+    nrm, n = ssd_step(i_gate[..., None].astype(dt_), a_log, k, q, state["n"])
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = rmsnorm(p["out_norm"], y.reshape(B, D))
+    out = jnp.einsum("be,ed->bd", y, p["wo"].astype(dt_))
+    return x + out[:, None, :], {"C": C, "n": n}
+
+
+def slstm_init(rng, d_model: int):
+    r = jax.random.split(rng, 2)
+    return {
+        "norm": rmsnorm_init(d_model),
+        "w_zifo": _init_normal(r[0], (d_model, 4 * d_model), d_model**-0.5),
+        "wo": _init_normal(r[1], (d_model, d_model), d_model**-0.5),
+    }
+
+
+def slstm_apply(p, x: jax.Array):
+    """sLSTM: elementwise gated recurrence via associative scan (O(S log S))."""
+    B, S, D = x.shape
+    dt_ = x.dtype
+    h = rmsnorm(p["norm"], x)
+    zifo = jnp.einsum("bsd,dg->bsg", h, p["w_zifo"].astype(dt_)).astype(jnp.float32)
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f + 1.0)
+    o = jax.nn.sigmoid(o)
+
+    def combine(a, b):
+        # states compose: c = f·c_prev + u   →  (f2, u2)∘(f1, u1) = (f1f2, u1f2+u2)
+        return (a[0] * b[0], a[1] * b[0] + b[1])
+
+    fc, uc = jax.lax.associative_scan(combine, (f, i * z), axis=1)
+    fn, un = jax.lax.associative_scan(combine, (f, i), axis=1)
+    c = uc  # zero initial state
+    n = jnp.maximum(un, 1e-6)
+    y = (o * c / n).astype(dt_)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(dt_))
+    return x + shard(out, "batch", None, "model")
+
+
+def slstm_init_state(batch: int, d_model: int):
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def slstm_step(p, x: jax.Array, state: Dict):
+    B, _, D = x.shape
+    dt_ = x.dtype
+    h = rmsnorm(p["norm"], x)[:, 0]
+    zifo = jnp.einsum("bd,dg->bg", h, p["w_zifo"].astype(dt_)).astype(jnp.float32)
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f + 1.0)
+    o = jax.nn.sigmoid(o)
+    c = f * state["c"] + i * z
+    n = f * state["n"] + i
+    y = (o * c / jnp.maximum(n, 1e-6)).astype(dt_)
+    out = jnp.einsum("bd,de->be", y, p["wo"].astype(dt_))
+    return x + out[:, None, :], {"c": c, "n": n}

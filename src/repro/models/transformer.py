@@ -1,0 +1,507 @@
+"""Generic LM: dense / MoE / SSM / hybrid / VLM families from one ModelConfig.
+
+Layer stack = repeated *units* (the repeating pattern: one block for dense,
+"k mLSTM + 1 sLSTM" for xLSTM, "k Mamba2 + shared-attention" for Zamba2),
+executed as ``lax.scan`` over stacked unit params.  The paper's recomputation
+plan enters as ``segment_sizes``: units are partitioned into segments, each
+segment scanned inside ``jax.checkpoint`` — the canonical strategy (§3) with
+L_i = "first i segments of the unit chain", which for a chain is the *exact*
+lower-set lattice, so the DP plan is optimal, not heuristic (DESIGN.md §3).
+
+Decode carries per-unit caches (KV / SSM state / conv state) scanned
+functionally alongside the stacked params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.parallel.sharding import shard
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (
+    embed,
+    embedding_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_xent,
+    swiglu,
+    swiglu_init,
+    unembed,
+    unembed_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# Unit patterns
+# ---------------------------------------------------------------------------
+
+
+def unit_pattern(cfg: ModelConfig) -> Tuple[List[str], int]:
+    """Return (block kinds inside one unit, number of units)."""
+    L = cfg.n_layers
+    if cfg.family == "ssm" and cfg.ssm and cfg.ssm.slstm_every:
+        k = cfg.ssm.slstm_every
+        assert L % k == 0, (L, k)
+        return ["mlstm"] * (k - 1) + ["slstm"], L // k
+    if cfg.family == "ssm":
+        return ["mamba"], L
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_shared_attn_every
+        assert k and L % k == 0, (L, k)
+        return ["mamba"] * k + ["shared_attn"], L // k
+    if cfg.moe is not None:
+        return ["attn_moe"], L
+    return ["attn_mlp"], L
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _block_init(rng, kind: str, cfg: ModelConfig):
+    d = cfg.d_model
+    if kind == "attn_mlp":
+        r1, r2 = jax.random.split(rng)
+        return {
+            "ln1": rmsnorm_init(d),
+            "attn": attn.attention_init(
+                r1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.qkv_bias
+            ),
+            "ln2": rmsnorm_init(d),
+            "mlp": swiglu_init(r2, d, cfg.d_ff),
+        }
+    if kind == "attn_moe":
+        r1, r2 = jax.random.split(rng)
+        return {
+            "ln1": rmsnorm_init(d),
+            "attn": attn.attention_init(
+                r1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.qkv_bias
+            ),
+            "ln2": rmsnorm_init(d),
+            "moe": moe_mod.moe_init(r2, d, cfg.moe),
+        }
+    if kind == "mamba":
+        return {"mamba": ssm_mod.mamba2_init(rng, d, cfg.ssm or SSMConfig())}
+    if kind == "mlstm":
+        return {"mlstm": ssm_mod.mlstm_init(rng, d, cfg.n_heads)}
+    if kind == "slstm":
+        return {"slstm": ssm_mod.slstm_init(rng, d)}
+    raise ValueError(kind)
+
+
+def _block_apply(p, h, h0, kind: str, cfg: ModelConfig, positions):
+    """Full-sequence block forward.  h0 = embedding output (hybrid skip)."""
+    if kind in ("attn_mlp", "attn_moe"):
+        a = attn.attention(
+            p["attn"],
+            rmsnorm(p["ln1"], h),
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            positions=positions,
+        )
+        h = h + a
+        hn = rmsnorm(p["ln2"], h)
+        if kind == "attn_mlp":
+            return h + swiglu(p["mlp"], hn)
+        return h + moe_mod.moe_apply(p["moe"], hn, cfg.moe)
+    if kind == "mamba":
+        return ssm_mod.mamba2_apply(p["mamba"], h, cfg.ssm or SSMConfig())
+    if kind == "mlstm":
+        return ssm_mod.mlstm_apply(
+            p["mlstm"], h, cfg.n_heads, (cfg.ssm or SSMConfig()).chunk
+        )
+    if kind == "slstm":
+        return ssm_mod.slstm_apply(p["slstm"], h)
+    raise ValueError(kind)
+
+
+# Shared-attention block (zamba2): one param set reused at every application;
+# concat(h, h0) is projected back to d_model first (the Zamba "concat" input).
+
+
+def _shared_attn_init(rng, cfg: ModelConfig):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return {
+        "ln": rmsnorm_init(2 * d),
+        "in_proj": {"w": (jax.random.normal(r1, (2 * d, d)) * (2 * d) ** -0.5)},
+        "attn": attn.attention_init(
+            r2, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.qkv_bias
+        ),
+        "ln2": rmsnorm_init(d),
+        "mlp": swiglu_init(r3, d, cfg.d_ff),
+    }
+
+
+def _shared_attn_apply(p, h, h0, cfg: ModelConfig, positions):
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = rmsnorm(p["ln"], x)
+    x = jnp.einsum("bsd,de->bse", x, p["in_proj"]["w"].astype(h.dtype))
+    a = attn.attention(
+        p["attn"],
+        x,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+        positions=positions,
+    )
+    x = x + a
+    return h + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    """The language model; all methods are pure and jit/eval_shape friendly."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern, self.n_units = unit_pattern(cfg)
+        self.has_shared = "shared_attn" in self.pattern
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        rngs = jax.random.split(rng, self.n_units + 4)
+        scan_kinds = [k for k in self.pattern if k != "shared_attn"]
+
+        def unit_init(r):
+            ks = jax.random.split(r, max(2, len(scan_kinds)))
+            return {
+                f"b{i}_{kind}": _block_init(ks[i], kind, cfg)
+                for i, kind in enumerate(scan_kinds)
+            }
+
+        units = [unit_init(rngs[i]) for i in range(self.n_units)]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *units)
+        params: Dict[str, Any] = {
+            "embedding": embedding_init(rngs[-1], cfg.vocab_size, cfg.d_model),
+            "layers": stacked,
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = unembed_init(rngs[-2], cfg.d_model, cfg.vocab_size)
+        if self.has_shared:
+            params["shared_attn"] = _shared_attn_init(rngs[-3], cfg)
+        return params
+
+    # ------------------------------------------------------- full-seq forward
+
+    def _unit_fn(self, unit_params, h, h0, shared_params, positions):
+        cfg = self.cfg
+        i = 0
+        for kind in self.pattern:
+            if kind == "shared_attn":
+                h = _shared_attn_apply(shared_params, h, h0, cfg, positions)
+            else:
+                h = _block_apply(
+                    unit_params[f"b{i}_{kind}"], h, h0, kind, cfg, positions
+                )
+                i += 1
+        # unit boundary = the plan's cache candidate ∂(L_i): sequence-parallel
+        # (S/tp per device), so cached boundaries cost h/tp — Megatron SP.
+        return shard(h, "batch", "seq_act", None)
+
+    def forward(
+        self,
+        params: Dict[str, Any],
+        tokens: jax.Array,
+        extra_embeds: Optional[jax.Array] = None,
+        segment_sizes: Optional[Tuple[int, ...]] = None,
+        segment_remat: Optional[Tuple[bool, ...]] = None,
+    ) -> jax.Array:
+        """tokens (B, S) → logits (B, S', V).  extra_embeds (B, F, D) is the
+        multimodal stub frontend output, prepended to the token embeddings."""
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        h = embed(params["embedding"], tokens, dt)
+        if extra_embeds is not None:
+            h = jnp.concatenate([extra_embeds.astype(dt), h], axis=1)
+        h = shard(h, "batch", None, "model")
+        S = h.shape[1]
+        positions = jnp.arange(S)[None, :]
+        h0 = h
+        shared = params.get("shared_attn")
+
+        def unit_body(carry, unit_params):
+            h = carry
+            h = self._unit_fn(unit_params, h, h0, shared, positions)
+            return h, None
+
+        h = scan_over_segments(
+            h, params["layers"], unit_body, self.n_units,
+            segment_sizes, segment_remat,
+        )
+
+        h = rmsnorm(params["final_norm"], h)
+        head = params.get("head")
+        if head is None:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", h, params["embedding"]["embed"].astype(h.dtype)
+            ).astype(jnp.float32)
+        else:
+            logits = unembed(head, h)
+        return logits
+
+    def loss(
+        self,
+        params: Dict[str, Any],
+        batch: Dict[str, jax.Array],
+        segment_sizes: Optional[Tuple[int, ...]] = None,
+        segment_remat: Optional[Tuple[bool, ...]] = None,
+    ) -> jax.Array:
+        logits = self.forward(
+            params,
+            batch["tokens"],
+            extra_embeds=batch.get("extra_embeds"),
+            segment_sizes=segment_sizes,
+            segment_remat=segment_remat,
+        )
+        labels = batch["labels"]
+        F = logits.shape[1] - labels.shape[1]
+        if F > 0:  # multimodal prefix positions carry no labels
+            logits = logits[:, F:]
+        return softmax_xent(logits[:, :-1], labels[:, 1:])
+
+    # ------------------------------------------------------------------ decode
+
+    def init_caches(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        scan_kinds = [k for k in self.pattern if k != "shared_attn"]
+
+        def one_unit():
+            c: Dict[str, Any] = {}
+            for i, kind in enumerate(scan_kinds):
+                key = f"b{i}_{kind}"
+                if kind in ("attn_mlp", "attn_moe"):
+                    c[key] = {
+                        "k": jnp.zeros(
+                            (batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt
+                        ),
+                        "v": jnp.zeros(
+                            (batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt
+                        ),
+                    }
+                elif kind == "mamba":
+                    c[key] = ssm_mod.mamba2_init_state(
+                        batch, cfg.d_model, cfg.ssm or SSMConfig(), dt
+                    )
+                elif kind == "mlstm":
+                    c[key] = ssm_mod.mlstm_init_state(batch, cfg.d_model, cfg.n_heads)
+                elif kind == "slstm":
+                    c[key] = ssm_mod.slstm_init_state(batch, cfg.d_model)
+            return c
+
+        units = [one_unit() for _ in range(self.n_units)]
+        caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *units)
+        if self.has_shared:
+            k = self.pattern.count("shared_attn") * self.n_units
+            caches = {
+                "units": caches,
+                "shared": {
+                    "k": jnp.zeros(
+                        (self.n_units, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                        dt,
+                    ),
+                    "v": jnp.zeros(
+                        (self.n_units, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                        dt,
+                    ),
+                },
+            }
+        return caches
+
+    def _block_step(self, p, h, cache, kind: str, position):
+        cfg = self.cfg
+        if kind in ("attn_mlp", "attn_moe"):
+            a, ck, cv = attn.decode_attention(
+                p["attn"],
+                rmsnorm(p["ln1"], h),
+                cache["k"],
+                cache["v"],
+                position,
+                n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.head_dim,
+                rope_theta=cfg.rope_theta,
+            )
+            h = h + a
+            hn = rmsnorm(p["ln2"], h)
+            if kind == "attn_mlp":
+                h = h + swiglu(p["mlp"], hn)
+            else:
+                h = h + moe_mod.moe_apply(p["moe"], hn, cfg.moe)
+            return h, {"k": ck, "v": cv}
+        if kind == "mamba":
+            return ssm_mod.mamba2_step(p["mamba"], h, cache, cfg.ssm or SSMConfig())
+        if kind == "mlstm":
+            return ssm_mod.mlstm_step(p["mlstm"], h, cache, cfg.n_heads)
+        if kind == "slstm":
+            return ssm_mod.slstm_step(p["slstm"], h, cache)
+        raise ValueError(kind)
+
+    def _shared_step(self, p, h, h0, cache, position):
+        cfg = self.cfg
+        x = jnp.concatenate([h, h0], axis=-1)
+        x = rmsnorm(p["ln"], x)
+        x = jnp.einsum("bsd,de->bse", x, p["in_proj"]["w"].astype(h.dtype))
+        a, ck, cv = attn.decode_attention(
+            p["attn"],
+            x,
+            cache["k"],
+            cache["v"],
+            position,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+        x = x + a
+        h = h + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+        return h, {"k": ck, "v": cv}
+
+    def decode_step(
+        self,
+        params: Dict[str, Any],
+        tokens: jax.Array,  # (B, 1)
+        caches: Dict[str, Any],
+        position: jax.Array,  # (B,)
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        h = embed(params["embedding"], tokens, dt)
+        h = shard(h, "batch", None, "model")
+        h0 = h
+        shared = params.get("shared_attn")
+        scan_kinds = [k for k in self.pattern if k != "shared_attn"]
+
+        unit_caches = caches["units"] if self.has_shared else caches
+        shared_caches = caches.get("shared") if self.has_shared else None
+
+        def unit_body(carry, xs):
+            h = carry
+            if self.has_shared:
+                unit_params, cache, sh_cache = xs
+            else:
+                unit_params, cache = xs
+                sh_cache = None
+            new_cache: Dict[str, Any] = {}
+            i = 0
+            for kind in self.pattern:
+                if kind == "shared_attn":
+                    h, sh_cache = self._shared_step(shared, h, h0, sh_cache, position)
+                else:
+                    key = f"b{i}_{kind}"
+                    h, new_cache[key] = self._block_step(
+                        unit_params[key], h, cache[key], kind, position
+                    )
+                    i += 1
+            if self.has_shared:
+                return h, (new_cache, sh_cache)
+            return h, new_cache
+
+        if self.has_shared:
+            h, (new_unit_caches, new_shared) = jax.lax.scan(
+                unit_body, h, (params["layers"], unit_caches, shared_caches)
+            )
+            new_caches = {"units": new_unit_caches, "shared": new_shared}
+        else:
+            h, new_caches = jax.lax.scan(
+                unit_body, h, (params["layers"], unit_caches)
+            )
+
+        h = rmsnorm(params["final_norm"], h)
+        head = params.get("head")
+        if head is None:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", h, params["embedding"]["embed"].astype(h.dtype)
+            ).astype(jnp.float32)
+        else:
+            logits = unembed(head, h)
+        return logits, new_caches
+
+
+def default_segments(n_units: int) -> Tuple[int, ...]:
+    """√n segmentation fallback when no DP plan is supplied (Chen-style)."""
+    import math
+
+    k = max(1, int(math.isqrt(n_units)))
+    sizes = [n_units // k] * k
+    for i in range(n_units - sum(sizes)):
+        sizes[i] += 1
+    return tuple(sizes)
+
+
+def scan_over_segments(
+    h: jax.Array,
+    stacked: Any,
+    unit_body,
+    n_units: int,
+    segment_sizes: Optional[Tuple[int, ...]] = None,
+    segment_remat: Optional[Tuple[bool, ...]] = None,
+) -> jax.Array:
+    """Execute the unit chain under a (sizes, remat-flags) canonical plan.
+
+    ``unit_body(h, unit_params) -> (h, None)`` is a scan body.  Runs of equal
+    (size, remat) segments lower to ONE nested scan — outer over groups,
+    inner (jax.checkpoint-wrapped iff remat) over the units of a group — so
+    the HLO holds a single body per run regardless of segment count.  This is
+    the canonical strategy (§3) on the unit chain: checkpointed group inputs
+    are exactly the cached boundaries ∂(L_i).
+    """
+    segs = tuple(segment_sizes or default_segments(n_units))
+    assert sum(segs) == n_units, (segs, n_units)
+    remat = tuple(
+        segment_remat if segment_remat is not None
+        else (len(segs) > 1 for _ in segs)
+    )
+    assert len(remat) == len(segs)
+
+    def seg_fn(h_, sl_):
+        out, _ = jax.lax.scan(unit_body, h_, sl_)
+        return out
+
+    # group consecutive segments with identical (size, remat)
+    runs: list = []
+    for s, r in zip(segs, remat):
+        if runs and runs[-1][0] == s and runs[-1][1] == r:
+            runs[-1][2] += 1
+        else:
+            runs.append([s, r, 1])
+
+    offset = 0
+    for size, do_remat, count in runs:
+        block = jax.tree_util.tree_map(
+            lambda a: a[offset : offset + size * count], stacked
+        )
+        if count > 1:
+            grouped = jax.tree_util.tree_map(
+                lambda a: a.reshape((count, size) + a.shape[1:]), block
+            )
+            inner = jax.checkpoint(seg_fn) if do_remat else seg_fn
+
+            def outer(c, grp, _inner=inner):
+                return _inner(c, grp), None
+
+            h, _ = jax.lax.scan(outer, h, grouped)
+        else:
+            h = jax.checkpoint(seg_fn)(h, block) if do_remat else seg_fn(h, block)
+        offset += size * count
+    return h

@@ -1,0 +1,256 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub:
+``input_specs`` supplies precomputed frame embeddings, per the assignment).
+
+Encoder: bidirectional self-attention blocks over frames.
+Decoder: causal self-attention + cross-attention over encoder output.
+Learned positional embeddings on both sides (as Whisper).  The recomputation
+plan applies jointly across encoder and decoder — cross-attention edges make
+the graph non-chain, the paper's target case (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import shard
+from . import attention as attn
+from .layers import (
+    _init_normal,
+    embed,
+    embedding_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    softmax_xent,
+    unembed,
+    unembed_init,
+)
+from .transformer import default_segments, scan_over_segments
+
+
+def _enc_block_init(rng, cfg: ModelConfig):
+    r1, r2 = jax.random.split(rng)
+    d = cfg.d_model
+    return {
+        "ln1": layernorm_init(d),
+        "attn": attn.attention_init(r1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln2": layernorm_init(d),
+        "mlp": gelu_mlp_init(r2, d, cfg.d_ff),
+    }
+
+
+def _dec_block_init(rng, cfg: ModelConfig):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return {
+        "ln1": layernorm_init(d),
+        "self_attn": attn.attention_init(
+            r1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        ),
+        "ln_x": layernorm_init(d),
+        "cross_attn": attn.attention_init(
+            r2, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        ),
+        "ln2": layernorm_init(d),
+        "mlp": gelu_mlp_init(r3, d, cfg.d_ff),
+    }
+
+
+def _cross_attention(p, x, enc_k, enc_v, cfg: ModelConfig):
+    """x (B,S,D) queries against precomputed encoder K/V (B,T,KV,Dh)."""
+    B, S, D = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt)).reshape(
+        B, S, cfg.n_heads, cfg.head_dim
+    )
+    ctx = attn.dense_attention(q, enc_k, enc_v, causal=False)
+    out = jnp.einsum(
+        "bsz,zd->bsd",
+        ctx.reshape(B, S, cfg.n_heads * cfg.head_dim),
+        p["wo"].astype(dt),
+    )
+    return out
+
+
+def _enc_kv(p, enc_out, cfg: ModelConfig):
+    B, T, D = enc_out.shape
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dh->bth", enc_out, p["wk"].astype(dt)).reshape(
+        B, T, cfg.n_kv_heads, cfg.head_dim
+    )
+    v = jnp.einsum("btd,dh->bth", enc_out, p["wv"].astype(dt)).reshape(
+        B, T, cfg.n_kv_heads, cfg.head_dim
+    )
+    return k, v
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.max_dec_pos = 65_536
+
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        L = cfg.n_layers
+        rngs = jax.random.split(rng, 2 * L + 4)
+        enc = [_enc_block_init(rngs[i], cfg) for i in range(L)]
+        dec = [_dec_block_init(rngs[L + i], cfg) for i in range(L)]
+        return {
+            "enc_pos": _init_normal(rngs[-1], (cfg.frontend_seq or 1500, cfg.d_model), 0.02),
+            "encoder": jax.tree_util.tree_map(lambda *x: jnp.stack(x), *enc),
+            "enc_norm": layernorm_init(cfg.d_model),
+            "embedding": embedding_init(rngs[-2], cfg.vocab_size, cfg.d_model),
+            "dec_pos": _init_normal(rngs[-3], (self.max_dec_pos, cfg.d_model), 0.02),
+            "decoder": jax.tree_util.tree_map(lambda *x: jnp.stack(x), *dec),
+            "dec_norm": layernorm_init(cfg.d_model),
+            "head": unembed_init(rngs[-4], cfg.d_model, cfg.vocab_size),
+        }
+
+    # ----------------------------------------------------------- encoder
+
+    def encode(self, params, frames: jax.Array, segment_sizes=None,
+               segment_remat=None) -> jax.Array:
+        """frames (B, T, D): precomputed conv-frontend output (stub)."""
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        T = frames.shape[1]
+        h = frames.astype(dt) + params["enc_pos"][:T].astype(dt)[None]
+        h = shard(h, "batch", None, "model")
+        positions = jnp.arange(T)[None, :]
+
+        def body(h, blk):
+            a = attn.attention(
+                blk["attn"],
+                layernorm(blk["ln1"], h),
+                n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.head_dim,
+                rope_theta=0.0,
+                positions=positions,
+                causal=False,
+            )
+            h = h + a
+            h = h + gelu_mlp(blk["mlp"], layernorm(blk["ln2"], h))
+            return shard(h, "batch", "seq_act", None), None
+
+        h = scan_over_segments(
+            h, params["encoder"], body, cfg.n_layers, segment_sizes, segment_remat
+        )
+        return layernorm(params["enc_norm"], h)
+
+    # ----------------------------------------------------------- decoder
+
+    def decode_train(
+        self, params, tokens: jax.Array, enc_out: jax.Array, segment_sizes=None,
+        segment_remat=None,
+    ) -> jax.Array:
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        B, S = tokens.shape
+        h = embed(params["embedding"], tokens, dt) + params["dec_pos"][:S].astype(dt)[
+            None
+        ]
+        h = shard(h, "batch", None, "model")
+        positions = jnp.arange(S)[None, :]
+
+        def body(h, blk):
+            a = attn.attention(
+                blk["self_attn"],
+                layernorm(blk["ln1"], h),
+                n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.head_dim,
+                rope_theta=0.0,
+                positions=positions,
+            )
+            h = h + a
+            xk, xv = _enc_kv(blk["cross_attn"], enc_out, cfg)
+            h = h + _cross_attention(
+                blk["cross_attn"], layernorm(blk["ln_x"], h), xk, xv, cfg
+            )
+            h = h + gelu_mlp(blk["mlp"], layernorm(blk["ln2"], h))
+            return shard(h, "batch", "seq_act", None), None
+
+        h = scan_over_segments(
+            h, params["decoder"], body, cfg.n_layers, segment_sizes, segment_remat
+        )
+        h = layernorm(params["dec_norm"], h)
+        return unembed(params["head"], h)
+
+    def loss(self, params, batch: Dict[str, jax.Array], segment_sizes=None,
+             segment_remat=None):
+        enc_out = self.encode(params, batch["frames"], segment_sizes, segment_remat)
+        logits = self.decode_train(
+            params, batch["tokens"], enc_out, segment_sizes, segment_remat
+        )
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+
+    # ------------------------------------------------------------- decode
+
+    def init_caches(self, params, frames: jax.Array, max_seq: int):
+        """Run the encoder once; precompute cross K/V; empty self caches."""
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        enc_out = self.encode(params, frames)
+        B = frames.shape[0]
+
+        def per_layer(blk):
+            xk, xv = _enc_kv(blk["cross_attn"], enc_out, cfg)
+            return {"xk": xk, "xv": xv}
+
+        cross = jax.vmap(per_layer)(params["decoder"])
+        self_kv = {
+            "k": jnp.zeros(
+                (cfg.n_layers, B, max_seq, cfg.n_kv_heads, cfg.head_dim), dt
+            ),
+            "v": jnp.zeros(
+                (cfg.n_layers, B, max_seq, cfg.n_kv_heads, cfg.head_dim), dt
+            ),
+        }
+        return {"cross": cross, "self": self_kv}
+
+    def decode_step(self, params, tokens, caches, position):
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        B = tokens.shape[0]
+        pos_emb = jnp.take(params["dec_pos"], position, axis=0).astype(dt)[:, None, :]
+        h = embed(params["embedding"], tokens, dt) + pos_emb
+
+        def body(h, xs):
+            blk, self_k, self_v, cross = xs
+            a, nk, nv = attn.decode_attention(
+                blk["self_attn"],
+                layernorm(blk["ln1"], h),
+                self_k,
+                self_v,
+                position,
+                n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.head_dim,
+                rope_theta=0.0,
+            )
+            h = h + a
+            h = h + _cross_attention(
+                blk["cross_attn"],
+                layernorm(blk["ln_x"], h),
+                cross["xk"],
+                cross["xv"],
+                cfg,
+            )
+            h = h + gelu_mlp(blk["mlp"], layernorm(blk["ln2"], h))
+            return h, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(
+            body,
+            h,
+            (params["decoder"], caches["self"]["k"], caches["self"]["v"], caches["cross"]),
+        )
+        h = layernorm(params["dec_norm"], h)
+        logits = unembed(params["head"], h)
+        return logits, {"cross": caches["cross"], "self": {"k": nk, "v": nv}}

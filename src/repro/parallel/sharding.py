@@ -1,0 +1,304 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP over ("pod", "data", "model")).
+
+Models annotate activations with *logical* axis names; a rules table maps
+them to mesh axes.  Changing the table re-shards the whole model — this is
+the knob the §Perf hillclimb turns.
+
+Default mapping:
+
+  batch    → ("pod", "data")   data parallelism (hierarchical across pods)
+  seq      → None              (sequence kept local for training shapes)
+  seq_sp   → "data"            sequence parallelism for long-context decode
+  model    → "model"           d_model kept replicated by default; the TP
+                               split lives on heads / ffn / vocab instead
+  heads    → "model"           tensor parallelism over attention heads
+  kv_heads → "model"           (GQA: kv heads ≤ TP size is handled by rules)
+  ffn      → "model"           MLP hidden dim
+  experts  → "model"           expert parallelism
+  vocab    → "model"           embedding / logits split
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Rules = Dict[str, Any]  # logical name -> mesh axis (str | tuple | None)
+
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "data",
+    "seq_act": "model",  # Megatron-style sequence parallelism: the residual
+    #                      stream between layer groups lives S/tp per device
+    "model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "expert_cap": "model",  # fallback: shard expert capacity rows when the
+    #                         expert count doesn't divide the model axis
+    "vocab": "model",
+    "state": None,
+}
+
+# §Perf hillclimb alternative: NO tensor parallelism — the "model" mesh axis
+# joins data parallelism and params are fully sharded (ZeRO-3).  For models
+# whose per-chip matmul shards would be tiny under tp=16 (≤ ~4B params at 256
+# chips), this removes every activation-cotangent all-reduce and replaces it
+# with per-layer weight all-gathers an order of magnitude smaller.
+DP_ONLY_RULES: Rules = {
+    **DEFAULT_RULES,
+    "batch": ("pod", "data", "model"),
+    "seq_act": None,
+    "heads": None,
+    "kv_heads": None,
+    "ffn": None,
+    "experts": None,
+    "expert_cap": None,
+    "vocab": None,
+}
+
+# MoE hybrid: attention/dense parts ZeRO-sharded over data (no TP — their
+# per-chip shards are tiny next to the experts), experts stay EP over the
+# model axis with the all-to-all schedule.
+DP_ATTN_RULES: Rules = {
+    **DEFAULT_RULES,
+    "seq_act": None,
+    "heads": None,
+    "kv_heads": None,
+    "ffn": None,
+    # vocab stays TP over "model": un-sharding it makes every chip hold the
+    # full (B_loc, S, V) logits — 40 GB/chip at this cell's shape.
+}
+
+# Active rules — module-level so layer code stays signature-light; the
+# launcher swaps them per run (hillclimb knob).
+_ACTIVE_RULES: Rules = dict(DEFAULT_RULES)
+
+
+def set_rules(rules: Rules) -> None:
+    global _ACTIVE_RULES
+    _ACTIVE_RULES = dict(rules)
+
+
+def get_rules() -> Rules:
+    return dict(_ACTIVE_RULES)
+
+
+def _mesh_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    if mesh is not None:
+        return tuple(mesh.axis_names)
+    env = jax.sharding.get_abstract_mesh()
+    try:
+        return tuple(env.axis_names) if env is not None else ()
+    except Exception:
+        return ()
+
+
+def resolve(
+    logical: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Logical names → PartitionSpec under the active rules + mesh axes.
+
+    With ``shape``, divisibility is checked inline so an axis rejected on one
+    dim (e.g. "model" on 40 experts) stays available for a later dim (e.g.
+    the expert-capacity fallback) instead of being consumed and dropped.
+    """
+    axes = set(_mesh_axes(mesh))
+    sizes = _axis_sizes(mesh if mesh is not None else jax.sharding.get_abstract_mesh())
+    used: set = set()
+    spec = []
+    for i, name in enumerate(logical):
+        if name is None:
+            spec.append(None)
+            continue
+        target = _ACTIVE_RULES.get(name)
+        if target is None:
+            spec.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        eff = []
+        dim = shape[i] if shape is not None and i < len(shape) else None
+        prod = 1
+        for a in target:
+            if a not in axes or a in used:
+                continue
+            if dim is not None and dim % (prod * sizes.get(a, 1)) != 0:
+                continue  # this axis would not divide — leave it available
+            eff.append(a)
+            prod *= sizes.get(a, 1)
+        used.update(eff)
+        eff = tuple(eff)
+        spec.append(eff if len(eff) > 1 else (eff[0] if eff else None))
+    return P(*spec)
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    try:
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    except Exception:
+        try:
+            return dict(mesh.shape)
+        except Exception:
+            return {}
+
+
+def drop_indivisible(spec: P, shape: Tuple[int, ...], axis_sizes: Dict[str, int]) -> P:
+    """Replicate any dim the mesh axes don't divide evenly (e.g. kv_heads=8
+    on a 16-way model axis, or an odd vocab).  GSPMD *would* pad, but padded
+    shards waste memory/compute — replication is the perf-correct fallback."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= axis_sizes.get(a, 1)
+        out.append(entry if total > 0 and dim % total == 0 else None)
+    return P(*out)
+
+
+def shard(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical axis names (no-op without a mesh)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names or mesh.empty:
+            return x
+    except Exception:
+        return x
+    spec = resolve(logical, shape=tuple(x.shape))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: map a param-tree path to a PartitionSpec.
+# ---------------------------------------------------------------------------
+
+
+def param_spec(path: str, shape: Tuple[int, ...]) -> P:
+    """Sharding rule for one parameter, keyed on its tree path.
+
+    Conventions (matching repro.models param names):
+      embed / unembed   : (vocab, d_model)          → vocab over "model"
+      wq/wk/wv          : (d_model, heads·dh)       → out dim over "model"
+      wo                : (heads·dh, d_model)       → in dim over "model"
+      w_gate/w_up       : (d_model, d_ff)           → d_ff over "model"
+      w_down            : (d_ff, d_model)           → d_ff over "model"
+      experts.*         : (E, …)                    → E over "model"
+      norms / biases / scalars                      → replicated
+    """
+    rules = _ACTIVE_RULES
+
+    def ax(name):
+        t = rules.get(name)
+        return t if t is not None else None
+
+    if len(shape) == 0 or min(shape) == 0:
+        return P()
+    last = path.split("/")[-1]
+    if "expert" in path:
+        # stacked experts: leading E axis
+        spec = [ax("experts")] + [None] * (len(shape) - 1)
+        if last in ("w_gate", "w_up") and len(shape) == 3:
+            spec[2] = None  # E already takes "model"
+        return P(*spec)
+    if last in ("embed", "unembed", "lm_head"):
+        return P(ax("vocab"), None) if len(shape) == 2 else P()
+    if last in ("wq", "wk", "wv", "wqkv"):
+        return P(None, ax("heads")) if len(shape) >= 2 else P(ax("heads"))
+    if last == "wo":
+        return P(ax("heads"), None)
+    if last in ("w_gate", "w_up", "w13"):
+        return P(None, ax("ffn"))
+    if last in ("w_down", "w2"):
+        return P(ax("ffn"), None)
+    if last in ("in_proj", "x_proj", "dt_proj"):
+        return P(None, ax("ffn")) if len(shape) == 2 else P()
+    if last == "out_proj":
+        return P(ax("ffn"), None) if len(shape) == 2 else P()
+    return P(*([None] * len(shape)))
+
+
+def stacked_param_spec(path: str, shape: Tuple[int, ...]) -> P:
+    """Same, for layer-stacked params with a leading [n_layers] axis."""
+    inner = param_spec(path, shape[1:])
+    return P(None, *inner)
+
+
+def tree_param_specs(params, stacked_prefixes: Sequence[str] = ("layers",)):
+    """PartitionSpec pytree matching a parameter pytree."""
+
+    def visit(path_tuple, leaf):
+        keys = []
+        for p in path_tuple:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        path = "/".join(keys)
+        shape = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+        if any(path.startswith(pref) for pref in stacked_prefixes) and len(shape) >= 1:
+            return stacked_param_spec(path, shape)
+        return param_spec(path, shape)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def fsdp_extend(spec: P, shape: Tuple[int, ...], axis_sizes: Dict[str, int],
+                fsdp_axis: str = "data", min_elems: int = 1 << 16) -> P:
+    """ZeRO-3/FSDP: additionally shard the largest still-replicated dim of a
+    big tensor over the data axis.  Keeps small tensors (norms, biases)
+    replicated."""
+    n = 1
+    for d in shape:
+        n *= d
+    if n < min_elems or fsdp_axis not in axis_sizes:
+        return spec
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    # never reuse an axis that already shards some dim
+    for e in entries:
+        taken = e if isinstance(e, tuple) else (e,)
+        if fsdp_axis in taken:
+            return spec
+    size = axis_sizes[fsdp_axis]
+    # largest unsharded, divisible dim
+    best, best_dim = -1, -1
+    for i, (d, e) in enumerate(zip(shape, entries)):
+        if e is None and d % size == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best < 0:
+        return spec
+    entries[best] = fsdp_axis
+    return P(*entries)
+
+
+def named_sharding_tree(params, mesh: Mesh, fsdp: bool = False,
+                        fsdp_axes: Tuple[str, ...] = ("data",), **kw):
+    specs = tree_param_specs(params, **kw)
+    sizes = _axis_sizes(mesh)
+
+    def to_sharding(spec, leaf):
+        shape = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+        p = drop_indivisible(spec, shape, sizes)
+        if fsdp:
+            for ax in fsdp_axes:
+                p = fsdp_extend(p, shape, sizes, fsdp_axis=ax)
+        return NamedSharding(mesh, p)
+
+    return jax.tree_util.tree_map(to_sharding, specs, params)

@@ -1,0 +1,169 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+step of any repro model.
+
+Design (vLLM-style, adapted to JAX's static shapes):
+
+* a fixed pool of ``max_slots`` sequence slots, each with a position counter
+  and a done flag — the jitted decode step always runs the full (B=slots)
+  batch; empty slots decode garbage that is masked out on the host;
+* admission: new requests claim free slots; their prompt is prefilled
+  token-by-token through the same decode step (correct for every family —
+  SSM/hybrid caches are recurrent states, not KV), amortized across steps;
+* sampling: greedy or temperature, per-request;
+* termination: eos token or per-request max_new_tokens.
+
+Throughput-oriented serving on a real pod shards the slot batch over
+("pod","data") and the heads/experts over "model" exactly as training does —
+the decode_32k / long_500k dry-run cells compile this engine's step function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 → greedy
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        model,
+        params: Any,
+        max_slots: int = 8,
+        max_seq: int = 512,
+        rng_seed: int = 0,
+        frames: Optional[jax.Array] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self._rng = np.random.default_rng(rng_seed)
+        cfg = model.cfg
+        if cfg.encoder_decoder:
+            if frames is None:
+                raise ValueError("encoder-decoder serving needs `frames`")
+            self.caches = model.init_caches(params, frames, max_seq)
+        else:
+            self.caches = model.init_caches(max_slots, max_seq)
+        self.positions = np.zeros((max_slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.pending: List[Request] = []
+        self.next_uid = 0
+        self.completed: List[Request] = []
+
+        @jax.jit
+        def _step(params, tokens, caches, positions):
+            return model.decode_step(params, tokens, caches, positions)
+
+        self._step = _step
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, prompt: List[int], **kw) -> int:
+        req = Request(uid=self.next_uid, prompt=list(prompt), **kw)
+        self.next_uid += 1
+        self.pending.append(req)
+        return req.uid
+
+    def _reset_slot(self, slot: int) -> None:
+        """Zero slot state on reuse — KV is masked by position anyway, but
+        recurrent (SSM/xLSTM) states would otherwise leak between requests.
+
+        LM caches stack units on axis 0 and batch on axis 1.  Encoder-decoder
+        engines keep the cross-attention KV (shared encoder context) intact
+        and zero only the self-attention KV.
+        """
+        if self.model.cfg.encoder_decoder:
+            self.caches["self"] = jax.tree_util.tree_map(
+                lambda a: a.at[:, slot].set(0), self.caches["self"]
+            )
+            return
+        self.caches = jax.tree_util.tree_map(
+            lambda a: a.at[:, slot].set(0), self.caches
+        )
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slot_req[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            self.slot_req[slot] = req
+            self.positions[slot] = 0
+            self._reset_slot(slot)
+            # the prompt is fed through decode steps below
+
+    # ----------------------------------------------------------------- step
+
+    def _next_token_for(self, slot: int) -> int:
+        """Next *input* token for this slot (prompt feed or last sampled)."""
+        req = self.slot_req[slot]
+        if req is None:
+            return 0
+        pos = self.positions[slot]
+        if pos < len(req.prompt):
+            return req.prompt[pos]
+        return req.output[-1] if req.output else 0
+
+    def step(self) -> int:
+        """One engine step = one batched decode step.  Returns #active slots."""
+        self._admit()
+        active = [s for s in range(self.max_slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        tokens = np.array(
+            [[self._next_token_for(s)] for s in range(self.max_slots)], np.int32
+        )
+        logits, self.caches = self._step(
+            self.params,
+            jnp.asarray(tokens),
+            self.caches,
+            jnp.asarray(self.positions),
+        )
+        logits = np.asarray(logits[:, -1, :])  # (slots, V)
+
+        for s in active:
+            req = self.slot_req[s]
+            pos = int(self.positions[s])
+            self.positions[s] = pos + 1
+            in_prompt = pos + 1 < len(req.prompt)
+            if in_prompt:
+                continue  # still prefilling the prompt
+            if req.temperature > 0:
+                z = logits[s] / req.temperature
+                z = z - z.max()
+                p = np.exp(z) / np.exp(z).sum()
+                tok = int(self._rng.choice(len(p), p=p))
+            else:
+                tok = int(np.argmax(logits[s]))
+            req.output.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            full = self.positions[s] >= self.max_seq - 1
+            if len(req.output) >= req.max_new_tokens or hit_eos or full:
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[s] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive until every submitted request completes."""
+        for _ in range(max_steps):
+            if not self.pending and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return self.completed

@@ -1,0 +1,37 @@
+"""Shared test fixtures: random-DAG generators for the paper's algorithms.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+host's single device; only launch/dryrun.py forces 512 placeholder devices
+(in its own process).
+"""
+
+import random
+
+import pytest
+
+from repro.core.graph import Graph, Node
+
+
+def random_dag(rng: random.Random, n: int, p: float = 0.35,
+               topo_ids: bool = True) -> Graph:
+    """Erdős–Rényi-style DAG with T ∈ {1, 10} (the paper's cost model) and
+    small integer memories.  topo_ids=False permutes node ids to exercise
+    non-topological numbering."""
+    perm = list(range(n))
+    if not topo_ids:
+        rng.shuffle(perm)
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p:
+                edges.append((perm[i], perm[j]))
+    nodes = [
+        Node(i, f"v{i}", rng.choice([1.0, 10.0]), float(rng.randint(1, 6)))
+        for i in range(n)
+    ]
+    return Graph(nodes, edges)
+
+
+@pytest.fixture
+def rng():
+    return random.Random(0)

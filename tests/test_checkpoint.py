@@ -1,0 +1,88 @@
+"""Checkpoint store: commit protocol, retention, torn-write recovery."""
+
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    retain,
+    save,
+)
+
+
+@pytest.fixture
+def tree():
+    return {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16), "c": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tree):
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 3, tree)
+        assert latest_step(d) == 3
+        out = restore(d, 3, tree)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            tree,
+            out,
+        )
+        # dtypes preserved
+        assert np.asarray(out["nested"]["b"]).dtype == np.dtype("bfloat16") or \
+            str(np.asarray(out["nested"]["b"]).dtype) == "bfloat16"
+
+
+def test_torn_checkpoint_ignored(tree):
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, tree)
+        # fake a torn step-2: directory without COMMITTED
+        torn = os.path.join(d, "step_000000002")
+        os.makedirs(torn)
+        with open(os.path.join(torn, "MANIFEST.json"), "w") as f:
+            f.write("{}")
+        assert latest_step(d) == 1
+
+
+def test_retention(tree):
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(5):
+            save(d, s, tree)
+        retain(d, keep=2)
+        kept = sorted(os.listdir(d))
+        assert kept == ["step_000000003", "step_000000004"]
+
+
+def test_missing_leaf_raises(tree):
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 0, {"a": tree["a"]})
+        with pytest.raises(KeyError):
+            restore(d, 0, tree)
+
+
+def test_async_checkpointer(tree):
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3):
+            ck.save_async(s, tree)
+        ck.close()
+        assert latest_step(d) == 3
+        out = restore(d, 3, tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+
+
+def test_overwrite_same_step(tree):
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, tree)
+        t2 = {**tree, "a": tree["a"] * 2}
+        save(d, 1, t2)
+        out = restore(d, 1, tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(t2["a"]))

@@ -1,0 +1,92 @@
+"""Chen's √n baseline + Appendix B articulation-point configuration."""
+
+import random
+
+from repro.core import articulation_points, candidate_split_points, chen_sqrt_n
+from repro.core.graph import chain, from_cost_lists
+
+from conftest import random_dag
+
+
+def brute_articulation(g):
+    """v is an articulation point iff removing it disconnects its component
+    of the undirected graph."""
+    import itertools
+
+    n = g.n
+    adj = [set() for _ in range(n)]
+    for v, w in g.edges:
+        adj[v].add(w)
+        adj[w].add(v)
+
+    def components(excl):
+        seen = set()
+        comps = 0
+        for s in range(n):
+            if s in seen or s == excl:
+                continue
+            comps += 1
+            stack = [s]
+            seen.add(s)
+            while stack:
+                u = stack.pop()
+                for w in adj[u]:
+                    if w not in seen and w != excl:
+                        seen.add(w)
+                        stack.append(w)
+        return comps
+
+    base = components(None)
+    out = []
+    for v in range(n):
+        if components(v) > base - (0 if adj[v] else 1) and adj[v]:
+            # removing v increased the component count (v's own removal
+            # accounts for one fewer node, not one fewer component)
+            if components(v) > base:
+                out.append(v)
+    return out
+
+
+def test_articulation_points_vs_bruteforce(rng):
+    for _ in range(80):
+        g = random_dag(rng, rng.randint(2, 9), p=0.3)
+        assert sorted(articulation_points(g)) == sorted(brute_articulation(g))
+
+
+def test_chain_all_interior_are_candidates():
+    g = chain(8)
+    assert candidate_split_points(g) == list(range(1, 7))
+
+
+def test_skip_connection_blocks_split():
+    # paper §2: a skip connection from every layer to the output kills all
+    # split candidates — Chen degenerates to a single segment
+    n = 6
+    edges = [(i, i + 1) for i in range(n - 1)] + [(i, n - 1) for i in range(n - 2)]
+    g = from_cost_lists([1] * n, [1] * n, edges)
+    assert candidate_split_points(g) == []
+    res = chen_sqrt_n(g)
+    assert res.num_segments == 1
+
+
+def test_chen_sqrt_n_on_chain():
+    g = chain(16)
+    res = chen_sqrt_n(g)
+    assert res.feasible
+    g.check_increasing_sequence(res.sequence)
+    # √n-ish segment count
+    assert 2 <= res.num_segments <= 8
+
+
+def test_chen_candidates_induce_valid_lower_sets(rng):
+    for _ in range(40):
+        g = random_dag(rng, 8, p=0.25)
+        for c in candidate_split_points(g):
+            assert g.is_lower_set(g.ancestors_of(c))
+
+
+def test_chen_budgeted(rng):
+    g = chain(12)
+    res = chen_sqrt_n(g, budget=1e9)
+    assert res.feasible
+    g.check_increasing_sequence(res.sequence)

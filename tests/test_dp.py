@@ -1,0 +1,144 @@
+"""Algorithm 1: exact/approx DP vs the exhaustive-search oracle (§4.1–4.4)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    approx_dp,
+    exact_dp,
+    exhaustive_search,
+    min_feasible_budget,
+    overhead,
+    peak_memory,
+)
+from repro.core.dp import quantize_times, solve
+from repro.core.graph import chain
+from repro.core.lower_sets import all_lower_sets
+
+from conftest import random_dag
+
+
+def _feasible_budget(g, slack):
+    return min_feasible_budget(g, "exact_dp") * slack
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.floats(1.0, 2.5))
+def test_exact_dp_matches_exhaustive_time_centric(seed, n, slack):
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    B = _feasible_budget(g, slack)
+    d = exact_dp(g, B)
+    e = exhaustive_search(g, B)
+    assert d.feasible == e.feasible
+    if d.feasible:
+        assert d.overhead == pytest.approx(e.overhead)
+        g.check_increasing_sequence(d.sequence)
+        assert overhead(g, d.sequence) == pytest.approx(d.overhead)
+        assert peak_memory(g, d.sequence) <= B + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.floats(1.0, 2.5))
+def test_exact_dp_matches_exhaustive_memory_centric(seed, n, slack):
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    B = _feasible_budget(g, slack)
+    d = exact_dp(g, B, objective="memory_centric")
+    e = exhaustive_search(g, B, objective="memory_centric")
+    assert d.feasible == e.feasible
+    if d.feasible:
+        # §4.4: memory-centric = MAXIMAL overhead within budget
+        assert d.overhead == pytest.approx(e.overhead)
+
+
+def test_memory_centric_not_pareto_pruned():
+    # regression: MC keeps dominated (t↑, m↑) states the TC pruning drops
+    r = random.Random(7)
+    for _ in range(30):
+        g = random_dag(r, 5)
+        B = _feasible_budget(g, 1.4)
+        d = exact_dp(g, B, objective="memory_centric")
+        e = exhaustive_search(g, B, objective="memory_centric")
+        assert d.overhead == pytest.approx(e.overhead)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 7))
+def test_budget_monotonicity(seed, n):
+    """More memory can never force more recomputation."""
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    B0 = min_feasible_budget(g, "exact_dp")
+    t_prev = None
+    for slack in (1.0, 1.3, 1.8, 3.0, 10.0):
+        res = exact_dp(g, B0 * slack)
+        assert res.feasible
+        if t_prev is not None:
+            assert res.overhead <= t_prev + 1e-9
+        t_prev = res.overhead
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_approx_never_beats_exact(seed, n):
+    """𝓛^Pruned ⊆ 𝓛_G ⇒ approx overhead ≥ exact overhead (at same budget)."""
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    B = _feasible_budget(g, 1.5)
+    ex = exact_dp(g, B)
+    ap = approx_dp(g, B)
+    if ap.feasible:
+        assert ex.feasible
+        assert ap.overhead >= ex.overhead - 1e-9
+
+
+def test_infeasible_budget_reports_impossible(rng):
+    g = random_dag(rng, 5)
+    res = exact_dp(g, 1e-6)
+    assert not res.feasible and res.sequence == []
+
+
+def test_ample_budget_minimal_overhead_is_sinks(rng):
+    """With unlimited memory the finest strategy caches every node that has a
+    successor; sink nodes are never in any boundary ∂(L) (eq. 1), so the
+    paper-model minimum overhead is exactly T(sinks)."""
+    for _ in range(20):
+        g = random_dag(rng, 6)
+        res = exact_dp(g, 1e9)
+        assert res.feasible
+        sinks = [v for v in range(g.n) if not g.succ[v]]
+        assert res.overhead == pytest.approx(g.T(sinks))
+
+
+def test_chain_sqrt_shape():
+    """On a uniform chain the tight-budget plan recomputes interior nodes."""
+    g = chain(16, time=1.0, memory=1.0)
+    B = min_feasible_budget(g, "exact_dp")
+    res = exact_dp(g, B)
+    assert res.feasible and res.overhead > 0
+
+
+def test_quantize_times_preserves_paper_costs():
+    g = chain(5, time=10.0)
+    q = quantize_times(g, levels=32)
+    assert all(t == 32.0 for t in q.time_v)
+    r = random.Random(3)
+    g2 = random_dag(r, 6)
+    q2 = quantize_times(g2, levels=64)
+    assert all(t >= 1 and float(t).is_integer() for t in q2.time_v)
+
+
+def test_family_must_contain_empty_and_full(rng):
+    g = random_dag(rng, 4)
+    fam = [L for L in all_lower_sets(g) if L]  # drop ∅
+    with pytest.raises(ValueError):
+        solve(g, 100.0, fam)
+
+
+def test_states_visited_reported(rng):
+    g = random_dag(rng, 5)
+    res = exact_dp(g, _feasible_budget(g, 1.5))
+    assert res.states_visited > 0

@@ -1,0 +1,121 @@
+"""§2 graph language: δ±, lower sets, boundaries — unit + property tests."""
+
+import itertools
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import EMPTY, Graph, Node, chain, from_cost_lists
+
+from conftest import random_dag
+
+
+def brute_lower_sets(g: Graph):
+    out = set()
+    for r in range(g.n + 1):
+        for comb in itertools.combinations(range(g.n), r):
+            if g.is_lower_set(comb):
+                out.add(frozenset(comb))
+    return out
+
+
+def test_three_layer_perceptron_example():
+    # Figure 1: a small chain — boundary of a prefix is its last node
+    g = chain(5)
+    L = frozenset({0, 1, 2})
+    assert g.is_lower_set(L)
+    assert g.boundary(L) == {2}
+    assert g.delta_plus(L) == {1, 2, 3}
+    assert g.delta_minus({3}) == {2}
+
+
+def test_delta_definitions():
+    #     0 → 1 → 3
+    #      ↘ 2 ↗
+    g = from_cost_lists([1] * 4, [1] * 4, [(0, 1), (0, 2), (1, 3), (2, 3)])
+    assert g.delta_plus({0}) == {1, 2}
+    assert g.delta_minus({3}) == {1, 2}
+    assert g.is_lower_set({0, 1})
+    assert not g.is_lower_set({1})
+    assert g.boundary({0, 1, 2}) == {1, 2}
+    # ∂({0,1,2,3}) = ∅: nothing outside needs anything
+    assert g.boundary({0, 1, 2, 3}) == EMPTY
+
+
+def test_lower_set_iff_closed_under_predecessors(rng):
+    for trial in range(50):
+        g = random_dag(rng, rng.randint(1, 7), topo_ids=(trial % 2 == 0))
+        for L in brute_lower_sets(g):
+            assert g.delta_minus(L) <= L
+
+
+def test_boundary_subset_and_completeness(rng):
+    for _ in range(50):
+        g = random_dag(rng, rng.randint(1, 7))
+        for L in brute_lower_sets(g):
+            b = g.boundary(L)
+            assert b <= L
+            # nodes of L \ ∂(L) have no successors outside L
+            for v in L - b:
+                assert set(g.succ[v]) <= L
+
+
+def test_lower_closure_is_minimal_lower_set(rng):
+    for _ in range(30):
+        g = random_dag(rng, 7)
+        s = set(rng.sample(range(7), 3))
+        L = g.lower_closure(s)
+        assert g.is_lower_set(L) and s <= L
+        # minimality: removing any element not in s breaks closure or coverage
+        for v in L - s:
+            if g.is_lower_set(L - {v}):
+                assert not s <= (L - {v}) or any(
+                    v in g.ancestors_of(w) for w in s
+                )
+
+
+def test_cycle_rejected():
+    with pytest.raises(ValueError):
+        Graph([Node(0, "a", 1, 1), Node(1, "b", 1, 1)], [(0, 1), (1, 0)])
+
+
+def test_nonpositive_costs_rejected():
+    with pytest.raises(ValueError):
+        Graph([Node(0, "a", 0.0, 1)], [])
+    with pytest.raises(ValueError):
+        Graph([Node(0, "a", 1, -1.0)], [])
+
+
+def test_check_increasing_sequence():
+    g = chain(4)
+    full = frozenset(range(4))
+    g.check_increasing_sequence([frozenset({0}), frozenset({0, 1}), full])
+    with pytest.raises(ValueError):
+        g.check_increasing_sequence([frozenset({0, 1}), frozenset({0})])
+    with pytest.raises(ValueError):
+        g.check_increasing_sequence([frozenset({1})])  # not a lower set
+    with pytest.raises(ValueError):
+        g.check_increasing_sequence([frozenset({0})])  # does not end at V
+
+
+@given(st.integers(1, 16))
+def test_chain_count_paper_bounds(n):
+    # paper: #V ≤ #𝓛_G ≤ 2^#V; chains achieve the minimum + 1 (∅ included)
+    from repro.core.lower_sets import count_lower_sets
+
+    g = chain(n)
+    assert count_lower_sets(g) == n + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_T_M_additivity(data):
+    r = random.Random(data.draw(st.integers(0, 10_000)))
+    g = random_dag(r, data.draw(st.integers(1, 8)))
+    picks = data.draw(
+        st.lists(st.integers(0, g.n - 1), max_size=g.n, unique=True)
+    )
+    s = frozenset(picks)
+    assert g.T(s) == pytest.approx(sum(g.time_v[v] for v in s))
+    assert g.M(s) == pytest.approx(sum(g.mem_v[v] for v in s))

@@ -1,0 +1,79 @@
+"""§4.2/§4.3 lower-set families."""
+
+import itertools
+import random
+
+import pytest
+
+from repro.core.graph import chain, from_cost_lists
+from repro.core.lower_sets import (
+    all_lower_sets,
+    count_lower_sets,
+    pruned_lower_sets,
+    segment_lower_sets,
+)
+
+from conftest import random_dag
+from test_graph import brute_lower_sets
+
+
+def test_all_lower_sets_matches_bruteforce(rng):
+    for trial in range(120):
+        g = random_dag(rng, rng.randint(1, 8), topo_ids=(trial % 2 == 0))
+        assert set(all_lower_sets(g)) == brute_lower_sets(g), trial
+
+
+def test_all_lower_sets_nontopological_ids():
+    # regression: ideal enumeration must not assume ids are topological
+    g = from_cost_lists([1, 1, 1], [1, 1, 1], [(2, 1), (1, 0)])  # 2 → 1 → 0
+    assert set(all_lower_sets(g)) == brute_lower_sets(g)
+
+
+def test_limit_raises():
+    # antichain of 24 isolated nodes → 2^24 lower sets > limit
+    g = from_cost_lists([1] * 24, [1] * 24, [])
+    with pytest.raises(RuntimeError):
+        all_lower_sets(g, limit=10_000)
+
+
+def test_pruned_is_subset_with_size_bound(rng):
+    for _ in range(60):
+        g = random_dag(rng, rng.randint(1, 8))
+        fam = pruned_lower_sets(g)
+        assert len(fam) <= g.n + 2  # {L^v} ∪ {∅, V}  (§4.3: #𝓛^Pruned = #V)
+        allf = brute_lower_sets(g)
+        assert set(fam) <= allf
+        assert frozenset() in fam and frozenset(range(g.n)) in fam
+
+
+def test_pruned_principal_sets_definition(rng):
+    for _ in range(30):
+        g = random_dag(rng, 7)
+        fam = set(pruned_lower_sets(g))
+        for v in range(g.n):
+            Lv = frozenset(
+                w for w in range(g.n) if v in g.reachable_from(w)
+            )
+            assert Lv in fam
+
+
+def test_segment_lower_sets_are_lower_sets(rng):
+    for _ in range(30):
+        g = random_dag(rng, 8)
+        for L in segment_lower_sets(g):
+            assert g.is_lower_set(L)
+
+
+def test_chain_lattice_is_prefixes():
+    g = chain(6)
+    fam = all_lower_sets(g)
+    assert fam == [frozenset(range(k)) for k in range(7)]
+    # on a chain the pruned family loses nothing
+    assert set(pruned_lower_sets(g)) == set(fam)
+
+
+def test_count_bounds(rng):
+    for _ in range(20):
+        g = random_dag(rng, 6)
+        c = count_lower_sets(g)
+        assert g.n + 1 <= c <= 2 ** g.n

@@ -1,0 +1,89 @@
+"""Optimizer + gradient-compression units."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+from repro.optim.compression import (
+    Compressed,
+    compress,
+    decompress,
+    init_error_feedback,
+    quantize_roundtrip_with_feedback,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=200, clip_norm=None, min_lr_frac=1.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(cfg, g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clipping_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                            warmup_steps=1, total_steps=10)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params)
+    g = {"w": jnp.array([1e6, 0.0, 0.0])}
+    _, _, metrics = adamw.update(cfg, g, state, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(1e6)
+
+
+def test_lr_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(adamw.lr_schedule(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] < lrs[10]                       # warmup
+    assert lrs[10] == pytest.approx(1.0, abs=0.02)
+    assert lrs[100] == pytest.approx(0.1, abs=0.02)  # cosine floor
+
+
+def test_no_decay_on_1d_params():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=1.0, warmup_steps=1,
+                            total_steps=10, clip_norm=None)
+    params = {"scale": jnp.ones(4), "w": jnp.ones((4, 4))}
+    state = adamw.init(params)
+    g = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_params, _, _ = adamw.update(cfg, g, state, params)
+    np.testing.assert_array_equal(np.asarray(new_params["scale"]), np.ones(4))
+    assert float(jnp.max(new_params["w"])) < 1.0  # decayed
+
+
+def test_compress_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 5
+    y = decompress(compress(x))
+    # int8 block quantization: error ≤ scale/2 per element
+    err = jnp.abs(x - y)
+    scale = jnp.max(jnp.abs(x)) / 127
+    assert float(jnp.max(err)) <= float(scale) + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Σ compressed = Σ raw + residual — error feedback never loses mass."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (513,))}
+    e = init_error_feedback(g)
+    total_raw = jnp.zeros(513)
+    total_sent = jnp.zeros(513)
+    for step in range(20):
+        gi = {"w": g["w"] * (0.9**step)}
+        sent, e = quantize_roundtrip_with_feedback(gi, e)
+        total_raw += gi["w"]
+        total_sent += sent["w"]
+    np.testing.assert_allclose(
+        np.asarray(total_sent + e["w"]), np.asarray(total_raw), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_compress_preserves_shape_and_zero():
+    x = jnp.zeros((7, 13))
+    y = decompress(compress(x))
+    assert y.shape == (7, 13)
+    np.testing.assert_array_equal(np.asarray(y), 0.0)

@@ -1,0 +1,86 @@
+"""Sharding rules: logical resolution, divisibility guard, FSDP extension."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    drop_indivisible,
+    fsdp_extend,
+    param_spec,
+    resolve,
+    set_rules,
+    tree_param_specs,
+)
+
+SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def setup_function(_):
+    set_rules(DEFAULT_RULES)
+
+
+def test_drop_indivisible_keeps_divisible():
+    spec = P(("pod", "data"), None, "model")
+    out = drop_indivisible(spec, (64, 7, 32), SIZES)
+    assert out == P(("pod", "data"), None, "model")
+
+
+def test_drop_indivisible_replicates_odd_dims():
+    # kv_heads = 8 on a 16-way model axis → replicate
+    out = drop_indivisible(P(None, None, "model", None), (2, 128, 8, 64), SIZES)
+    assert out == P(None, None, None, None)
+    # odd vocab on model
+    out2 = drop_indivisible(P("model", None), (49155, 1536), SIZES)
+    assert out2 == P(None, None)
+
+
+def test_fsdp_extend_shards_largest_free_dim():
+    spec = P(None, "model")
+    out = fsdp_extend(spec, (4096, 11008), SIZES)
+    assert out == P("data", "model")
+    # small tensors untouched
+    assert fsdp_extend(P(), (2560,), SIZES) == P()
+
+
+def test_param_spec_conventions():
+    assert param_spec("layers/attn/wq", (1024, 2048)) == P(None, "model")
+    assert param_spec("layers/attn/wo", (2048, 1024)) == P("model", None)
+    assert param_spec("layers/mlp/w_gate", (1024, 8192)) == P(None, "model")
+    assert param_spec("layers/mlp/w_down", (8192, 1024)) == P("model", None)
+    assert param_spec("embedding/embed", (50304, 1024)) == P("model", None)
+    assert param_spec("ln/scale", (1024,)) == P(None)
+    e = param_spec("moe/experts/w_gate", (64, 1024, 768))
+    assert e == P("model", None, None)
+
+
+def test_tree_param_specs_stacked_layers():
+    params = {
+        "layers": {"attn": {"wq": jnp.zeros((4, 64, 128))}},
+        "embedding": {"embed": jnp.zeros((256, 64))},
+    }
+    specs = tree_param_specs(params)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["embedding"]["embed"] == P("model", None)
+
+
+def test_resolve_respects_missing_axes():
+    # without a mesh, resolution falls back to None axes
+    spec = resolve(["batch", None, "heads"])
+    assert spec == P(None, None, None)
+
+
+def test_rules_swap():
+    set_rules({**DEFAULT_RULES, "heads": None})
+    assert param_spec("x/wq", (16, 16)) == P(None, None)
+    set_rules(DEFAULT_RULES)
+
+
+def test_shard_noop_without_mesh():
+    from repro.parallel.sharding import shard
+
+    x = jnp.ones((4, 4))
+    y = shard(x, "batch", None)
+    assert (y == x).all()

@@ -1,0 +1,72 @@
+"""End-to-end behaviour: the paper's pipeline from graph to trained model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import compare_methods, min_feasible_budget, plan
+from repro.core.graph import chain
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.plan import plan_with_microbatching
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.serving import Engine
+from repro.train import TrainConfig, Trainer
+
+
+def test_paper_pipeline_on_abstract_graph():
+    """graph → min budget → plans → Table-1-style comparison row."""
+    g = chain(24, time=10.0, memory=4.0)
+    reports = compare_methods(g, include_exact=True)
+    by = {(r.method, r.objective): r for r in reports}
+    vanilla = by[("vanilla", "-")]
+    # every recomputation method beats vanilla's simulated peak
+    for key, r in by.items():
+        if key[0] == "vanilla":
+            continue
+        assert r.feasible
+        assert r.peak_with_liveness <= vanilla.peak_with_liveness + 1e-9
+    # MC(min-budget) peak ≤ TC(min-budget) peak under liveness (§4.4)
+    mc = by[("exact_dp", "memory_centric")]
+    tc = by[("exact_dp", "time_centric")]
+    assert mc.peak_with_liveness <= tc.peak_with_liveness + 1e-9
+    # and TC overhead ≤ MC overhead
+    assert tc.result.overhead <= mc.result.overhead + 1e-9
+
+
+def test_train_full_stack_with_plan():
+    """DP plan → sharded-capable loss → trainer → loss ↓ (the framework's
+    one-sentence story, executed)."""
+    cfg = reduced(get_config("phi4-mini-3.8b"), n_layers=4)
+    model = build_model(cfg)
+    shape = ShapeConfig("t", 32, 4, "train")
+    sp, res = plan_with_microbatching(cfg, shape, dp_shards=1, model_shards=1,
+                                      max_micro=1)
+    loss_fn = lambda p, b: model.loss(p, b, segment_sizes=sp.sizes,
+                                      segment_remat=sp.remat)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=4))
+    tr = Trainer(loss_fn, params, TrainConfig(
+        total_steps=25, log_every=0,
+        optimizer=AdamWConfig(lr=2e-3, warmup_steps=3, total_steps=25)))
+    out = tr.run(iter(data))
+    assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5])
+
+
+def test_train_then_serve():
+    cfg = reduced(get_config("stablelm-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=4))
+    tr = Trainer(model.loss, params, TrainConfig(
+        total_steps=5, log_every=0,
+        optimizer=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=5)))
+    tr.run(iter(data))
+    eng = Engine(model, tr.params, max_slots=2, max_seq=64)
+    eng.submit([1, 2, 3], max_new_tokens=4)
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 4

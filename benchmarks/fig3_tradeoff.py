@@ -15,9 +15,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import approx_dp, chen_sqrt_n, min_feasible_budget, simulate, vanilla_peak
+from repro.core import chen_sqrt_n, get_default_planner, simulate, vanilla_peak
 from repro.core.graph import Graph, Node
-from repro.core.lower_sets import pruned_lower_sets
 
 from .networks import NETWORKS, SETTINGS
 
@@ -48,10 +47,12 @@ def run_network(name: str, multipliers=(1, 2, 3, 4)) -> List[Dict]:
         row["chen"] = (
             (fwd_T + chen.overhead) / fwd_T if pk <= DEVICE_GB else None
         )
-        # approx DP at the largest feasible budget ≤ device memory
-        fam = pruned_lower_sets(g)
+        # approx DP at the largest feasible budget ≤ device memory — through
+        # the plan cache, so re-running the sweep (or sharing a cache dir
+        # with other jobs) skips the DP entirely
+        planner = get_default_planner()
         for obj, key in (("time_centric", "dp_tc"), ("memory_centric", "dp_mc")):
-            res = approx_dp(g, DEVICE_GB, objective=obj)
+            res = planner.solve(g, DEVICE_GB, "approx_dp", obj)
             if res.feasible:
                 pk = simulate(g, res.sequence, liveness=True).peak_memory
                 row[key] = (fwd_T + res.overhead) / fwd_T if pk <= DEVICE_GB else None

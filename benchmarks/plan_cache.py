@@ -1,0 +1,97 @@
+"""Plan-cache microbenchmark: cold vs warm planning time.
+
+Measures ``Planner.plan`` on repeated (graph, budget) pairs:
+
+* **cold**  — empty cache: full exact DP over 𝓛_G (exponential, §4.2);
+* **warm**  — same process, in-memory LRU hit;
+* **disk**  — fresh process simulation: new ``PlanCache`` over the same
+  on-disk store (content-addressed JSON), so only the canonical graph
+  digest + file read are paid.
+
+Acceptance gate (ISSUE 1): warm ≥ 10× faster than cold, and the cached
+DPResult bit-identical to the freshly solved one.
+
+Run: PYTHONPATH=src:. python -m benchmarks.plan_cache
+"""
+
+from __future__ import annotations
+
+import random
+import tempfile
+import time
+from typing import Dict
+
+from repro.core import PlanCache, Planner, min_feasible_budget
+from repro.core.graph import Graph, Node
+
+
+def dense_dag(n: int, seed: int = 0, p: float = 0.3) -> Graph:
+    """Random DAG dense enough that 𝓛_G is large (slow exact DP)."""
+    r = random.Random(seed)
+    edges = [
+        (i, j) for i in range(n) for j in range(i + 1, n) if r.random() < p
+    ]
+    nodes = [
+        Node(i, f"v{i}", r.choice([1.0, 10.0]), float(r.randint(1, 6)))
+        for i in range(n)
+    ]
+    return Graph(nodes, edges)
+
+
+def _identical(a, b) -> bool:
+    return (
+        a.feasible == b.feasible
+        and a.sequence == b.sequence
+        and a.overhead == b.overhead
+        and a.peak_memory == b.peak_memory
+    )
+
+
+def run(n: int = 13, budgets=(1.2, 1.5, 2.0)) -> Dict[str, float]:
+    g = dense_dag(n)
+    B0 = min_feasible_budget(g, "exact_dp")
+
+    with tempfile.TemporaryDirectory() as store:
+        cold_planner = Planner(cache=PlanCache(cache_dir=store))
+        t0 = time.perf_counter()
+        cold = [cold_planner.solve(g, B0 * s, "exact_dp") for s in budgets]
+        t_cold = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        warm = [cold_planner.solve(g, B0 * s, "exact_dp") for s in budgets]
+        t_warm = time.perf_counter() - t0
+
+        # fresh in-memory cache over the same disk store = restarted process
+        disk_planner = Planner(cache=PlanCache(cache_dir=store))
+        t0 = time.perf_counter()
+        disk = [disk_planner.solve(g, B0 * s, "exact_dp") for s in budgets]
+        t_disk = time.perf_counter() - t0
+
+    assert all(_identical(c, w) for c, w in zip(cold, warm)), "warm ≠ cold"
+    assert all(_identical(c, d) for c, d in zip(cold, disk)), "disk ≠ cold"
+
+    speedup_warm = t_cold / max(t_warm, 1e-9)
+    speedup_disk = t_cold / max(t_disk, 1e-9)
+    print(f"graph: n={n}, |E|={len(g.edges)}, budgets={list(budgets)}")
+    print(f"cold : {t_cold*1e3:9.1f} ms   (exact DP per budget)")
+    print(f"warm : {t_warm*1e3:9.1f} ms   ({speedup_warm:,.0f}× vs cold, LRU hit)")
+    print(f"disk : {t_disk*1e3:9.1f} ms   ({speedup_disk:,.0f}× vs cold, "
+          f"content-addressed store)")
+    print(f"plans bit-identical across cold/warm/disk: True")
+    assert speedup_warm >= 10.0, f"warm speedup {speedup_warm:.1f}× < 10×"
+    return {
+        "t_cold": t_cold,
+        "t_warm": t_warm,
+        "t_disk": t_disk,
+        "speedup_warm": speedup_warm,
+        "speedup_disk": speedup_disk,
+    }
+
+
+def main():
+    print("\n== plan cache: cold vs warm planning ==")
+    return run()
+
+
+if __name__ == "__main__":
+    main()

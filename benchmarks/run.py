@@ -4,6 +4,7 @@
   table2    — Table 2 (Appendix C): the no-liveness ablation
   fig3      — Figure 3: batch-size vs runtime trade-off
   dp        — §5.1: exact-vs-approx planner runtime
+  cache     — plan-cache cold vs warm planning time (≥10× gate)
   roofline  — per-(arch × shape) roofline terms from the dry-run artifacts
   claims    — the paper's quantitative claims checked programmatically
 
@@ -89,7 +90,14 @@ def _claims(t1, t2, dp_rows):
 def main() -> int:
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     t0 = time.perf_counter()
-    from . import dp_runtime, fig3_tradeoff, roofline, table1_memory, table2_no_liveness
+    from . import (
+        dp_runtime,
+        fig3_tradeoff,
+        plan_cache,
+        roofline,
+        table1_memory,
+        table2_no_liveness,
+    )
 
     t1 = t2 = dp_rows = None
     if which in ("all", "table1"):
@@ -100,6 +108,8 @@ def main() -> int:
         fig3_tradeoff.main()
     if which in ("all", "dp"):
         dp_rows = dp_runtime.main()
+    if which in ("all", "cache"):
+        plan_cache.main()
     if which in ("all", "roofline"):
         try:
             roofline.main("single")

@@ -1,6 +1,11 @@
 """Plan explorer: the paper's Table-1 methods on any benchmark network or
 assigned architecture, with an ASCII memory-vs-overhead frontier.
 
+Budget sweeps solve through the content-addressed plan cache
+(core.plan_cache): re-exploring a network — or pointing --cache-dir (or
+REPRO_PLAN_CACHE_DIR) at a shared store — reuses every previously solved
+(graph, budget) point instead of re-running the DP.
+
 Run: PYTHONPATH=src:. python examples/plan_explorer.py --network unet
      PYTHONPATH=src:. python examples/plan_explorer.py --arch stablelm-3b
 """
@@ -8,19 +13,18 @@ Run: PYTHONPATH=src:. python examples/plan_explorer.py --network unet
 import argparse
 
 from repro.core import (
-    approx_dp,
     chen_sqrt_n,
-    min_feasible_budget,
+    get_default_planner,
     simulate,
     vanilla_peak,
 )
-from repro.core.lower_sets import pruned_lower_sets
 
 
 def frontier(g, n_points: int = 8):
     """Sweep budgets from minimal to vanilla; print the trade-off curve."""
-    fam = pruned_lower_sets(g)
-    B_min = min_feasible_budget(g, family=fam, tol=1e-2)
+    planner = get_default_planner()
+    fam = planner.family(g, "approx_dp")  # memoized — shared with the solves
+    B_min = planner.min_feasible_budget(g, "approx_dp", tol=1e-2)
     van = vanilla_peak(g, liveness=True)
     print(f"#V={g.n}  #L^pruned={len(fam)}  vanilla peak={van/1e9:.2f} GB  "
           f"min feasible B={B_min/1e9:.2f} GB")
@@ -32,7 +36,7 @@ def frontier(g, n_points: int = 8):
     rows = []
     for i in range(n_points):
         B = B_min * (1.0 + 3.0 * i / max(n_points - 1, 1))
-        res = approx_dp(g, B)
+        res = planner.solve(g, B, "approx_dp")
         if not res.feasible:
             continue
         pk = simulate(g, res.sequence, liveness=True).peak_memory
@@ -50,7 +54,14 @@ def main():
     ap.add_argument("--network", default=None,
                     help="one of the paper's nets (benchmarks.networks)")
     ap.add_argument("--arch", default=None, help="assigned architecture id")
+    ap.add_argument("--cache-dir", default=None,
+                    help="on-disk plan cache (re-runs become lookups)")
     args = ap.parse_args()
+
+    if args.cache_dir:
+        from repro.core import set_default_cache_dir
+
+        set_default_cache_dir(args.cache_dir)
 
     if args.arch:
         from repro.configs import SHAPES, get_config

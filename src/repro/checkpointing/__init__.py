@@ -1,3 +1,19 @@
-from .store import AsyncCheckpointer, latest_step, restore, retain, save
+from .store import (
+    AsyncCheckpointer,
+    atomic_write_json,
+    latest_step,
+    read_json,
+    restore,
+    retain,
+    save,
+)
 
-__all__ = ["AsyncCheckpointer", "save", "restore", "latest_step", "retain"]
+__all__ = [
+    "AsyncCheckpointer",
+    "save",
+    "restore",
+    "latest_step",
+    "retain",
+    "atomic_write_json",
+    "read_json",
+]

@@ -41,6 +41,31 @@ def _sanitize(path: str) -> str:
     return re.sub(r"[^A-Za-z0-9_.-]", "_", path)
 
 
+def atomic_write_json(path: str, obj: Any) -> None:
+    """Crash-safe JSON write: temp file + atomic rename (same protocol as the
+    step-directory commit below, shared with core.plan_cache's disk store)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def read_json(path: str) -> Optional[Any]:
+    """Read a JSON file; None when missing or torn (partial/corrupt write).
+
+    ValueError covers both JSONDecodeError and the UnicodeDecodeError a
+    non-UTF-8 corrupted file raises before the JSON parser even runs.
+    """
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
 def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []

@@ -7,6 +7,13 @@ Chen's √n baseline, liveness simulation, and the bridges into JAX
 """
 
 from .chen import articulation_points, candidate_split_points, chen_sqrt_n
+from .cost_model import (
+    OpProfile,
+    calibrated_graph,
+    load_or_profile,
+    measured_times,
+    profile_ops,
+)
 from .dfs import exhaustive_search
 from .dp import (
     DPResult,
@@ -18,10 +25,26 @@ from .dp import (
     quantize_times,
     solve,
 )
-from .graph import Graph, Node, chain, from_cost_lists
+from .graph import (
+    Graph,
+    Node,
+    canonical_maps,
+    canonical_order,
+    chain,
+    from_cost_lists,
+    graph_digest,
+)
 from .liveness import SimResult, simulate, vanilla_peak
 from .lower_sets import all_lower_sets, count_lower_sets, pruned_lower_sets
-from .planner import PlanReport, compare_methods, min_feasible_budget, plan
+from .plan_cache import PlanCache, PlanKey, default_cache, set_default_cache_dir
+from .planner import (
+    Planner,
+    PlanReport,
+    compare_methods,
+    get_default_planner,
+    min_feasible_budget,
+    plan,
+)
 from .schedule import ExecutionPlan, Segment, make_plan, plan_summary
 
 __all__ = [
@@ -55,4 +78,19 @@ __all__ = [
     "plan",
     "compare_methods",
     "min_feasible_budget",
+    # plan compilation pipeline
+    "graph_digest",
+    "canonical_order",
+    "canonical_maps",
+    "PlanCache",
+    "PlanKey",
+    "default_cache",
+    "set_default_cache_dir",
+    "Planner",
+    "get_default_planner",
+    "OpProfile",
+    "profile_ops",
+    "load_or_profile",
+    "measured_times",
+    "calibrated_graph",
 ]

@@ -1,0 +1,254 @@
+"""Measured per-op cost model: profiled T_v instead of FLOP proxies.
+
+§3 of the paper: "We can either directly measure T_v … or use some form of
+approximation."  The seed repo only approximated (10/1 for heavy/light, or
+analytic FLOPs); this module *measures*.  It times three representative op
+classes on the current backend — a matmul (the ``dot_general`` family), the
+Pallas flash-attention kernel from ``repro.kernels`` (interpret mode off-TPU,
+compiled on TPU), and a memory-bound elementwise chain — and distills them
+into throughput rates:
+
+* ``sec_per_flop_matmul``     — compute-bound ops priced by their FLOPs;
+* ``sec_per_flop_attention``  — attention-kind nodes (the recompute-in-bwd
+  kernel has a different achieved-FLOP rate than a plain matmul);
+* ``sec_per_byte_elementwise``— everything else priced by its output bytes
+  (memory-bound on every backend).
+
+``calibrated_graph`` maps a FLOP-carrying graph (``jaxpr_graph`` with
+``cost_model="flops"``, or ``launch.plan.chain_graph`` whose interior nodes
+carry unit FLOPs) to measured seconds, then feeds the result through
+``dp.quantize_times`` — giving the DP an integer t-axis whose *ratios* are
+hardware-true rather than FLOP-proportional.  Profiles are content-addressed
+on disk (backend + JAX version) via the same atomic-JSON machinery as the
+plan cache, so a process profiles at most once per backend, ever.
+
+Calibration deliberately changes ``T_v`` and therefore the graph digest
+(``core.graph.graph_digest``): plans cached under a FLOP cost model and
+plans cached under a measured profile never alias, and re-profiling on new
+hardware invalidates old plans by construction.
+
+Not meaningful for the paper's abstract {1, 10} cost graphs — those already
+*are* a (coarse) measured model; calibration is for production graphs whose
+``time`` field carries FLOPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+from .dp import quantize_times
+from .graph import Graph, Node
+
+PROFILE_VERSION = 1
+
+# Node kinds priced as compute-bound matmul-class work (time field = FLOPs).
+MATMUL_KINDS = {
+    "dot_general",
+    "conv_general_dilated",
+    "ragged_dot",
+    "unit",  # launch.plan.chain_graph interior nodes (FLOPs in `time`)
+    "matmul",
+    "conv",
+}
+
+# Node kinds priced at the attention kernel's achieved rate.
+ATTENTION_KINDS = {"attention", "flash_attention", "custom_vjp_call"}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpProfile:
+    """Measured throughput rates for one backend (seconds per unit work)."""
+
+    sec_per_flop_matmul: float
+    sec_per_flop_attention: float
+    sec_per_byte_elementwise: float
+    backend: str = "unknown"
+    jax_version: str = "unknown"
+
+    def profile_key(self) -> str:
+        return f"{self.backend}-{self.jax_version}-v{PROFILE_VERSION}"
+
+
+#: Analytical fallback (rough TPU-v5e-class numbers) used when profiling is
+#: disabled or fails — keeps calibration total-order-correct without timing.
+DEFAULT_PROFILE = OpProfile(
+    sec_per_flop_matmul=1.0 / 100e12,
+    sec_per_flop_attention=1.0 / 50e12,
+    sec_per_byte_elementwise=1.0 / 500e9,
+    backend="analytic",
+    jax_version="-",
+)
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def _time_call(fn, *args, repeats: int = 3) -> float:
+    """Median wall time of ``fn(*args)`` with warmup (jit compile excluded)."""
+    import jax
+
+    out = fn(*args)
+    jax.block_until_ready(out)  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return max(_median(ts), 1e-9)
+
+
+def profile_ops(
+    matmul_dim: int = 512,
+    elem_elems: int = 1 << 22,
+    attn_shape: tuple = (1, 128, 2, 32),
+    repeats: int = 3,
+    include_attention: bool = True,
+) -> OpProfile:
+    """Time representative ops on the current backend and fit the rates.
+
+    Shapes are deliberately small: this runs inside tests and cold starts.
+    On CPU the flash-attention kernel runs in Pallas interpret mode — the
+    same kernel body, so the measured ratio is still the right *relative*
+    signal, which is all the DP consumes after quantization.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    backend = jax.default_backend()
+    key = jax.random.PRNGKey(0)
+
+    # --- matmul: 2·n³ FLOPs --------------------------------------------------
+    a = jax.random.normal(key, (matmul_dim, matmul_dim), jnp.float32)
+    b = jax.random.normal(key, (matmul_dim, matmul_dim), jnp.float32)
+    mm = jax.jit(lambda x, y: x @ y)
+    t_mm = _time_call(mm, a, b, repeats=repeats)
+    sec_per_flop_mm = t_mm / (2.0 * matmul_dim**3)
+
+    # --- elementwise chain: memory-bound, ~4 passes over the array -----------
+    x = jax.random.normal(key, (elem_elems,), jnp.float32)
+    ew = jax.jit(lambda v: jnp.tanh(v * 1.5 + 0.5) * v)
+    t_ew = _time_call(ew, x, repeats=repeats)
+    sec_per_byte = t_ew / (4.0 * elem_elems * 4)
+
+    # --- attention kernel ----------------------------------------------------
+    sec_per_flop_attn = sec_per_flop_mm * 2.0  # fallback: half matmul rate
+    if include_attention:
+        try:
+            from repro.kernels import flash_attention
+
+            B, S, H, D = attn_shape
+            q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+            fa = jax.jit(lambda qq: flash_attention(qq, qq, qq, causal=True))
+            t_fa = _time_call(fa, q, repeats=max(1, repeats - 1))
+            attn_flops = 4.0 * B * H * S * S * D  # qk^T + pv
+            sec_per_flop_attn = t_fa / attn_flops
+        except Exception:
+            pass  # interpret-mode kernel unavailable → keep the fallback rate
+
+    return OpProfile(
+        sec_per_flop_matmul=float(sec_per_flop_mm),
+        sec_per_flop_attention=float(sec_per_flop_attn),
+        sec_per_byte_elementwise=float(sec_per_byte),
+        backend=backend,
+        jax_version=jax.__version__,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Disk-cached profiles (one timing run per backend, ever).
+# ---------------------------------------------------------------------------
+
+
+def _profile_path(cache_dir: str, backend: str, jax_version: str) -> str:
+    import os
+
+    name = f"op_profile_{backend}_{jax_version}_v{PROFILE_VERSION}.json"
+    return os.path.join(cache_dir, "profiles", name.replace("/", "_"))
+
+
+def load_or_profile(
+    cache_dir: Optional[str] = None, profiler=profile_ops
+) -> OpProfile:
+    """Load the backend's profile from ``cache_dir`` or measure and store it.
+
+    With ``cache_dir=None`` the plan cache's directory is used when attached
+    (so plans and the profile that priced them live side by side); without
+    either, the profile is measured fresh (still just a few hundred ms).
+    """
+    import jax
+
+    from repro.checkpointing.store import atomic_write_json, read_json
+
+    from .plan_cache import default_cache
+
+    cache_dir = cache_dir or default_cache().cache_dir
+    backend, version = jax.default_backend(), jax.__version__
+    path = _profile_path(cache_dir, backend, version) if cache_dir else None
+
+    if path:
+        raw = read_json(path)
+        if raw and raw.get("version") == PROFILE_VERSION:
+            try:
+                return OpProfile(
+                    sec_per_flop_matmul=float(raw["sec_per_flop_matmul"]),
+                    sec_per_flop_attention=float(raw["sec_per_flop_attention"]),
+                    sec_per_byte_elementwise=float(raw["sec_per_byte_elementwise"]),
+                    backend=str(raw["backend"]),
+                    jax_version=str(raw["jax_version"]),
+                )
+            except (KeyError, TypeError, ValueError):
+                pass  # torn/stale file → re-profile
+
+    prof = profiler()
+    if path:
+        try:
+            atomic_write_json(
+                path, {"version": PROFILE_VERSION, **dataclasses.asdict(prof)}
+            )
+        except OSError:
+            pass  # unusable store → just re-profile next process
+    return prof
+
+
+# ---------------------------------------------------------------------------
+# Applying a profile to a graph.
+# ---------------------------------------------------------------------------
+
+
+def node_seconds(nd: Node, profile: OpProfile) -> float:
+    """Calibrated wall-clock estimate for one node.
+
+    Compute-bound kinds read FLOPs from ``time``; all other kinds are priced
+    memory-bound from their output bytes (``memory``).  The floor keeps
+    Graph's positive-cost invariant.
+    """
+    if nd.kind in MATMUL_KINDS:
+        sec = nd.time * profile.sec_per_flop_matmul
+    elif nd.kind in ATTENTION_KINDS:
+        sec = nd.time * profile.sec_per_flop_attention
+    else:
+        sec = nd.memory * profile.sec_per_byte_elementwise
+    return max(sec, 1e-12)
+
+
+def measured_times(g: Graph, profile: OpProfile) -> Graph:
+    """New graph with ``T_v`` = calibrated seconds (topology/memory kept)."""
+    nodes = [
+        Node(nd.idx, nd.name, node_seconds(nd, profile), nd.memory, nd.kind)
+        for nd in g.nodes
+    ]
+    return Graph(nodes, g.edges)
+
+
+def calibrated_graph(g: Graph, profile: OpProfile, levels: int = 64) -> Graph:
+    """Measured seconds → integer DP t-axis (``dp.quantize_times``).
+
+    This is the drop-in replacement for ``quantize_times(flop_graph)``: same
+    output contract (small positive integer ``T_v``), hardware-true ratios.
+    """
+    return quantize_times(measured_times(g, profile), levels=levels)

@@ -142,3 +142,34 @@ def vanilla_value_and_grad(
         return loss_fn(*out) if isinstance(out, tuple) else loss_fn(out)
 
     return jax.value_and_grad(f)
+
+
+def planned_value_and_grad_under_budget(
+    bg: BlockGraph,
+    params: Dict[str, Any],
+    inputs: Dict[str, Any],
+    loss_fn: Callable[..., jax.Array],
+    budget: Optional[float] = None,
+    method: str = "approx_dp",
+    objective: str = "time_centric",
+    cost_model: str = "paper",
+    planner=None,
+    track_live: bool = False,
+):
+    """Trace → plan (through the plan cache) → interpret, in one call.
+
+    The planning step routes through ``core.planner.Planner`` (the
+    process-default one unless ``planner`` is given), so rebuilding the
+    runner for the same BlockGraph and budget — a new training process, a
+    re-created executor in a sweep — reuses the cached DP solution instead
+    of re-solving it.  Returns ``(run_fn, PlanReport)``.
+    """
+    from .planner import get_default_planner
+
+    g = bg.to_graph(params, inputs, cost_model=cost_model)
+    report = (planner or get_default_planner()).plan(g, budget, method, objective)
+    if report.plan is None:
+        raise ValueError(
+            f"no feasible strategy for budget {budget!r} ({method}/{objective})"
+        )
+    return planned_value_and_grad(bg, report.plan, loss_fn, track_live), report

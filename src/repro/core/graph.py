@@ -20,6 +20,7 @@ hashability (DP table keys), with bitmask fast paths for small graphs.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 NodeSet = FrozenSet[int]
@@ -217,6 +218,125 @@ class Graph:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Graph(n={len(self.nodes)}, e={len(self.edges)})"
+
+
+# ---------------------------------------------------------------------------
+# Canonical hashing (plan-cache keys).
+#
+# ``graph_digest`` is a stable content address for (topology, quantized
+# costs, kinds): invariant under node-id permutation, sensitive to any edge
+# or cost change.  It is built in two steps:
+#
+#   1. Weisfeiler–Lehman refinement over both edge directions, seeded with
+#      each node's quantized (T_v, M_v, kind) — permutation-invariant colors;
+#   2. a canonical topological order (Kahn, ties broken by the canonical
+#      positions of already-placed predecessors, then the WL color), which
+#      yields an explicit relabeling so cached *plans* — not just digests —
+#      transfer between isomorphic labelings (core.plan_cache stores lower-set
+#      sequences in canonical coordinates).
+#
+# WL-equivalent non-automorphic nodes can in principle canonicalize
+# differently across labelings; for the DP's DAGs this at worst costs a cache
+# miss, never a wrong hit, because plan_cache re-validates every hit against
+# the querying graph.
+# ---------------------------------------------------------------------------
+
+
+def _qcost(x: float, sig: int) -> str:
+    """Quantize a cost to ``sig`` significant digits (string form, stable)."""
+    return f"{float(x):.{sig}g}"
+
+
+def _h(*parts) -> bytes:
+    m = hashlib.sha256()
+    for p in parts:
+        if isinstance(p, bytes):
+            m.update(p)
+        else:
+            m.update(str(p).encode())
+        m.update(b"\x1f")
+    return m.digest()
+
+
+def _wl_colors(g: Graph, cost_sig: int) -> List[bytes]:
+    """Permutation-invariant per-node colors (bidirectional WL refinement)."""
+    colors = [
+        _h("node", _qcost(nd.time, cost_sig), _qcost(nd.memory, cost_sig), nd.kind)
+        for nd in g.nodes
+    ]
+    rounds = min(g.n, 16) + 1
+    for _ in range(rounds):
+        colors = [
+            _h(
+                colors[v],
+                b"pred", *sorted(colors[p] for p in g.pred[v]),
+                b"succ", *sorted(colors[s] for s in g.succ[v]),
+            )
+            for v in range(g.n)
+        ]
+    return colors
+
+
+def canonical_order(g: Graph, cost_sig: int = 12) -> List[int]:
+    """Canonical topological order: position → original node id.
+
+    Deterministic for a given graph and identical (up to automorphism) for
+    isomorphic graphs: Kahn's algorithm where the next node is the ready node
+    with the lexicographically smallest (canonical-pred-positions, WL-color)
+    key.  Cached per (graph, cost_sig) — Graphs are immutable after init.
+    """
+    cache = getattr(g, "_canon_cache", None)
+    if cache is None:
+        cache = {}
+        g._canon_cache = cache
+    if cost_sig in cache:
+        return cache[cost_sig][0]
+
+    colors = _wl_colors(g, cost_sig)
+    pos: Dict[int, int] = {}
+    indeg = [len(p) for p in g.pred]
+    ready = [v for v in range(g.n) if indeg[v] == 0]
+    order: List[int] = []
+    while ready:
+        best = min(
+            ready, key=lambda v: (tuple(sorted(pos[p] for p in g.pred[v])), colors[v])
+        )
+        ready.remove(best)
+        pos[best] = len(order)
+        order.append(best)
+        for w in g.succ[best]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                ready.append(w)
+
+    digest = hashlib.sha256()
+    digest.update(f"G|{g.n}|{len(g.edges)}".encode())
+    for i, v in enumerate(order):
+        nd = g.nodes[v]
+        preds = sorted(pos[p] for p in g.pred[v])
+        digest.update(
+            _h(i, _qcost(nd.time, cost_sig), _qcost(nd.memory, cost_sig),
+               nd.kind, *preds)
+        )
+    cache[cost_sig] = (order, digest.hexdigest())
+    return order
+
+
+def graph_digest(g: Graph, cost_sig: int = 12) -> str:
+    """Stable content digest of (topology, quantized costs, kinds).
+
+    Equal for isomorphic graphs regardless of node numbering; different
+    whenever an edge, a cost (beyond ``cost_sig`` significant digits), or a
+    node kind differs.  This is the plan cache's graph key.
+    """
+    canonical_order(g, cost_sig)
+    return g._canon_cache[cost_sig][1]
+
+
+def canonical_maps(g: Graph, cost_sig: int = 12) -> Tuple[Dict[int, int], List[int]]:
+    """(node id → canonical position, canonical position → node id)."""
+    order = canonical_order(g, cost_sig)
+    return {v: i for i, v in enumerate(order)}, order
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,309 @@
+"""Content-addressed plan cache: solve each (graph, budget, family,
+objective) once, ever.
+
+The DP of Algorithm 1 is exponential in the worst case (§4.2), yet the
+framework re-plans constantly: every ``Planner.plan`` call, every budget
+point of a trade-off sweep (benchmarks/fig3_tradeoff.py), every cell of the
+dry-run matrix, and every restart of a training job re-solve graphs that
+were already solved.  This module memoizes solved ``DPResult``s behind a
+canonical content address so repeated planning is a hash lookup:
+
+* **key** — ``(graph_digest, budget, family, objective)`` where
+  ``graph_digest`` (core.graph) is invariant under node-id permutation and
+  covers topology + quantized costs + kinds.  Calibrated costs from the
+  measured cost model (core.cost_model) flow into the digest automatically,
+  so re-profiling on different hardware *invalidates* stale plans by
+  construction — no epoch counters needed.
+* **values in canonical coordinates** — lower-set sequences are stored as
+  canonical node positions and mapped back through the querying graph's
+  canonical order, so a cached plan transfers between isomorphic labelings
+  (e.g. the same network traced twice with different eqn numbering).
+* **two tiers** — an in-memory LRU (per process) over an optional on-disk
+  content-addressed store (crash-safe single-file JSON writes via
+  ``checkpointing.store.atomic_write_json``; filename = SHA-256 of the key,
+  sharded by 2-hex-char prefix like a git object store).
+* **validated hits** — every hit is re-validated against the querying graph
+  (``check_increasing_sequence``), so a digest collision or a corrupt cache
+  file degrades to a miss, never a wrong plan.
+
+Process-wide default: ``default_cache()`` (used by ``core.planner.Planner``
+when no cache is passed); ``set_default_cache_dir`` attaches the disk tier —
+the train loop and serving engine call it when configured with a
+``plan_cache_dir``, so co-located jobs share one store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.checkpointing.store import atomic_write_json, read_json
+
+from .dp import DPResult
+from .graph import Graph, NodeSet, canonical_maps, graph_digest
+
+FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Identity of one planning problem.
+
+    ``family`` names the lower-set family ("exact_dp" / "approx_dp" /
+    "segment" / a digest of a custom family); ``budget`` is kept in full
+    float precision via ``repr`` so distinct budgets never alias.
+    """
+
+    graph_digest: str
+    budget: float
+    family: str
+    objective: str
+
+    def content_hash(self) -> str:
+        payload = "|".join(
+            (
+                f"v{FORMAT_VERSION}",
+                self.graph_digest,
+                repr(float(self.budget)),
+                self.family,
+                self.objective,
+            )
+        )
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def _to_canonical(seq: Sequence[NodeSet], to_pos: Dict[int, int]) -> List[List[int]]:
+    return [sorted(to_pos[v] for v in L) for L in seq]
+
+
+def _from_canonical(seq: List[List[int]], from_pos: List[int]) -> List[NodeSet]:
+    return [frozenset(from_pos[p] for p in L) for L in seq]
+
+
+class PlanCache:
+    """In-memory LRU over an optional on-disk content-addressed store."""
+
+    def __init__(self, capacity: int = 512, cache_dir: Optional[str] = None):
+        self.capacity = capacity
+        self.cache_dir = cache_dir
+        self._mem: "OrderedDict[str, dict]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.disk_hits = 0
+        self.invalid_hits = 0  # validation failures (collision/corruption)
+        self.disk_errors = 0  # unusable store (permissions, bad path, ENOSPC)
+
+    # ------------------------------------------------------------------ keys
+
+    @staticmethod
+    def key_for(
+        g: Graph, budget: float, family: str, objective: str
+    ) -> PlanKey:
+        return PlanKey(graph_digest(g), float(budget), family, objective)
+
+    # ------------------------------------------------------------------ disk
+
+    def _path(self, content_hash: str) -> Optional[str]:
+        if not self.cache_dir:
+            return None
+        return os.path.join(
+            self.cache_dir, "plans", content_hash[:2], content_hash + ".json"
+        )
+
+    def _disk_write(self, content_hash: str, entry: dict) -> None:
+        """Best-effort disk write: an unusable store (read-only mount, path
+        collision, ENOSPC) must degrade the cache to memory-only, never take
+        the planning job down."""
+        path = self._path(content_hash)
+        if path is None:
+            return
+        try:
+            atomic_write_json(path, entry)
+        except OSError:
+            self.disk_errors += 1
+
+    # ------------------------------------------------------------------- LRU
+
+    def _mem_get(self, h: str) -> Optional[dict]:
+        with self._lock:
+            entry = self._mem.get(h)
+            if entry is not None:
+                self._mem.move_to_end(h)
+            return entry
+
+    def _mem_put(self, h: str, entry: dict) -> None:
+        with self._lock:
+            self._mem[h] = entry
+            self._mem.move_to_end(h)
+            while len(self._mem) > self.capacity:
+                self._mem.popitem(last=False)
+
+    # ------------------------------------------------------------------- API
+
+    def get(self, g: Graph, key: PlanKey) -> Optional[DPResult]:
+        """Cached DPResult for ``key``, re-labeled onto ``g``; None on miss.
+
+        Hits are validated against ``g`` (increasing lower-set sequence); an
+        entry that fails validation is treated as a miss and evicted.
+        """
+        h = key.content_hash()
+        entry = self._mem_get(h)
+        from_disk = False
+        if entry is None:
+            path = self._path(h)
+            if path is not None:
+                entry = read_json(path)
+                from_disk = entry is not None
+        if entry is None:
+            self.misses += 1
+            return None
+
+        result = self._decode(g, entry)
+        if result is None:
+            self.invalid_hits += 1
+            self.misses += 1
+            with self._lock:
+                self._mem.pop(h, None)
+            return None
+        if from_disk:
+            self.disk_hits += 1
+            self._mem_put(h, entry)
+        self.hits += 1
+        return result
+
+    def put(self, g: Graph, key: PlanKey, result: DPResult) -> None:
+        to_pos, _ = canonical_maps(g)
+        entry = {
+            "version": FORMAT_VERSION,
+            "key": dataclasses.asdict(key),
+            "feasible": bool(result.feasible),
+            "sequence": _to_canonical(result.sequence, to_pos),
+            "overhead": result.overhead,
+            "peak_memory": result.peak_memory,
+            "states_visited": int(result.states_visited),
+        }
+        h = key.content_hash()
+        self._mem_put(h, entry)
+        self._disk_write(h, entry)
+
+    def _decode(self, g: Graph, entry: dict) -> Optional[DPResult]:
+        try:
+            # a foreign/corrupt store file can be any JSON value, not a dict
+            if not isinstance(entry, dict) or entry.get("version") != FORMAT_VERSION:
+                return None
+            if not entry["feasible"]:
+                return DPResult(
+                    sequence=[],
+                    overhead=float("inf"),
+                    peak_memory=float("inf"),
+                    feasible=False,
+                    states_visited=int(entry.get("states_visited", 0)),
+                )
+            _, from_pos = canonical_maps(g)
+            seq = _from_canonical(entry["sequence"], from_pos)
+            g.check_increasing_sequence(seq)
+            return DPResult(
+                sequence=seq,
+                overhead=float(entry["overhead"]),
+                peak_memory=float(entry["peak_memory"]),
+                feasible=True,
+                states_visited=int(entry.get("states_visited", 0)),
+            )
+        except (KeyError, IndexError, TypeError, ValueError):
+            return None
+
+    # ------------------------------------------------- auxiliary scalar store
+
+    def get_aux(self, namespace: str, key: str) -> Optional[float]:
+        """Small keyed scalar store (e.g. min-feasible-budget results)."""
+        h = hashlib.sha256(f"aux|{namespace}|{key}".encode()).hexdigest()
+        entry = self._mem_get(h)
+        if entry is None:
+            path = self._path(h)
+            if path is not None:
+                entry = read_json(path)
+                if entry is not None:
+                    self._mem_put(h, entry)
+        if not isinstance(entry, dict) or "value" not in entry:
+            return None
+        try:
+            return float(entry["value"])
+        except (TypeError, ValueError):
+            return None
+
+    def put_aux(self, namespace: str, key: str, value: float) -> None:
+        h = hashlib.sha256(f"aux|{namespace}|{key}".encode()).hexdigest()
+        entry = {"version": FORMAT_VERSION, "value": float(value)}
+        self._mem_put(h, entry)
+        self._disk_write(h, entry)
+
+    # ----------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "disk_hits": self.disk_hits,
+            "invalid_hits": self.invalid_hits,
+            "disk_errors": self.disk_errors,
+            "entries_in_memory": len(self._mem),
+        }
+
+    def clear_memory(self) -> None:
+        with self._lock:
+            self._mem.clear()
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default cache (planner front door).
+# ---------------------------------------------------------------------------
+
+_DEFAULT = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    return _DEFAULT
+
+
+def set_default_cache_dir(path: Optional[str]) -> PlanCache:
+    """Attach (or detach, with None) the disk tier of the default cache.
+
+    Called by the train loop / serving engine when configured with a
+    ``plan_cache_dir``; also respects the ``REPRO_PLAN_CACHE_DIR`` env var
+    via ``cache_dir_from_env``.
+
+    The store is deliberately **process-global** (co-located jobs share one
+    content-addressed store; entries are keyed by content, so sharing is
+    always safe).  Repointing an already-attached store to a *different*
+    directory is almost certainly a configuration mistake — two components
+    were configured with conflicting dirs — so it warns.
+    """
+    if (
+        path is not None
+        and _DEFAULT.cache_dir is not None
+        and os.path.abspath(path) != os.path.abspath(_DEFAULT.cache_dir)
+    ):
+        import warnings
+
+        warnings.warn(
+            f"plan cache dir repointed {_DEFAULT.cache_dir!r} -> {path!r}; "
+            "the store is process-global and shared by every planner",
+            stacklevel=2,
+        )
+    _DEFAULT.cache_dir = path
+    return _DEFAULT
+
+
+def cache_dir_from_env() -> Optional[str]:
+    return os.environ.get("REPRO_PLAN_CACHE_DIR") or None
+
+
+# Pick up the env var at import so every entry point (benchmarks, examples,
+# launchers) shares the store without plumbing.
+if cache_dir_from_env():
+    set_default_cache_dir(cache_dir_from_env())

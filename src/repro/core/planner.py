@@ -5,6 +5,15 @@ The paper's §5.1 protocol: "for the memory budget B … we chose the minimal
 value B for which the solution … exists.  This value was determined using
 binary search."  ``min_feasible_budget`` implements that search;
 ``plan`` is the one-call front door used by the framework.
+
+Plan compilation pipeline (beyond-paper): every DP solve and budget search
+is memoized through ``core.plan_cache`` behind a canonical graph digest, so
+repeated plans — multi-budget sweeps, dry-run matrices, job restarts — are
+hash lookups instead of exponential DP re-solves.  ``Planner`` is the
+stateful front door carrying the cache and an optional measured cost model
+(``core.cost_model``); the module-level ``plan``/``min_feasible_budget``
+functions route through a process-default ``Planner`` so existing callers
+inherit the caching transparently.
 """
 
 from __future__ import annotations
@@ -15,10 +24,12 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 from . import dp as dp_mod
 from .chen import chen_sqrt_n
+from .cost_model import OpProfile, calibrated_graph
 from .dp import DPResult, approx_dp, exact_dp, solve
-from .graph import Graph, NodeSet
+from .graph import Graph, NodeSet, graph_digest
 from .liveness import simulate, vanilla_peak
 from .lower_sets import all_lower_sets, pruned_lower_sets
+from .plan_cache import PlanCache, default_cache
 from .schedule import ExecutionPlan, make_plan
 
 
@@ -48,7 +59,7 @@ def _family(g: Graph, method: str) -> Sequence[NodeSet]:
     raise ValueError(method)
 
 
-def min_feasible_budget(
+def _min_feasible_budget_uncached(
     g: Graph,
     method: str = "approx_dp",
     tol: float = 1e-3,
@@ -79,61 +90,218 @@ def min_feasible_budget(
     return hi
 
 
+class Planner:
+    """Stateful planning front door: DP + plan cache + optional cost model.
+
+    * ``cache``  — a ``core.plan_cache.PlanCache``; defaults to the process
+      default cache (in-memory LRU, plus disk when a cache dir is attached).
+    * ``profile``— an ``OpProfile`` from ``core.cost_model``; when set, every
+      graph is re-priced to measured seconds and re-quantized before the DP,
+      so the solved t-axis reflects the hardware instead of FLOP proxies.
+    * ``quantize_levels`` — integer t-axis resolution for the calibration
+      path (also usable without a profile to quantize FLOP-valued graphs).
+
+    ``solve`` results are cached by ``(graph_digest, budget, family,
+    objective)``; custom lower-set families bypass the cache (their identity
+    isn't captured by the method name).
+    """
+
+    CACHEABLE_METHODS = ("exact_dp", "approx_dp")
+
+    def __init__(
+        self,
+        cache: Optional[PlanCache] = None,
+        profile: Optional[OpProfile] = None,
+        quantize_levels: Optional[int] = None,
+    ):
+        self.cache = default_cache() if cache is None else cache
+        self.profile = profile
+        self.quantize_levels = quantize_levels
+        # Tiny memo of the most recent canonical lower-set families:
+        # enumerating 𝓛_G is the dominant cold-path cost (§4.2), and one
+        # budget search + solve (or a multi-budget sweep) re-enumerates the
+        # same family many times.  Kept small — families can be exponential.
+        from collections import OrderedDict
+
+        self._family_memo: "OrderedDict[Tuple[str, str], List[NodeSet]]" = (
+            OrderedDict()
+        )
+
+    def family(self, g: Graph, method: str = "approx_dp") -> Sequence[NodeSet]:
+        """The canonical lower-set family for ``method`` (memoized).
+
+        Public so tooling (e.g. examples/plan_explorer.py) can inspect the
+        family without paying a second enumeration on top of the planner's.
+        """
+        return self._family_for(self.prepare(g), method)
+
+    def _family_for(self, gp: Graph, method: str) -> Sequence[NodeSet]:
+        key = (graph_digest(gp), method)
+        fam = self._family_memo.get(key)
+        if fam is None:
+            fam = list(_family(gp, method))
+            self._family_memo[key] = fam
+            while len(self._family_memo) > 4:
+                self._family_memo.popitem(last=False)
+        else:
+            self._family_memo.move_to_end(key)
+        return fam
+
+    # -------------------------------------------------------------- prepare
+
+    def prepare(self, g: Graph) -> Graph:
+        """Apply the measured cost model / quantization (identity without)."""
+        if self.profile is not None:
+            return calibrated_graph(
+                g, self.profile, levels=self.quantize_levels or 64
+            )
+        if self.quantize_levels:
+            return dp_mod.quantize_times(g, levels=self.quantize_levels)
+        return g
+
+    # ---------------------------------------------------------------- solve
+
+    def solve(
+        self,
+        g: Graph,
+        budget: float,
+        method: str = "approx_dp",
+        objective: str = "time_centric",
+        family: Optional[Sequence[NodeSet]] = None,
+        prepared: bool = False,
+    ) -> DPResult:
+        """Algorithm 1 through the cache; bit-identical to an uncached solve."""
+        gp = g if prepared else self.prepare(g)
+        cacheable = (
+            self.cache is not None
+            and family is None
+            and method in self.CACHEABLE_METHODS
+        )
+        key = None
+        if cacheable:
+            key = PlanCache.key_for(gp, budget, method, objective)
+            hit = self.cache.get(gp, key)
+            if hit is not None:
+                return hit
+        fam = list(family) if family is not None else self._family_for(gp, method)
+        res = solve(gp, budget, fam, objective)
+        if cacheable:
+            self.cache.put(gp, key, res)
+        return res
+
+    def min_feasible_budget(
+        self,
+        g: Graph,
+        method: str = "approx_dp",
+        tol: float = 1e-3,
+        family: Optional[Sequence[NodeSet]] = None,
+        prepared: bool = False,
+    ) -> float:
+        gp = g if prepared else self.prepare(g)
+        cacheable = self.cache is not None and family is None
+        aux_key = None
+        if cacheable:
+            aux_key = f"{graph_digest(gp)}|{method}|{tol!r}"
+            v = self.cache.get_aux("min_budget", aux_key)
+            if v is not None:
+                return v
+        fam = family if family is not None else self._family_for(gp, method)
+        b = _min_feasible_budget_uncached(gp, method, tol, fam)
+        if cacheable:
+            self.cache.put_aux("min_budget", aux_key, b)
+        return b
+
+    # ----------------------------------------------------------------- plan
+
+    def plan(
+        self,
+        g: Graph,
+        budget: Optional[float] = None,
+        method: str = "approx_dp",
+        objective: str = "time_centric",
+    ) -> PlanReport:
+        """Solve and lower to an ExecutionPlan (cached for the DP methods).
+
+        budget=None reproduces the paper's protocol: minimal feasible B.
+        method ∈ {"exact_dp", "approx_dp", "chen", "vanilla"}.
+        """
+        t0 = _time.perf_counter()
+        gp = self.prepare(g)
+        full = frozenset(range(gp.n))
+
+        if method == "vanilla":
+            res = DPResult(
+                sequence=[full],
+                overhead=0.0,
+                peak_memory=dp_mod.peak_memory(gp, [full]),
+                feasible=True,
+            )
+        elif method == "chen":
+            res = chen_sqrt_n(gp, budget=None)
+        else:
+            if budget is None:
+                budget = self.min_feasible_budget(gp, method, prepared=True)
+            res = self.solve(gp, budget, method, objective, prepared=True)
+        dt = _time.perf_counter() - t0
+
+        if not res.feasible:
+            return PlanReport(
+                method=method,
+                objective=objective if method.endswith("dp") else "-",
+                budget=budget if budget is not None else float("nan"),
+                result=res,
+                plan=None,
+                peak_with_liveness=float("inf"),
+                peak_without_liveness=float("inf"),
+                plan_seconds=dt,
+            )
+
+        ep = make_plan(gp, res.sequence)
+        sim_live = simulate(gp, res.sequence, liveness=True)
+        sim_nolive = simulate(gp, res.sequence, liveness=False)
+        return PlanReport(
+            method=method,
+            objective=objective if method.endswith("dp") else "-",
+            budget=budget if budget is not None else res.peak_memory,
+            result=res,
+            plan=ep,
+            peak_with_liveness=sim_live.peak_memory,
+            peak_without_liveness=sim_nolive.peak_memory,
+            plan_seconds=dt,
+        )
+
+
+_DEFAULT_PLANNER = Planner()
+
+
+def get_default_planner() -> Planner:
+    """The process-wide Planner behind the module-level functions."""
+    return _DEFAULT_PLANNER
+
+
+def min_feasible_budget(
+    g: Graph,
+    method: str = "approx_dp",
+    tol: float = 1e-3,
+    family: Optional[Sequence[NodeSet]] = None,
+) -> float:
+    """§5.1 minimal-feasible-budget search (cached via the default Planner)."""
+    return _DEFAULT_PLANNER.min_feasible_budget(g, method, tol, family)
+
+
 def plan(
     g: Graph,
     budget: Optional[float] = None,
     method: str = "approx_dp",
     objective: str = "time_centric",
+    planner: Optional[Planner] = None,
 ) -> PlanReport:
-    """Solve and lower to an ExecutionPlan.
+    """Solve and lower to an ExecutionPlan (one-call front door).
 
-    budget=None reproduces the paper's protocol: minimal feasible B.
-    method ∈ {"exact_dp", "approx_dp", "chen", "vanilla"}.
+    Routes through the process-default ``Planner`` — repeated calls on the
+    same (graph, budget) hit the plan cache instead of re-running the DP.
     """
-    t0 = _time.perf_counter()
-    full = frozenset(range(g.n))
-
-    if method == "vanilla":
-        res = DPResult(
-            sequence=[full],
-            overhead=0.0,
-            peak_memory=dp_mod.peak_memory(g, [full]),
-            feasible=True,
-        )
-    elif method == "chen":
-        res = chen_sqrt_n(g, budget=None)
-    else:
-        fam = list(_family(g, method))
-        if budget is None:
-            budget = min_feasible_budget(g, method, family=fam)
-        res = solve(g, budget, fam, objective)
-    dt = _time.perf_counter() - t0
-
-    if not res.feasible:
-        return PlanReport(
-            method=method,
-            objective=objective if method.endswith("dp") else "-",
-            budget=budget if budget is not None else float("nan"),
-            result=res,
-            plan=None,
-            peak_with_liveness=float("inf"),
-            peak_without_liveness=float("inf"),
-            plan_seconds=dt,
-        )
-
-    ep = make_plan(g, res.sequence)
-    sim_live = simulate(g, res.sequence, liveness=True)
-    sim_nolive = simulate(g, res.sequence, liveness=False)
-    return PlanReport(
-        method=method,
-        objective=objective if method.endswith("dp") else "-",
-        budget=budget if budget is not None else res.peak_memory,
-        result=res,
-        plan=ep,
-        peak_with_liveness=sim_live.peak_memory,
-        peak_without_liveness=sim_nolive.peak_memory,
-        plan_seconds=dt,
-    )
+    return (planner or _DEFAULT_PLANNER).plan(g, budget, method, objective)
 
 
 def compare_methods(

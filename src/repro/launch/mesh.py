@@ -21,22 +21,26 @@ HBM_BYTES = 16 * 1024**3  # 16 GiB per chip
 
 
 def _auto(n):
-    from jax.sharding import AxisType
+    from repro.parallel.compat import AxisType
 
     return (AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.parallel.compat import make_mesh
+
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=_auto(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
     """Whatever this host has (tests / examples): (n_dev/model, model)."""
+    from repro.parallel.compat import make_mesh
+
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((n // model, model), ("data", "model"), axis_types=_auto(2))
 
 
 def mesh_num_devices(mesh) -> int:

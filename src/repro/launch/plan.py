@@ -20,12 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core import Graph, exact_dp
+from repro.core import Graph
 from repro.core.dp import DPResult, quantize_times
 from repro.core.graph import Node
+from repro.core.planner import get_default_planner
 from repro.launch.mesh import HBM_BYTES
 from repro.models.transformer import unit_pattern
 
@@ -198,6 +200,25 @@ class SegmentPlan:
         return len(self.sizes)
 
 
+def _dp_chain_graph(pi: PlanInputs, measured: Optional[bool] = None) -> Graph:
+    """Chain graph with the DP's integer t-axis.
+
+    With measured costs (``measured=True`` or ``REPRO_MEASURED_COSTS=1``) the
+    interior/boundary nodes are priced by the profiled cost model
+    (FLOPs·matmul-rate vs bytes·HBM-rate) before quantization, so the DP
+    trades real seconds, not FLOP proxies.  Default stays analytic —
+    profiling costs a one-off timing run per backend.
+    """
+    raw = chain_graph(pi)
+    if measured is None:
+        measured = bool(os.environ.get("REPRO_MEASURED_COSTS"))
+    if measured:
+        from repro.core.cost_model import calibrated_graph, load_or_profile
+
+        return calibrated_graph(raw, load_or_profile(), levels=32)
+    return quantize_times(raw, levels=32)
+
+
 def plan_unit_segments(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -207,12 +228,18 @@ def plan_unit_segments(
     n_micro: int = 1,
     budget: Optional[float] = None,
     objective: str = "time_centric",
+    measured_costs: Optional[bool] = None,
 ) -> Tuple[SegmentPlan, DPResult]:
-    """One-call front door used by the launchers and the dry-run."""
+    """One-call front door used by the launchers and the dry-run.
+
+    Solves through the process-default ``Planner``: repeated cells of the
+    dry-run matrix, microbatch escalation retries, and job restarts hit the
+    plan cache instead of re-running the exact DP.
+    """
     pi = plan_inputs(cfg, shape, dp_shards, seq_shards, model_shards, n_micro)
-    g = quantize_times(chain_graph(pi), levels=32)
+    g = _dp_chain_graph(pi, measured_costs)
     B = budget if budget is not None else pi.budget
-    res = exact_dp(g, B, objective=objective)
+    res = get_default_planner().solve(g, B, "exact_dp", objective)
     if not res.feasible:
         sp = SegmentPlan(tuple(1 for _ in range(pi.n_units)),
                          tuple(True for _ in range(pi.n_units)), n_micro)

@@ -27,6 +27,8 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan-cache-dir", default=None,
+                    help="shared on-disk recomputation-plan cache")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -40,7 +42,8 @@ def main(argv=None):
         kw["frames"] = jax.random.normal(
             jax.random.PRNGKey(1), (args.slots, cfg.frontend_seq, cfg.d_model)
         )
-    eng = Engine(model, params, max_slots=args.slots, max_seq=args.max_seq, **kw)
+    eng = Engine(model, params, max_slots=args.slots, max_seq=args.max_seq,
+                 plan_cache_dir=args.plan_cache_dir, **kw)
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):

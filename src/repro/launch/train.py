@@ -22,6 +22,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import segment_plan
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
+from repro.parallel.compat import set_mesh
 from repro.train import TrainConfig, Trainer
 
 
@@ -36,6 +37,8 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--plan-cache-dir", default=None,
+                    help="on-disk recomputation-plan cache (restart = lookup)")
     ap.add_argument("--objective", default="time_centric",
                     choices=["time_centric", "memory_centric"])
     ap.add_argument("--no-plan", action="store_true",
@@ -48,6 +51,11 @@ def main(argv=None):
     model = build_model(cfg)
     mesh = make_host_mesh()
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    if args.plan_cache_dir:
+        from repro.core.plan_cache import set_default_cache_dir
+
+        set_default_cache_dir(args.plan_cache_dir)
 
     segment_sizes = segment_remat = None
     if not args.no_plan:
@@ -71,11 +79,12 @@ def main(argv=None):
         total_steps=args.steps,
         ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir,
+        plan_cache_dir=args.plan_cache_dir,
         log_every=max(1, args.steps // 20),
         optimizer=AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
                               total_steps=args.steps),
     )
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         tr = Trainer(loss_fn, params, tc, mesh=mesh)
         if tr.maybe_restore():
             print(f"restored from step {tr.step}")

@@ -157,8 +157,10 @@ def moe_apply(
 ):
     """x: (B, S, D) → (B, S, D)[, aux-loss scalars]."""
     if not return_aux:
+        from repro.parallel.compat import get_abstract_mesh
+
         try:
-            mesh = jax.sharding.get_abstract_mesh()
+            mesh = get_abstract_mesh()
             has_mesh = mesh is not None and mesh.axis_names and not mesh.empty
         except Exception:
             has_mesh = False

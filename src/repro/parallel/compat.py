@@ -1,0 +1,107 @@
+"""JAX version-compat shims for the sharding/mesh surface.
+
+The mesh API moved several times across JAX releases:
+
+* ``jax.sharding.get_abstract_mesh`` (context abstract mesh) — newer
+  releases only; older ones expose a private, incompatible variant (or
+  nothing) under ``jax._src.mesh``.
+* ``jax.sharding.AxisType`` — newer releases; older ones have the private
+  ``jax._src.mesh.AxisTypes`` enum (with ``Auto``) or nothing at all.
+* ``jax.make_mesh(..., axis_types=...)`` — the keyword only exists where
+  ``AxisType`` does.
+* ``jax.sharding.set_mesh`` — newer context-manager entry point; older
+  releases use ``with mesh:``.
+
+Every call site in this repo goes through the helpers below instead of
+feature-testing inline, so the supported-JAX window is defined in exactly
+one place.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+class _AxisTypeFallback(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on JAX versions without it.
+
+    Only the member names matter: call sites build ``(AxisType.Auto,) * n``
+    tuples that ``make_mesh`` (below) silently drops when the installed JAX
+    cannot accept them.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeFallback)
+
+_HAS_NATIVE_AXIS_TYPE = AxisType is not _AxisTypeFallback
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or ``None`` when unavailable.
+
+    Returns ``None`` (never raises) when the installed JAX predates
+    ``jax.sharding.get_abstract_mesh`` or when the ambient mesh is empty —
+    callers treat "no mesh" and "no API" identically (replicate/no-op).
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    try:
+        mesh = fn()
+    except Exception:
+        return None
+    # Guard against shape-incompatible private variants: the callers need
+    # ``axis_names`` at minimum.
+    if mesh is None or not hasattr(mesh, "axis_names"):
+        return None
+    return mesh
+
+
+def _make_mesh_accepts_axis_types() -> bool:
+    if not _HAS_NATIVE_AXIS_TYPE:
+        return False
+    try:
+        return "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[Tuple] = None,
+    devices=None,
+):
+    """``jax.make_mesh`` that drops ``axis_types`` on JAX versions without it."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and _make_mesh_accepts_axis_types():
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Prefers ``jax.sharding.set_mesh`` (new API); falls back to the classic
+    ``with mesh:`` resource-env context on older releases.
+    """
+    fn = getattr(jax.sharding, "set_mesh", None) or getattr(jax, "set_mesh", None)
+    if fn is not None:
+        # Let real errors (bad axis types, usage errors) propagate — silently
+        # falling back would leave the model unsharded with no signal.
+        return fn(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)

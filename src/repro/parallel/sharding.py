@@ -26,6 +26,8 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.compat import get_abstract_mesh
+
 
 Rules = Dict[str, Any]  # logical name -> mesh axis (str | tuple | None)
 
@@ -93,7 +95,7 @@ def get_rules() -> Rules:
 def _mesh_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
     if mesh is not None:
         return tuple(mesh.axis_names)
-    env = jax.sharding.get_abstract_mesh()
+    env = get_abstract_mesh()
     try:
         return tuple(env.axis_names) if env is not None else ()
     except Exception:
@@ -112,7 +114,7 @@ def resolve(
     the expert-capacity fallback) instead of being consumed and dropped.
     """
     axes = set(_mesh_axes(mesh))
-    sizes = _axis_sizes(mesh if mesh is not None else jax.sharding.get_abstract_mesh())
+    sizes = _axis_sizes(mesh if mesh is not None else get_abstract_mesh())
     used: set = set()
     spec = []
     for i, name in enumerate(logical):
@@ -172,7 +174,7 @@ def drop_indivisible(spec: P, shape: Tuple[int, ...], axis_sizes: Dict[str, int]
 def shard(x, *logical: Optional[str]):
     """with_sharding_constraint by logical axis names (no-op without a mesh)."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
         if mesh is None or not mesh.axis_names or mesh.empty:
             return x
     except Exception:

@@ -48,7 +48,17 @@ class Engine:
         max_seq: int = 512,
         rng_seed: int = 0,
         frames: Optional[jax.Array] = None,
+        plan_cache_dir: Optional[str] = None,
     ):
+        # Serving processes are usually co-located with (or restarted from)
+        # training jobs; attaching the same on-disk plan cache means any
+        # planning this process does (e.g. prefill remat segmentation via
+        # launch.plan) is a content-addressed lookup, and plans solved here
+        # are visible to the trainers.
+        if plan_cache_dir:
+            from repro.core.plan_cache import set_default_cache_dir
+
+            set_default_cache_dir(plan_cache_dir)
         self.model = model
         self.params = params
         self.max_slots = max_slots

@@ -19,7 +19,10 @@ Responsibilities (each one individually testable — see tests/test_train_loop.p
   directly);
 * **elastic re-mesh** — ``Trainer.remesh(new_mesh)`` re-jits the step and
   reshard-restores the live state onto the new mesh via the mesh-agnostic
-  checkpoint format.
+  checkpoint format;
+* **plan cache** — ``plan_cache_dir`` attaches the on-disk recomputation-plan
+  store (core.plan_cache): crash-restarts and elastic re-meshes recover their
+  DP remat segmentation as a content-addressed lookup instead of a re-solve.
 """
 
 from __future__ import annotations
@@ -50,6 +53,10 @@ class TrainConfig:
     straggler_factor: float = 3.0
     ewma_alpha: float = 0.1
     compress_grads: bool = False
+    # On-disk recomputation-plan cache (core.plan_cache): a restarted or
+    # re-meshed job re-plans its remat segmentation from the store instead of
+    # re-running the DP.  None keeps the cache in-memory only.
+    plan_cache_dir: Optional[str] = None
     optimizer: adamw.AdamWConfig = dataclasses.field(
         default_factory=adamw.AdamWConfig
     )
@@ -68,6 +75,10 @@ class Trainer:
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.mesh = mesh
+        if cfg.plan_cache_dir:
+            from repro.core.plan_cache import set_default_cache_dir
+
+            set_default_cache_dir(cfg.plan_cache_dir)
         # Private copy: the jitted step donates params/opt-state buffers, and
         # donating the *caller's* arrays would delete them under the caller
         # (breaks restart-from-same-init and interactive use).

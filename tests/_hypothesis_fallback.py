@@ -1,0 +1,141 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API this suite uses.
+
+The container has no network access, so ``pip install hypothesis`` is not
+always possible.  ``conftest.py`` installs this module under the name
+``hypothesis`` *only when the real package is missing*, so the test modules
+keep their ordinary ``from hypothesis import given, settings, strategies``
+imports and transparently upgrade to real property-based testing wherever
+hypothesis is installed (CI does install it via the ``dev`` extra).
+
+Supported surface (exactly what the suite needs):
+
+* ``given(*strategies)`` — deterministic example-based fallback: draws
+  ``max_examples`` pseudo-random examples from each strategy (seeded by the
+  test name, so failures reproduce) and runs the test body once per example.
+* ``settings(max_examples=..., deadline=...)`` — records ``max_examples``;
+  ``deadline`` is ignored.
+* ``strategies.integers / floats / lists / data / sampled_from / booleans``.
+
+No shrinking, no example database — this is a fallback, not a replacement.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import random
+from typing import Any, Callable, List, Optional
+
+DEFAULT_MAX_EXAMPLES = 50
+
+__version__ = "0.0-fallback"
+
+
+class Strategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw = draw_fn
+
+    def example_from(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+
+class DataObject:
+    """The object handed to tests using ``st.data()``."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: Strategy, label: Optional[str] = None) -> Any:
+        return strategy.example_from(self._rnd)
+
+
+class _DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(lambda rnd: DataObject(rnd))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int = -(2**31), max_value: int = 2**31) -> Strategy:
+        return Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> Strategy:
+        return Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rnd: rnd.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(options) -> Strategy:
+        opts = list(options)
+        return Strategy(lambda rnd: rnd.choice(opts))
+
+    @staticmethod
+    def lists(
+        elements: Strategy,
+        min_size: int = 0,
+        max_size: Optional[int] = None,
+        unique: bool = False,
+    ) -> Strategy:
+        def draw(rnd: random.Random):
+            hi = max_size if max_size is not None else min_size + 8
+            size = rnd.randint(min_size, max(min_size, hi))
+            out: List[Any] = []
+            attempts = 0
+            while len(out) < size and attempts < 50 * (size + 1):
+                x = elements.example_from(rnd)
+                attempts += 1
+                if unique and x in out:
+                    continue
+                out.append(x)
+            return out
+
+        return Strategy(draw)
+
+    @staticmethod
+    def data() -> Strategy:
+        return _DataStrategy()
+
+
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_kw):
+    """Decorator recording ``max_examples`` on the (given-wrapped) test."""
+
+    def apply(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return apply
+
+
+def given(*strats: Strategy, **kw_strats: Strategy):
+    def decorate(test_fn):
+        def runner(*fixture_args, **fixture_kw):
+            n = getattr(runner, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = int.from_bytes(
+                hashlib.sha256(
+                    f"{test_fn.__module__}.{test_fn.__qualname__}".encode()
+                ).digest()[:8],
+                "big",
+            )
+            rnd = random.Random(seed)
+            for _ in range(n):
+                args = [s.example_from(rnd) for s in strats]
+                kwargs = {k: s.example_from(rnd) for k, s in kw_strats.items()}
+                test_fn(*fixture_args, *args, **fixture_kw, **kwargs)
+
+        # NOTE: no functools.wraps — pytest follows __wrapped__ to the original
+        # signature and would try to inject the strategy params as fixtures.
+        runner.__name__ = test_fn.__name__
+        runner.__qualname__ = test_fn.__qualname__
+        runner.__module__ = test_fn.__module__
+        runner.__doc__ = test_fn.__doc__
+        runner.hypothesis_fallback = True
+        return runner
+
+    return decorate

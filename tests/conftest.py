@@ -6,8 +6,18 @@ host's single device; only launch/dryrun.py forces 512 placeholder devices
 """
 
 import random
+import sys
 
 import pytest
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Offline container: register the minimal fallback under the real name so
+    # test modules keep their ordinary `from hypothesis import ...` imports.
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
 
 from repro.core.graph import Graph, Node
 

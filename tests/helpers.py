@@ -1,0 +1,21 @@
+"""Shared pure-Python test helpers (importable from any test module).
+
+Kept separate from ``conftest.py`` so test modules can import them with a
+plain ``from helpers import ...`` — cross-importing between test *modules*
+(e.g. ``from test_graph import ...``) breaks under isolated collection
+(``pytest tests/test_lower_sets.py`` alone, or xdist workers).
+"""
+
+import itertools
+
+from repro.core.graph import Graph
+
+
+def brute_lower_sets(g: Graph):
+    """All lower sets of ``g`` by brute force over 2^V — the test oracle."""
+    out = set()
+    for r in range(g.n + 1):
+        for comb in itertools.combinations(range(g.n), r):
+            if g.is_lower_set(comb):
+                out.add(frozenset(comb))
+    return out

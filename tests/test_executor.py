@@ -112,3 +112,34 @@ def test_live_trace_respects_plan_ordering(setup):
     fwd_peak = max(b for tag, b in trace if tag.startswith("fwd"))
     bwd_peak = max(b for tag, b in trace if tag.startswith("bwd"))
     assert bwd_peak >= fwd_peak
+
+
+def test_budgeted_executor_plans_through_cache(setup):
+    """planned_value_and_grad_under_budget: gradients match vanilla, and
+    rebuilding the runner reuses the cached DP solution."""
+    from repro.core import PlanCache, Planner
+    from repro.core.executor import planned_value_and_grad_under_budget
+
+    bg, params, inputs, loss_fn = setup
+    planner = Planner(cache=PlanCache())
+    run, report = planned_value_and_grad_under_budget(
+        bg, params, inputs, loss_fn, budget=None, method="exact_dp",
+        planner=planner,
+    )
+    assert report.feasible
+    loss, grads = run(params, inputs)
+    ref_loss, ref_grads = vanilla_value_and_grad(bg, loss_fn)(params, inputs)
+    assert jnp.allclose(loss, ref_loss, rtol=1e-6)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6),
+        grads,
+        ref_grads,
+    )
+    # rebuild: the solve is a cache hit, the plans identical
+    run2, report2 = planned_value_and_grad_under_budget(
+        bg, params, inputs, loss_fn, budget=None, method="exact_dp",
+        planner=planner,
+    )
+    assert planner.cache.stats()["hits"] >= 1
+    assert report2.result.sequence == report.result.sequence
+    assert report2.plan == report.plan

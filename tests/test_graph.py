@@ -1,6 +1,5 @@
 """§2 graph language: δ±, lower sets, boundaries — unit + property tests."""
 
-import itertools
 import random
 
 import pytest
@@ -9,15 +8,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.graph import EMPTY, Graph, Node, chain, from_cost_lists
 
 from conftest import random_dag
-
-
-def brute_lower_sets(g: Graph):
-    out = set()
-    for r in range(g.n + 1):
-        for comb in itertools.combinations(range(g.n), r):
-            if g.is_lower_set(comb):
-                out.add(frozenset(comb))
-    return out
+from helpers import brute_lower_sets
 
 
 def test_three_layer_perceptron_example():

@@ -14,7 +14,7 @@ from repro.core.lower_sets import (
 )
 
 from conftest import random_dag
-from test_graph import brute_lower_sets
+from helpers import brute_lower_sets
 
 
 def test_all_lower_sets_matches_bruteforce(rng):

@@ -1,0 +1,319 @@
+"""Plan compilation pipeline: digest, cache, cost model, cached planner."""
+
+import random
+
+import pytest
+
+from repro.core import (
+    OpProfile,
+    PlanCache,
+    Planner,
+    exact_dp,
+    min_feasible_budget,
+    plan,
+)
+from repro.core.cost_model import (
+    DEFAULT_PROFILE,
+    calibrated_graph,
+    load_or_profile,
+    measured_times,
+)
+from repro.core.graph import (
+    Graph,
+    Node,
+    canonical_maps,
+    chain,
+    from_cost_lists,
+    graph_digest,
+)
+
+from conftest import random_dag
+
+
+def permute_graph(g: Graph, perm):
+    """Isomorphic copy of ``g`` with node v renamed to perm[v]."""
+    nodes = [None] * g.n
+    for v in range(g.n):
+        old = g.nodes[v]
+        nodes[perm[v]] = Node(perm[v], f"p{perm[v]}", old.time, old.memory, old.kind)
+    return Graph(nodes, [(perm[a], perm[b]) for a, b in g.edges])
+
+
+# ----------------------------------------------------------------- digests
+
+
+def test_digest_stable_under_node_id_permutation(rng):
+    for trial in range(60):
+        g = random_dag(rng, rng.randint(1, 9))
+        perm = list(range(g.n))
+        rng.shuffle(perm)
+        assert graph_digest(g) == graph_digest(permute_graph(g, perm)), trial
+
+
+def test_digest_changes_with_costs_edges_kinds(rng):
+    g = random_dag(rng, 6)
+    d = graph_digest(g)
+    # time change
+    n2 = [Node(n.idx, n.name, n.time + 1.0, n.memory, n.kind) for n in g.nodes]
+    assert graph_digest(Graph(n2, g.edges)) != d
+    # memory change
+    n3 = [Node(n.idx, n.name, n.time, n.memory * 2.0, n.kind) for n in g.nodes]
+    assert graph_digest(Graph(n3, g.edges)) != d
+    # kind change
+    n4 = [Node(n.idx, n.name, n.time, n.memory, "conv") for n in g.nodes]
+    assert graph_digest(Graph(n4, g.edges)) != d
+    # edge change (drop one)
+    if g.edges:
+        e = sorted(g.edges)[:-1]
+        assert graph_digest(Graph(list(g.nodes), e)) != d
+    # names do NOT matter
+    n5 = [Node(n.idx, f"renamed{n.idx}", n.time, n.memory, n.kind) for n in g.nodes]
+    assert graph_digest(Graph(n5, g.edges)) == d
+
+
+def test_canonical_maps_roundtrip():
+    g = chain(7)
+    to_pos, from_pos = canonical_maps(g)
+    assert sorted(to_pos) == list(range(7))
+    assert [to_pos[from_pos[i]] for i in range(7)] == list(range(7))
+
+
+# ------------------------------------------------------------- cache logic
+
+
+def _budget(g, slack=1.5):
+    return min_feasible_budget(g, "exact_dp") * slack
+
+
+def test_cache_hit_and_miss_semantics(rng):
+    g = random_dag(rng, 6)
+    B = _budget(g)
+    c = PlanCache()
+    p = Planner(cache=c)
+    first = p.solve(g, B, "exact_dp")
+    assert c.stats()["misses"] == 1 and c.stats()["hits"] == 0
+    second = p.solve(g, B, "exact_dp")
+    assert c.stats()["hits"] == 1
+    assert second.sequence == first.sequence
+    assert second.overhead == first.overhead
+    assert second.peak_memory == first.peak_memory
+    # different budget / objective / method → miss
+    p.solve(g, B * 1.01, "exact_dp")
+    p.solve(g, B, "exact_dp", "memory_centric")
+    p.solve(g, B, "approx_dp")
+    assert c.stats()["hits"] == 1 and c.stats()["misses"] == 4
+
+
+def test_cached_plan_equals_fresh_solve(rng):
+    """Regression: DP results identical with and without the cache."""
+    for trial in range(20):
+        g = random_dag(rng, rng.randint(2, 6))
+        B = _budget(g, 1.0 + 0.2 * (trial % 4))
+        fresh = exact_dp(g, B)
+        p = Planner(cache=PlanCache())
+        p.solve(g, B, "exact_dp")  # populate
+        cached = p.solve(g, B, "exact_dp")  # hit
+        assert cached.feasible == fresh.feasible
+        if fresh.feasible:
+            assert cached.sequence == fresh.sequence
+            assert cached.overhead == fresh.overhead
+            assert cached.peak_memory == fresh.peak_memory
+
+
+def test_cache_transfers_between_isomorphic_labelings(rng):
+    from repro.core.dp import overhead, peak_memory
+
+    g = random_dag(rng, 6)
+    perm = list(range(6))
+    rng.shuffle(perm)
+    g2 = permute_graph(g, perm)
+    B = _budget(g)
+    c = PlanCache()
+    p = Planner(cache=c)
+    r1 = p.solve(g, B, "exact_dp")
+    r2 = p.solve(g2, B, "exact_dp")
+    assert c.stats()["hits"] == 1  # digest matched, plan relabeled
+    # the relabeled plan is exactly the permuted sequence, and costs agree
+    assert [frozenset(perm[v] for v in L) for L in r1.sequence] == r2.sequence
+    g2.check_increasing_sequence(r2.sequence)
+    assert overhead(g2, r2.sequence) == pytest.approx(r1.overhead)
+    assert peak_memory(g2, r2.sequence) <= B + 1e-9
+
+
+def test_on_disk_round_trip(tmp_path, rng):
+    g = random_dag(rng, 5)
+    B = _budget(g)
+    store = str(tmp_path / "plans")
+    p1 = Planner(cache=PlanCache(cache_dir=store))
+    first = p1.solve(g, B, "exact_dp")
+    # fresh in-memory cache over the same store = restarted process
+    c2 = PlanCache(cache_dir=store)
+    p2 = Planner(cache=c2)
+    again = p2.solve(g, B, "exact_dp")
+    assert c2.stats()["disk_hits"] == 1
+    assert again.sequence == first.sequence
+    assert again.overhead == first.overhead
+    assert again.peak_memory == first.peak_memory
+
+
+def test_corrupt_disk_entry_degrades_to_miss(tmp_path, rng):
+    import os
+
+    g = random_dag(rng, 5)
+    B = _budget(g)
+    store = str(tmp_path / "plans")
+    p1 = Planner(cache=PlanCache(cache_dir=store))
+    p1.solve(g, B, "exact_dp")
+    # truncate every stored file
+    for root, _dirs, files in os.walk(store):
+        for f in files:
+            with open(os.path.join(root, f), "w") as fh:
+                fh.write("{not json")
+    c2 = PlanCache(cache_dir=store)
+    res = Planner(cache=c2).solve(g, B, "exact_dp")  # re-solves, no crash
+    assert res.feasible
+    assert c2.stats()["disk_hits"] == 0
+
+
+def test_wrong_shape_json_degrades_to_miss(tmp_path, rng):
+    """Valid JSON of the wrong shape (list/scalar) must read as a miss, for
+    both plan entries and aux (min-budget) entries."""
+    import os
+
+    g = random_dag(rng, 5)
+    store = str(tmp_path / "plans")
+    p1 = Planner(cache=PlanCache(cache_dir=store))
+    rep = p1.plan(g, method="exact_dp")  # writes a plan AND an aux entry
+    for root, _dirs, files in os.walk(store):
+        for f in files:
+            with open(os.path.join(root, f), "w") as fh:
+                fh.write("[1, 2, 3]")
+    p2 = Planner(cache=PlanCache(cache_dir=store))
+    rep2 = p2.plan(g, method="exact_dp")  # re-solves, no crash
+    assert rep2.result.sequence == rep.result.sequence
+    assert rep2.budget == pytest.approx(rep.budget)
+
+
+def test_unusable_cache_dir_degrades_to_memory_only(tmp_path, rng):
+    """A cache store that cannot be written (path collides with a file) must
+    degrade to memory-only caching, never crash planning."""
+    bad = tmp_path / "store"
+    bad.write_text("i am a file, not a directory")
+    g = random_dag(rng, 5)
+    B = _budget(g)
+    c = PlanCache(cache_dir=str(bad))
+    p = Planner(cache=c)
+    res = p.solve(g, B, "exact_dp")
+    assert res.feasible
+    assert c.stats()["disk_errors"] >= 1
+    # in-memory tier still works
+    p.solve(g, B, "exact_dp")
+    assert c.stats()["hits"] == 1
+
+
+def test_cost_change_invalidates_cache(rng):
+    """Changing any node cost changes the digest → cache miss, fresh solve."""
+    g = random_dag(rng, 5)
+    B = _budget(g)
+    c = PlanCache()
+    p = Planner(cache=c)
+    p.solve(g, B, "exact_dp")
+    bumped = Graph(
+        [Node(n.idx, n.name, n.time, n.memory * 1.5, n.kind) for n in g.nodes],
+        g.edges,
+    )
+    p.solve(bumped, B, "exact_dp")
+    assert c.stats()["hits"] == 0 and c.stats()["misses"] == 2
+
+
+def test_custom_family_bypasses_cache(rng):
+    from repro.core.lower_sets import all_lower_sets
+
+    g = random_dag(rng, 4)
+    B = _budget(g)
+    c = PlanCache()
+    p = Planner(cache=c)
+    fam = all_lower_sets(g)
+    p.solve(g, B, "exact_dp", family=fam)
+    p.solve(g, B, "exact_dp", family=fam)
+    assert c.stats()["hits"] == 0 and c.stats()["misses"] == 0
+
+
+def test_lru_eviction():
+    c = PlanCache(capacity=2)
+    gs = [chain(n) for n in (3, 4, 5)]
+    p = Planner(cache=c)
+    for g in gs:
+        p.solve(g, 100.0, "exact_dp")
+    assert c.stats()["entries_in_memory"] == 2
+    # oldest evicted → miss; newest still hit
+    p.solve(gs[0], 100.0, "exact_dp")
+    assert c.stats()["hits"] == 0
+
+
+def test_plan_front_door_cached_and_identical(rng):
+    g = random_dag(rng, 5)
+    r1 = plan(g, method="exact_dp")
+    r2 = plan(g, method="exact_dp")
+    assert r1.result.sequence == r2.result.sequence
+    assert r1.result.overhead == r2.result.overhead
+    assert r1.budget == r2.budget  # min-feasible budget search cached too
+
+
+# ----------------------------------------------------------- cost model
+
+
+def test_measured_times_prices_by_kind():
+    g = from_cost_lists(
+        [1e9, 1e9], [1e6, 1e6], [(0, 1)], kinds=["dot_general", "elementwise"]
+    )
+    prof = OpProfile(
+        sec_per_flop_matmul=1e-12,
+        sec_per_flop_attention=2e-12,
+        sec_per_byte_elementwise=1e-9,
+        backend="test",
+    )
+    m = measured_times(g, prof)
+    assert m.time_v[0] == pytest.approx(1e9 * 1e-12)  # flops · matmul rate
+    assert m.time_v[1] == pytest.approx(1e6 * 1e-9)  # bytes · HBM rate
+    q = calibrated_graph(g, prof, levels=64)
+    assert all(t >= 1 and float(t).is_integer() for t in q.time_v)
+
+
+def test_calibration_changes_digest_and_plans_dont_alias():
+    g = from_cost_lists(
+        [1e9, 1e9, 1e9], [8.0, 8.0, 8.0], [(0, 1), (1, 2)],
+        kinds=["dot_general"] * 3,
+    )
+    cal = calibrated_graph(g, DEFAULT_PROFILE, levels=32)
+    assert graph_digest(cal) != graph_digest(g)
+
+
+def test_load_or_profile_disk_cached(tmp_path):
+    calls = []
+
+    def fake_profiler():
+        calls.append(1)
+        return DEFAULT_PROFILE
+
+    d = str(tmp_path)
+    p1 = load_or_profile(cache_dir=d, profiler=fake_profiler)
+    p2 = load_or_profile(cache_dir=d, profiler=fake_profiler)
+    assert len(calls) == 1  # second load came from disk
+    assert p1 == p2
+
+
+def test_planner_with_profile_prepares_graph(rng):
+    g = from_cost_lists(
+        [2e9, 4e9, 2e9], [64.0, 64.0, 64.0], [(0, 1), (1, 2)],
+        kinds=["dot_general"] * 3,
+    )
+    p = Planner(cache=PlanCache(), profile=DEFAULT_PROFILE, quantize_levels=32)
+    gp = p.prepare(g)
+    assert all(float(t).is_integer() for t in gp.time_v)
+    B = min_feasible_budget(gp, "exact_dp") * 1.5
+    res = p.solve(g, B, "exact_dp")
+    assert res.feasible
+    # same calibrated problem → cache hit through the calibrated digest
+    p.solve(g, B, "exact_dp")
+    assert p.cache.stats()["hits"] == 1

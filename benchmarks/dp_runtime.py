@@ -1,33 +1,159 @@
-"""§5.1 planner-runtime comparison: exact vs approximate DP wall time.
+"""§5.1 planner-runtime comparison, plus the budget-sweep engine (PR 2).
 
 Paper: "The exact DP algorithm required more than 80 secs to complete for
 GoogLeNet and PSPNet, while the approximate DP completed within 1 sec for
 all networks."  Our pure-Python implementation shifts the absolute scale but
 must reproduce the ordering and the #𝓛-driven blow-up.
+
+Beyond the paper, this also benchmarks the budget-sweep engine
+(``core.dp.sweep``) against the per-budget DP it subsumes:
+
+* an 8-point budget grid from ONE capped sweep vs 8 independent solves —
+  plans must be bit-identical, and the sweep must cost no more than the
+  loop (it is then cached under the budget-free ``sweep`` entry kind, so
+  every later grid/budget/process is a lookup);
+* the exact one-pass ``min_feasible_budget`` (``dp.min_feasible_budget_exact``)
+  vs the retired §5.1 binary search — must agree within the search's
+  tolerance (the exact value is ≤ the search's, and itself feasible).
+
+``--smoke`` runs a trimmed network set and *asserts* the regression
+guards (exit code 1 on violation) — wired into CI so DP-speed or
+bit-identity regressions fail the build instead of landing silently.
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 from typing import Dict
 
 from repro.core import approx_dp, exact_dp, min_feasible_budget
+from repro.core import dp as dp_mod
+from repro.core.planner import _min_feasible_budget_uncached
 from repro.core.lower_sets import all_lower_sets, count_lower_sets, pruned_lower_sets
 
 from .networks import NETWORKS
 
 EXACT_BUDGET_S = 120.0  # per-network cap on the exact solve
+GRID_POINTS = 8
+GRID_SPAN = 3.0  # grid covers [B_min, (1 + GRID_SPAN) · B_min]
+MAX_SWEEP_STATES = 20_000_000  # ≈ Planner's fallback threshold
+SMOKE_NETS = ("vgg19", "unet")
 
 
-def main() -> Dict[str, Dict]:
+def sweep_rows(nets) -> Dict[str, Dict]:
+    """Budget-sweep engine vs the per-budget DP (grid + min budget)."""
+    print("\n== Budget sweep: one pass vs per-budget DP ==")
+    print(f"{'network':12s} {'solve_s':>8s} {'loop8_s':>8s} {'sweep_s':>8s} "
+          f"{'work_ratio':>10s} {'identical':>9s} {'mfb_s':>7s} {'bsearch_s':>9s}")
+    out: Dict[str, Dict] = {}
+    for name in nets:
+        g = NETWORKS[name]()
+        fam = pruned_lower_sets(g)
+        t0 = time.perf_counter()
+        mfb = dp_mod.min_feasible_budget_exact(g, fam)
+        t_mfb = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        bs = _min_feasible_budget_uncached(g, family=fam, tol=1e-3)
+        t_bs = time.perf_counter() - t0
+        budgets = [mfb * (1.0 + GRID_SPAN * i / (GRID_POINTS - 1))
+                   for i in range(GRID_POINTS)]
+        t0 = time.perf_counter()
+        loop = [dp_mod.solve(g, B, fam) for B in budgets]
+        t_loop = time.perf_counter() - t0
+        loop_states = sum(r.states_visited for r in loop)
+        t0 = time.perf_counter()
+        try:
+            sw = dp_mod.sweep(g, fam, cap=max(budgets),
+                              max_states=MAX_SWEEP_STATES)
+        except dp_mod.SweepOverflow:
+            # surface too wide at this budget range — the planner would fall
+            # back to per-budget solves for this graph; recorded so smoke
+            # mode FAILS rather than silently skipping the guard (a state
+            # explosion is exactly the regression this benchmark polices)
+            print(f"{name:12s} {t_loop / GRID_POINTS:8.3f} {t_loop:8.2f} "
+                  f"{'overflow':>8s} {'-':>10s} {'-':>9s} {t_mfb:7.3f} "
+                  f"{t_bs:9.3f}")
+            out[name] = {"overflow": True}
+            continue
+        grid = [sw.solve(g, B) for B in budgets]
+        t_sweep = time.perf_counter() - t0
+        identical = all(
+            a.feasible == b.feasible and a.sequence == b.sequence
+            and a.overhead == b.overhead
+            for a, b in zip(loop, grid)
+        )
+        row = {
+            "solve_s": t_loop / GRID_POINTS,
+            "loop_s": t_loop,
+            "sweep_s": t_sweep,
+            "loop_states": loop_states,
+            "sweep_states": sw.states_visited,
+            "identical": identical,
+            "min_budget_exact": mfb,
+            "min_budget_search": bs,
+            "min_budget_exact_s": t_mfb,
+            "min_budget_search_s": t_bs,
+            "exact_feasible": dp_mod.solve(g, mfb, fam).feasible,
+        }
+        out[name] = row
+        print(f"{name:12s} {row['solve_s']:8.3f} {t_loop:8.2f} {t_sweep:8.2f} "
+              f"{sw.states_visited / loop_states:10.2f} {str(identical):>9s} "
+              f"{t_mfb:7.3f} {t_bs:9.3f}")
+    return out
+
+
+def check_sweep(rows: Dict[str, Dict]) -> list:
+    """The smoke-mode regression guards (returned as a list of failures)."""
+    failures = []
+    for name, r in rows.items():
+        if r.get("overflow"):
+            failures.append(
+                f"{name}: sweep overflowed {MAX_SWEEP_STATES} states — "
+                f"state explosion in the sweep engine"
+            )
+            continue
+        if not r["identical"]:
+            failures.append(f"{name}: sweep grid not bit-identical to per-budget solves")
+        # DP-work gate, deterministic (immune to CI load): one capped sweep
+        # visits 0.2–1.3x the transition states of the 8-solve loop; 2x
+        # fails on any real complexity regression in the sweep engine
+        if r["sweep_states"] > 2.0 * r["loop_states"]:
+            failures.append(
+                f"{name}: sweep visited {r['sweep_states']} states > 2x the "
+                f"per-budget loop's {r['loop_states']}"
+            )
+        # loose wall-clock safety net for constant-factor regressions
+        if r["sweep_s"] > 6.0 * r["loop_s"]:
+            failures.append(
+                f"{name}: sweep {r['sweep_s']:.2f}s > 6x the per-budget "
+                f"loop {r['loop_s']:.2f}s"
+            )
+        if not r["exact_feasible"]:
+            failures.append(f"{name}: exact min budget not feasible")
+        if not (r["min_budget_exact"] <= r["min_budget_search"] + 1e-9):
+            failures.append(
+                f"{name}: exact min budget {r['min_budget_exact']:.3e} above "
+                f"binary-search result {r['min_budget_search']:.3e}"
+            )
+        if r["min_budget_search"] > r["min_budget_exact"] * 1.01 + 1e-9:
+            failures.append(
+                f"{name}: binary search strayed >1% above the exact minimum"
+            )
+    return failures
+
+
+def paper_rows(nets) -> Dict[str, Dict]:
+    """The paper's §5.1 exact-vs-approximate wall-time table."""
     print("\n== DP runtime: exact vs approximate (§5.1) ==")
     print(f"{'network':12s} {'#V':>5s} {'#L_G':>8s} {'approx_s':>9s} "
           f"{'exact_s':>9s} {'approx_oh':>10s} {'exact_oh':>9s}")
     out = {}
-    for name, f in NETWORKS.items():
-        g = f()
+    for name in nets:
+        g = NETWORKS[name]()
         fam_p = pruned_lower_sets(g)
-        B = min_feasible_budget(g, family=fam_p, tol=1e-2) * 1.05
+        B = min_feasible_budget(g, family=fam_p) * 1.05
         t0 = time.perf_counter()
         ap = approx_dp(g, B)
         t_ap = time.perf_counter() - t0
@@ -66,5 +192,30 @@ def main() -> Dict[str, Dict]:
     return out
 
 
+def main(smoke: bool = False) -> Dict[str, Dict]:
+    nets = SMOKE_NETS if smoke else tuple(NETWORKS)
+    # the grid loop runs 8 full per-budget DPs per network; keep the sweep
+    # comparison to the small/medium nets by default (the big three already
+    # dominate the §5.1 table above)
+    sweep_nets = SMOKE_NETS if smoke else (
+        "vgg19", "unet", "resnet50", "googlenet")
+    out = {"paper": paper_rows(nets), "sweep": sweep_rows(sweep_nets)}
+    failures = check_sweep(out["sweep"])
+    if failures:
+        print("\nREGRESSIONS:")
+        for f in failures:
+            print(f"  - {f}")
+        if smoke:
+            sys.exit(1)
+    elif smoke:
+        print("\nsmoke OK: sweep grids bit-identical, within 2x of the "
+              "per-budget loop's DP work; exact min budget feasible and "
+              "<= search")
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small network set + hard assertions (CI mode)")
+    main(**vars(ap.parse_args()))

@@ -1,10 +1,12 @@
 """Plan explorer: the paper's Table-1 methods on any benchmark network or
 assigned architecture, with an ASCII memory-vs-overhead frontier.
 
-Budget sweeps solve through the content-addressed plan cache
-(core.plan_cache): re-exploring a network — or pointing --cache-dir (or
-REPRO_PLAN_CACHE_DIR) at a shared store — reuses every previously solved
-(graph, budget) point instead of re-running the DP.
+The whole exploration is ONE budget-free DP pass: ``Planner.solve_grid``
+builds a capped sweep (core.dp.sweep) whose terminal frontier carries the
+exact minimal feasible budget and every (budget → plan) point at once, and
+caches it in the content-addressed plan cache under the budget-free
+``sweep`` entry kind — so re-exploring a network, or pointing --cache-dir
+(or REPRO_PLAN_CACHE_DIR) at a shared store, re-runs no DP at all.
 
 Run: PYTHONPATH=src:. python examples/plan_explorer.py --network unet
      PYTHONPATH=src:. python examples/plan_explorer.py --arch stablelm-3b
@@ -21,22 +23,23 @@ from repro.core import (
 
 
 def frontier(g, n_points: int = 8):
-    """Sweep budgets from minimal to vanilla; print the trade-off curve."""
+    """One sweep: exact min budget + the whole trade-off curve."""
     planner = get_default_planner()
     fam = planner.family(g, "approx_dp")  # memoized — shared with the solves
-    B_min = planner.min_feasible_budget(g, "approx_dp", tol=1e-2)
+    B_min = planner.min_feasible_budget(g, "approx_dp")  # exact, no search
     van = vanilla_peak(g, liveness=True)
     print(f"#V={g.n}  #L^pruned={len(fam)}  vanilla peak={van/1e9:.2f} GB  "
-          f"min feasible B={B_min/1e9:.2f} GB")
+          f"min feasible B={B_min/1e9:.2f} GB (exact)")
     chen = chen_sqrt_n(g)
     chen_pk = simulate(g, chen.sequence, liveness=True).peak_memory
     print(f"Chen √n: peak {chen_pk/1e9:.2f} GB, overhead "
           f"{100*chen.overhead/g.total_time:.0f}% of fwd\n")
 
+    budgets = [B_min * (1.0 + 3.0 * i / max(n_points - 1, 1))
+               for i in range(n_points)]
+    results = planner.solve_grid(g, budgets, "approx_dp")  # one capped sweep
     rows = []
-    for i in range(n_points):
-        B = B_min * (1.0 + 3.0 * i / max(n_points - 1, 1))
-        res = planner.solve(g, B, "approx_dp")
+    for res in results:
         if not res.feasible:
             continue
         pk = simulate(g, res.sequence, liveness=True).peak_memory
@@ -47,6 +50,19 @@ def frontier(g, n_points: int = 8):
     for pk, oh, k in rows:
         bar = "#" * int(1 + 40 * oh / max_oh)
         print(f"{pk/1e9:8.2f} {oh:10.1f} {k:9d}  {bar}")
+
+    # the sweep's own Pareto staircase: every budget regime below the cap
+    from repro.core import SweepOverflow
+
+    try:
+        crit = planner.frontier(g, "approx_dp")
+    except SweepOverflow:
+        return  # surface too wide for a full sweep — grid above suffices
+    print(f"\n{len(crit)} critical budgets (full frontier from one sweep):")
+    for B, oh in crit[:12]:
+        print(f"  B ≥ {B/1e9:7.2f} GB → overhead {100*oh/g.total_time:5.1f}%")
+    if len(crit) > 12:
+        print(f"  … {len(crit) - 12} more")
 
 
 def main():

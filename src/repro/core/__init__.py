@@ -17,13 +17,18 @@ from .cost_model import (
 from .dfs import exhaustive_search
 from .dp import (
     DPResult,
+    Sweep,
+    SweepOverflow,
     approx_dp,
     cached_sets,
+    decode_sweep,
     exact_dp,
+    min_feasible_budget_exact,
     overhead,
     peak_memory,
     quantize_times,
     solve,
+    sweep,
 )
 from .graph import (
     Graph,
@@ -36,7 +41,13 @@ from .graph import (
 )
 from .liveness import SimResult, simulate, vanilla_peak
 from .lower_sets import all_lower_sets, count_lower_sets, pruned_lower_sets
-from .plan_cache import PlanCache, PlanKey, default_cache, set_default_cache_dir
+from .plan_cache import (
+    PlanCache,
+    PlanKey,
+    SweepKey,
+    default_cache,
+    set_default_cache_dir,
+)
 from .planner import (
     Planner,
     PlanReport,
@@ -57,6 +68,11 @@ __all__ = [
     "count_lower_sets",
     "DPResult",
     "solve",
+    "sweep",
+    "Sweep",
+    "SweepOverflow",
+    "decode_sweep",
+    "min_feasible_budget_exact",
     "exact_dp",
     "approx_dp",
     "overhead",
@@ -84,6 +100,7 @@ __all__ = [
     "canonical_maps",
     "PlanCache",
     "PlanKey",
+    "SweepKey",
     "default_cache",
     "set_default_cache_dir",
     "Planner",

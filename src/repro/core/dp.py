@@ -11,13 +11,32 @@ accelerations the paper describes in §4.2:
 * per-``L'`` segment terms (∂(L'), δ⁺(L')\\L', δ⁻(δ⁺(L'))\\L') precomputed
   once.
 
-Three entry points:
+Entry points:
 
 * ``solve(graph, budget, family, objective="time_centric")`` — Algorithm 1;
   ``objective="memory_centric"`` replaces ``min`` with ``max`` at line 15
   (§4.4 / Appendix A note).
 * ``exact_dp(graph, budget, ...)``  — family = 𝓛_G        (§4.2)
 * ``approx_dp(graph, budget, ...)`` — family = 𝓛_G^Pruned (§4.3)
+* ``sweep(graph, family, objective)`` — the **budget-free sweep solver**:
+  one DP pass with the running peak of eq. 2's 𝓜⁽ⁱ⁾ carried as a third
+  frontier coordinate ``(t, m, peak)`` instead of the per-budget filter
+  ``𝓜⁽ⁱ⁾ > B``.  The resulting :class:`Sweep` answers *every* budget:
+  ``Sweep.extract(B)`` reproduces ``solve(graph, B, family, objective)``
+  bit-identically (same lower-set sequence, same overhead), and the minimal
+  peak at the terminal state is the *exact* minimal feasible budget — no
+  binary search (§5.1) required.  ``Sweep.frontier()`` is the full
+  (budget → overhead) Pareto staircase, e.g. a whole trade-off grid from
+  one pass.  Sweeps serialize (``Sweep.encode``/``decode_sweep``) in
+  canonical coordinates so ``core.plan_cache`` can admit every future
+  budget query on a graph from one cold solve.
+
+Bit-identity of ``Sweep.extract`` with the per-budget DP rests on the
+per-cell tie-break both use: among equally cheap transitions into a table
+cell ``(L', t')`` the winner is the one whose source lower set comes first
+in the size-ascending family order (the per-budget DP realises this as
+first-writer-wins; the sweep stores the source position explicitly and
+minimizes ``(m, pos)``).
 
 The DP requires integer ``T_v`` (the ``t`` axis of the table).  The paper
 uses ``T_v ∈ {1, 10}``; for FLOP-derived costs use
@@ -27,6 +46,7 @@ uses ``T_v ∈ {1, 10}``; for FLOP-derived costs use
 from __future__ import annotations
 
 import dataclasses
+from bisect import bisect_left, bisect_right
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from .graph import EMPTY, Graph, NodeSet
@@ -336,14 +356,571 @@ def _pareto_mc(
 
 
 # ---------------------------------------------------------------------------
+# Budget-free sweep solver
+# ---------------------------------------------------------------------------
+#
+# The per-budget DP keeps, per (lower set, t), the minimal cache mass m of
+# any transition chain whose every 𝓜⁽ⁱ⁾ fits the budget.  The sweep drops
+# the filter and instead carries peak = max_i 𝓜⁽ⁱ⁾ along each chain, so a
+# cell holds a small Pareto frontier over (m, peak):
+#
+#   * sorted by peak strictly ascending;
+#   * (m, pos) lexicographically *strictly descending*, where pos is the
+#     size-order position of the transition's source lower set.
+#
+# Projecting a cell at budget B (candidates with peak ≤ B, winner = minimal
+# (m, pos)) recovers exactly the per-budget DP's cell: m matches its value
+# and pos identifies the same first-writer parent.  Because the frontier
+# keys are monotone, the projection winner is simply the candidate with the
+# largest peak ≤ B — one bisect per cell.
+
+
+class _Cell:
+    """Frontier of one DP cell ``(lower set, t)``: parallel candidate lists.
+
+    Invariants: ``peaks`` strictly ascending, ``(ms, poss)`` lex strictly
+    descending.  ``parent_ids``/``parent_ts`` locate the predecessor cell
+    (family index and t); the ∅-seed candidate uses ``(-1, 0.0)``.
+    """
+
+    __slots__ = ("peaks", "ms", "poss", "parent_ids", "parent_ts")
+
+    def __init__(self):
+        self.peaks: List[float] = []
+        self.ms: List[float] = []
+        self.poss: List[int] = []
+        self.parent_ids: List[int] = []
+        self.parent_ts: List[float] = []
+
+    def insert(self, m: float, peak: float, pos: int, pid: int, pt: float) -> None:
+        peaks = self.peaks
+        ms = self.ms
+        poss = self.poss
+        i = bisect_left(peaks, peak)
+        if i > 0:
+            pm = ms[i - 1]
+            if pm < m or (pm == m and poss[i - 1] <= pos):
+                return  # dominated by a lower-peak candidate with a ≤ key
+        j = i
+        n = len(peaks)
+        while j < n:
+            jm = ms[j]
+            if jm > m or (jm == m and poss[j] >= pos):
+                j += 1  # evict candidates the newcomer dominates
+            else:
+                break
+        if j < n and peaks[j] == peak:
+            return  # an equal-peak candidate with a strictly smaller key
+        del peaks[i:j], ms[i:j], poss[i:j]
+        del self.parent_ids[i:j], self.parent_ts[i:j]
+        peaks.insert(i, peak)
+        ms.insert(i, m)
+        poss.insert(i, pos)
+        self.parent_ids.insert(i, pid)
+        self.parent_ts.insert(i, pt)
+
+    def winner(self, budget: float) -> int:
+        """Index of the budget-B projection winner, or -1 if none fits."""
+        return bisect_right(self.peaks, budget) - 1
+
+    def min_peak(self) -> float:
+        return self.peaks[0] if self.peaks else INF
+
+
+class SweepOverflow(RuntimeError):
+    """Raised when a sweep would exceed its ``max_states`` work cap.
+
+    The (t, m, peak) surface of a graph can be much larger than any single
+    budget's slice of it (one slice per *budget regime*); callers that only
+    need one budget catch this and fall back to the per-budget DP.
+    """
+
+
+def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet]) -> float:
+    """Exact minimal feasible budget in one forward pass (no search).
+
+    min over canonical strategies of max_i 𝓜⁽ⁱ⁾ (eq. 2) — replaces the
+    §5.1 binary search and its per-probe feasibility DPs, and unlike the
+    search's tolerance the result is itself exactly feasible.
+
+    This is the t-less projection of :func:`sweep`: per lower set a Pareto
+    frontier over ``(m, peak)`` only.  Every arithmetic expression — the
+    left-folded cache mass ``m + m_step`` and the transition peak
+    ``m + m_fixed`` — is written *identically* to :func:`solve` /
+    :func:`feasible`, so the returned budget sits exactly on the per-budget
+    DP's own float feasibility threshold: ``solve(g, B)`` is feasible at
+    ``B = result`` and infeasible one ulp below (a re-associated closed
+    form, e.g. ``2·M(L') + m_after − 2·M(L)``, can land an ulp off and
+    return a budget the DP rejects).
+    """
+    infos = _prepare(g, family)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    sizes = [infos[i].size for i in order]
+    full_mask = (1 << g.n) - 1
+    empty_id = full_id = None
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            empty_id = i
+        if info.mask == full_mask:
+            full_id = i
+    if empty_id is None or full_id is None:
+        raise ValueError("family must contain ∅ and V")
+
+    # per lower set: ms ascending, peaks strictly descending (Pareto)
+    fr_m: List[List[float]] = [[] for _ in infos]
+    fr_p: List[List[float]] = [[] for _ in infos]
+    fr_m[empty_id].append(0.0)
+    fr_p[empty_id].append(0.0)
+    n_fam = len(order)
+    for pos, i in enumerate(order):
+        src_m = fr_m[i]
+        if not src_m:
+            continue
+        src_p = fr_p[i]
+        info_L = infos[i]
+        mask_L = info_L.mask
+        start = bisect_right(sizes, info_L.size)
+        for jpos in range(start, n_fam):
+            j = order[jpos]
+            info_Lp = infos[j]
+            if mask_L & ~info_Lp.mask:
+                continue  # L ⊄ L'
+            m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            m_fixed = 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            tm = fr_m[j]
+            tp = fr_p[j]
+            for m, peak in zip(src_m, src_p):
+                Mi = m + m_fixed  # eq. (2), same floats as solve()
+                peak2 = Mi if Mi > peak else peak
+                m2 = m + m_step
+                idx = bisect_right(tm, m2) - 1
+                if idx >= 0 and tp[idx] <= peak2:
+                    continue  # dominated
+                lo = bisect_left(tm, m2)
+                hi = lo
+                while hi < len(tm) and tp[hi] >= peak2:
+                    hi += 1
+                del tm[lo:hi], tp[lo:hi]
+                tm.insert(lo, m2)
+                tp.insert(lo, peak2)
+    peaks = fr_p[full_id]
+    return peaks[-1] if peaks else INF
+
+
+@dataclasses.dataclass
+class Sweep:
+    """Full (budget → plan) Pareto surface of one planning problem.
+
+    Produced by :func:`sweep`; ``extract(B)`` reproduces the per-budget
+    ``solve`` bit-identically for any ``B``.  ``family_masks`` are node-set
+    bitmasks in the coordinate system the sweep was built in (the source
+    graph's node ids, or canonical positions after :meth:`to_canonical`);
+    everything else — cells, t/m/peak values, parent links — is
+    coordinate-free, which is what makes cached sweeps transfer between
+    isomorphic graph labelings.
+    """
+
+    objective: str
+    n: int
+    family_masks: List[int]
+    cells: List[Dict[float, _Cell]]
+    empty_id: int
+    full_id: int
+    states_visited: int = 0
+    cap: Optional[float] = None  # budgets > cap were not swept (None = all)
+
+    def covers(self, budget: float) -> bool:
+        """True iff ``extract(budget)`` is answerable from this sweep."""
+        return self.cap is None or budget <= self.cap
+
+    # ------------------------------------------------------------ extraction
+
+    def _terminal_t(self, budget: float) -> Optional[float]:
+        term = self.cells[self.full_id]
+        ts = [t for t, cell in term.items() if cell.min_peak() <= budget]
+        if not ts:
+            return None
+        return min(ts) if self.objective == "time_centric" else max(ts)
+
+    def extract(self, budget: float) -> Tuple[bool, float, List[int]]:
+        """Budget-B projection: ``(feasible, overhead, sequence-of-masks)``.
+
+        The mask sequence excludes ∅ and is expressed in the sweep's own
+        coordinates (see class docstring).
+        """
+        if not self.covers(budget):
+            raise ValueError(
+                f"budget {budget!r} beyond this sweep's cap {self.cap!r}"
+            )
+        t_star = self._terminal_t(budget)
+        if t_star is None:
+            return False, INF, []
+        masks: List[int] = []
+        pid, pt = self.full_id, t_star
+        while pid >= 0:
+            cell = self.cells[pid][pt]
+            k = cell.winner(budget)
+            if self.family_masks[pid]:
+                masks.append(self.family_masks[pid])
+            pid, pt = cell.parent_ids[k], cell.parent_ts[k]
+        masks.reverse()
+        return True, t_star, masks
+
+    def solve(self, g: Graph, budget: float) -> DPResult:
+        """``solve(g, budget, family, objective)`` via frontier lookup.
+
+        ``g`` must be labeled in the sweep's coordinates (i.e. the graph the
+        sweep was built from); the planner handles relabeled graphs itself.
+        """
+        ok, t_star, masks = self.extract(budget)
+        if not ok:
+            return DPResult([], INF, INF, feasible=False,
+                            states_visited=self.states_visited)
+        sequence = [from_mask(mk) for mk in masks]
+        return DPResult(
+            sequence=sequence,
+            overhead=t_star,
+            peak_memory=peak_memory(g, sequence),
+            feasible=True,
+            states_visited=self.states_visited,
+        )
+
+    def min_feasible_budget(self) -> float:
+        """Exact minimal feasible budget: min over terminal cells of the
+        smallest achievable peak (replaces the §5.1 binary search).
+
+        On a capped sweep, INF means "infeasible within the cap", not
+        globally infeasible — ``dp.min_feasible_budget_exact`` answers the
+        uncapped question in one cheap scalar pass.
+        """
+        term = self.cells[self.full_id]
+        return min((cell.min_peak() for cell in term.values()), default=INF)
+
+    def frontier(self) -> List[Tuple[float, float]]:
+        """(budget, overhead) Pareto staircase at the terminal state.
+
+        Returns the critical budgets in increasing order with the overhead
+        each unlocks; ``extract(B)`` for any ``B`` equals the entry with the
+        largest budget ≤ B.  Time-centric: overhead strictly decreasing.
+        Memory-centric: overhead strictly increasing (§4.4 maximizes).
+        """
+        term = self.cells[self.full_id]
+        pts = sorted((cell.min_peak(), t) for t, cell in term.items())
+        out: List[Tuple[float, float]] = []
+        better = (lambda a, b: a < b) if self.objective == "time_centric" else (
+            lambda a, b: a > b)
+        for peak, t in pts:
+            if not out or better(t, out[-1][1]):
+                if out and out[-1][0] == peak:
+                    out[-1] = (peak, t)
+                else:
+                    out.append((peak, t))
+        return out
+
+    # ---------------------------------------------------------- relabeling
+
+    def remap(self, mapping: Dict[int, int]) -> "Sweep":
+        """New Sweep with every family mask pushed through ``mapping``."""
+        remapped = []
+        for mask in self.family_masks:
+            m2 = 0
+            for v in mask_iter(mask):
+                m2 |= 1 << mapping[v]
+            remapped.append(m2)
+        return dataclasses.replace(self, family_masks=remapped)
+
+    def to_canonical(self, to_pos: Dict[int, int]) -> "Sweep":
+        """Sweep re-expressed in canonical positions (cache storage form)."""
+        return self.remap(to_pos)
+
+    # -------------------------------------------------------- serialization
+
+    def encode(self) -> dict:
+        """JSON-able form (store sweeps in canonical coordinates)."""
+        return {
+            "objective": self.objective,
+            "cap": self.cap,
+            "n": self.n,
+            "family": [sorted(mask_iter(mk)) for mk in self.family_masks],
+            "cells": [
+                [
+                    [t, cell.peaks, cell.ms, cell.parent_ids, cell.parent_ts]
+                    for t, cell in sorted(cdict.items())
+                ]
+                for cdict in self.cells
+            ],
+            "states_visited": int(self.states_visited),
+        }
+
+
+def decode_sweep(entry: dict) -> Optional[Sweep]:
+    """Inverse of ``Sweep.encode``; returns None on any malformed input."""
+    try:
+        objective = entry["objective"]
+        if objective not in ("time_centric", "memory_centric"):
+            return None
+        n = int(entry["n"])
+        family_masks = [to_mask(members) for members in entry["family"]]
+        full_mask = (1 << n) - 1
+        empty_id = family_masks.index(0)
+        full_id = family_masks.index(full_mask)
+        sizes = [mk.bit_count() for mk in family_masks]
+        order = sorted(range(len(family_masks)), key=lambda i: sizes[i])
+        pos_of = [0] * len(order)
+        for p, i in enumerate(order):
+            pos_of[i] = p
+        cells: List[Dict[float, _Cell]] = []
+        for cdict_enc in entry["cells"]:
+            cdict: Dict[float, _Cell] = {}
+            for t, peaks, ms, pids, pts in cdict_enc:
+                cell = _Cell()
+                cell.peaks = [float(x) for x in peaks]
+                cell.ms = [float(x) for x in ms]
+                cell.parent_ids = [int(x) for x in pids]
+                cell.parent_ts = [float(x) for x in pts]
+                cell.poss = [
+                    pos_of[pid] if pid >= 0 else -1 for pid in cell.parent_ids
+                ]
+                k = len(cell.peaks)
+                if not (len(cell.ms) == len(cell.parent_ids)
+                        == len(cell.parent_ts) == k) or k == 0:
+                    return None
+                cdict[float(t)] = cell
+            cells.append(cdict)
+        if len(cells) != len(family_masks):
+            return None
+        cap = entry.get("cap")
+        return Sweep(
+            objective=objective,
+            n=n,
+            family_masks=family_masks,
+            cells=cells,
+            empty_id=empty_id,
+            full_id=full_id,
+            states_visited=int(entry.get("states_visited", 0)),
+            cap=float(cap) if cap is not None else None,
+        )
+    except (KeyError, IndexError, TypeError, ValueError):
+        return None
+
+
+def sweep(g: Graph, family: Sequence[NodeSet],
+          objective: str = "time_centric",
+          max_states: Optional[int] = None,
+          cap: Optional[float] = None) -> Sweep:
+    """One budget-free DP pass carrying ``(t, m, peak)`` frontiers.
+
+    Identical transition structure to :func:`solve`, with eq. 2's 𝓜⁽ⁱ⁾
+    folded into each chain's running ``peak`` instead of compared against a
+    budget.  The source-side Pareto pruning mirrors :func:`_pareto` /
+    :func:`_pareto_mc` with the peak coordinate added, so for every budget
+    the set of expanded transitions is a superset of the per-budget DP's —
+    and the per-cell ``(m, pos)`` tie-break makes ``extract`` land on the
+    same plan the per-budget DP would have returned.
+
+    Bit-identity holds in *float* arithmetic, not just on paper: every
+    expression a candidate carries — the left-folded cache mass
+    ``m + m_step`` and the peak ``max(peak, m + m_fixed)`` — is written
+    identically to :func:`solve`'s, so ``extract(B)`` compares B against
+    the very same float values the per-budget DP filters on.  (No
+    re-associated shortcuts here: an ulp of drift in a peak moves a
+    feasibility threshold and silently changes which plan a budget maps
+    to.)
+
+    ``max_states`` caps the transition work; a surface wider than the cap
+    raises :class:`SweepOverflow` (deterministically for a given problem)
+    so callers can fall back to per-budget solves.
+
+    ``cap`` bounds the swept budget range: transitions whose peak exceeds
+    ``cap`` are dropped — exactly the per-budget DP's ``𝓜⁽ⁱ⁾ > B`` filter
+    at ``B = cap`` — so the sweep costs roughly one ``solve`` at the
+    *largest* budget of interest times the number of regimes below it,
+    instead of the full surface.  ``extract(B)`` stays bit-identical for
+    every ``B ≤ cap`` and raises beyond it.
+    """
+    if objective not in ("time_centric", "memory_centric"):
+        raise ValueError(f"unknown objective {objective!r}")
+    tc = objective == "time_centric"
+
+    infos = _prepare(g, family)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    pos_of = [0] * len(order)
+    for p, i in enumerate(order):
+        pos_of[i] = p
+    full_mask = (1 << g.n) - 1
+
+    empty_id = None
+    full_id = None
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            empty_id = i
+        if info.mask == full_mask:
+            full_id = i
+    if empty_id is None or full_id is None:
+        raise ValueError("family must contain ∅ and V")
+
+    cells: List[Dict[float, _Cell]] = [{} for _ in infos]
+
+    states = 0
+    state_cap = max_states if max_states is not None else INF
+    budget_cap = cap if cap is not None else INF
+    n_fam = len(order)
+    sizes = [infos[i].size for i in order]
+
+    seed = _Cell()
+    seed.insert(0.0, 0.0, -1, -1, 0.0)
+    cells[empty_id][0.0] = seed
+
+    for pos, i in enumerate(order):
+        info_L = infos[i]
+        cdict = cells[i]
+        if not cdict:
+            continue
+        # Source-side pruning, the sweep analogue of _pareto/_pareto_mc: a
+        # candidate is skipped when a strictly-better-t cell (smaller t for
+        # TC, larger for MC) holds one with m' ≤ m and peak' ≤ peak — for
+        # every budget where the skipped candidate is its cell's projection
+        # winner, the per-budget DP prunes the cell too.  fr_m ascending /
+        # fr_p strictly descending is the running (m, peak) frontier.
+        fr_m: List[float] = []
+        fr_p: List[float] = []
+        # per surviving cell: (t, ms ascending, peaks descending)
+        expansions: List[Tuple[float, List[float], List[float]]] = []
+        for t in sorted(cdict, reverse=not tc):
+            cell = cdict[t]
+            kms: List[float] = []
+            kpeaks: List[float] = []
+            for k in range(len(cell.peaks) - 1, -1, -1):  # m asc / peak desc
+                m, peak = cell.ms[k], cell.peaks[k]
+                idx = bisect_right(fr_m, m) - 1
+                if idx >= 0 and fr_p[idx] <= peak:
+                    continue
+                kms.append(m)
+                kpeaks.append(peak)
+            if kms:
+                expansions.append((t, kms, kpeaks))
+            for m, peak in zip(kms, kpeaks):
+                idx = bisect_right(fr_m, m) - 1
+                if idx >= 0 and fr_p[idx] <= peak:
+                    continue
+                lo = bisect_left(fr_m, m)
+                hi = lo
+                while hi < len(fr_m) and fr_p[hi] >= peak:
+                    hi += 1
+                del fr_m[lo:hi], fr_p[lo:hi]
+                fr_m.insert(lo, m)
+                fr_p.insert(lo, peak)
+
+        if not expansions:
+            continue
+        mask_L = info_L.mask
+        src_pos = pos_of[i]
+        start = bisect_right(sizes, info_L.size)
+        for jpos in range(start, n_fam):
+            j = order[jpos]
+            info_Lp = infos[j]
+            if mask_L & ~info_Lp.mask:
+                continue  # L ⊄ L'
+            Vp_mask = info_Lp.mask & ~mask_L
+            inter = Vp_mask & info_Lp.boundary_mask
+            t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
+            m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            m_fixed = 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            target = cells[j]
+            for t, kms, kpeaks in expansions:
+                t2 = t + t_step
+                cell2 = target.get(t2)
+                if cell2 is None:
+                    cell2 = target[t2] = _Cell()
+                # Once this transition's own 𝓜⁽ⁱ⁾ = m + m_fixed reaches a
+                # candidate's carried peak, peak₂ = m + m_fixed grows with m
+                # exactly as m₂ does — every candidate past the first such
+                # one arrives strictly dominated (same source position), so
+                # expansion stops one past the crossover.  kpeaks descends
+                # and m + m_fixed ascends, so the predicate flips once.
+                lo, hi = 0, len(kms)
+                while lo < hi:
+                    mid = (lo + hi) // 2
+                    if kpeaks[mid] <= kms[mid] + m_fixed:
+                        hi = mid
+                    else:
+                        lo = mid + 1
+                end = lo + 1 if lo < len(kms) else lo
+                states += end
+                # inlined _Cell.insert — this is the sweep's hot loop
+                peaks2 = cell2.peaks
+                ms2 = cell2.ms
+                poss2 = cell2.poss
+                pids2 = cell2.parent_ids
+                pts2 = cell2.parent_ts
+                for k in range(end):
+                    m = kms[k]
+                    peak = kpeaks[k]
+                    Mi = m + m_fixed  # eq. (2), same floats as solve()
+                    if Mi > peak:
+                        peak = Mi
+                    if peak > budget_cap:
+                        continue  # beyond the swept budget range
+                    m2 = m + m_step
+                    ci = bisect_left(peaks2, peak)
+                    if ci > 0:
+                        pm = ms2[ci - 1]
+                        if pm < m2 or (pm == m2 and poss2[ci - 1] <= src_pos):
+                            continue
+                    cj = ci
+                    cn = len(peaks2)
+                    while cj < cn:
+                        jm = ms2[cj]
+                        if jm > m2 or (jm == m2 and poss2[cj] >= src_pos):
+                            cj += 1
+                        else:
+                            break
+                    if cj < cn and peaks2[cj] == peak:
+                        continue
+                    del peaks2[ci:cj], ms2[ci:cj], poss2[ci:cj]
+                    del pids2[ci:cj], pts2[ci:cj]
+                    peaks2.insert(ci, peak)
+                    ms2.insert(ci, m2)
+                    poss2.insert(ci, src_pos)
+                    pids2.insert(ci, i)
+                    pts2.insert(ci, t)
+        if states > state_cap:
+            raise SweepOverflow(
+                f"budget sweep exceeded max_states={max_states} "
+                f"({states} transitions; family of {n_fam})"
+            )
+
+    return Sweep(
+        objective=objective,
+        n=g.n,
+        family_masks=[info.mask for info in infos],
+        cells=cells,
+        empty_id=empty_id,
+        full_id=full_id,
+        states_visited=states,
+        cap=cap,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 
 
 def exact_dp(
-    g: Graph, budget: float, objective: str = "time_centric", limit: int = 500_000
+    g: Graph, budget: float, objective: str = "time_centric",
+    limit: Optional[int] = None,
 ) -> DPResult:
-    """§4.2 — DP over the full lattice 𝓛_G."""
+    """§4.2 — DP over the full lattice 𝓛_G.
+
+    ``limit`` caps the family enumeration; defaults to
+    ``lower_sets.DEFAULT_LOWER_SET_LIMIT`` (the single source of truth
+    shared with ``Planner`` and ``all_lower_sets``).
+    """
+    from .lower_sets import DEFAULT_LOWER_SET_LIMIT
+
+    if limit is None:
+        limit = DEFAULT_LOWER_SET_LIMIT
     return solve(g, budget, all_lower_sets(g, limit=limit), objective)
 
 
@@ -396,10 +973,19 @@ def quantize_times(g: Graph, levels: int = 64) -> Graph:
     Beyond-paper utility for FLOP-derived costs: T_v → max(1,
     round(levels · T_v / max_v T_v)).  The paper's {1, 10} costs pass through
     unchanged when levels ≥ 10·max/max.
+
+    Degenerate graphs pass through unchanged: an empty graph has no times to
+    rescale, and a graph whose times are all ≤ 0 (e.g. a pure-view subgraph
+    assembled outside the ``Graph`` constructor's validation) has no usable
+    scale — rescaling would divide by zero.
     """
     from .graph import Node
 
+    if g.n == 0:
+        return g
     tmax = max(g.time_v)
+    if tmax <= 0:
+        return g
     nodes = [
         Node(
             nd.idx,

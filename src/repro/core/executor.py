@@ -167,9 +167,18 @@ def planned_value_and_grad_under_budget(
     from .planner import get_default_planner
 
     g = bg.to_graph(params, inputs, cost_model=cost_model)
-    report = (planner or get_default_planner()).plan(g, budget, method, objective)
+    pl = planner or get_default_planner()
+    report = pl.plan(g, budget, method, objective)
     if report.plan is None:
+        # The budget sweep that just failed already carries the exact
+        # minimal feasible budget on its terminal frontier — surface it so
+        # the caller knows how much memory the strategy actually needs.
+        hint = ""
+        if method in ("exact_dp", "approx_dp"):
+            needed = pl.min_feasible_budget(g, method)
+            hint = f"; minimal feasible budget is {needed:g}"
         raise ValueError(
-            f"no feasible strategy for budget {budget!r} ({method}/{objective})"
+            f"no feasible strategy for budget {budget!r} "
+            f"({method}/{objective}){hint}"
         )
     return planned_value_and_grad(bg, report.plan, loss_fn, track_live), report

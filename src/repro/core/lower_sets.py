@@ -19,8 +19,14 @@ from typing import Dict, FrozenSet, Iterator, List, Set
 
 from .graph import EMPTY, Graph, NodeSet
 
+# Single source of truth for "how many lower sets is too many".  Shared by
+# ``all_lower_sets`` / ``count_lower_sets``, ``dp.exact_dp``, and
+# ``planner._family`` so the same graph can never plan through one entry
+# point and blow past the limit through another.
+DEFAULT_LOWER_SET_LIMIT = 2_000_000
 
-def all_lower_sets(g: Graph, limit: int = 2_000_000) -> List[NodeSet]:
+
+def all_lower_sets(g: Graph, limit: int = DEFAULT_LOWER_SET_LIMIT) -> List[NodeSet]:
     """Enumerate every lower set of ``g`` (including ∅ and V).
 
     Raises ``RuntimeError`` if more than ``limit`` lower sets exist — the
@@ -112,6 +118,6 @@ def segment_lower_sets(g: Graph, order: List[int] | None = None) -> List[NodeSet
     return sorted(fam, key=lambda s: (len(s), sorted(s)))
 
 
-def count_lower_sets(g: Graph, limit: int = 2_000_000) -> int:
+def count_lower_sets(g: Graph, limit: int = DEFAULT_LOWER_SET_LIMIT) -> int:
     """#𝓛_G (for reporting; paper notes #V ≤ #𝓛_G ≤ 2^#V)."""
     return len(all_lower_sets(g, limit=limit))

@@ -8,12 +8,17 @@ dry-run matrix, and every restart of a training job re-solve graphs that
 were already solved.  This module memoizes solved ``DPResult``s behind a
 canonical content address so repeated planning is a hash lookup:
 
-* **key** — ``(graph_digest, budget, family, objective)`` where
-  ``graph_digest`` (core.graph) is invariant under node-id permutation and
-  covers topology + quantized costs + kinds.  Calibrated costs from the
-  measured cost model (core.cost_model) flow into the digest automatically,
-  so re-profiling on different hardware *invalidates* stale plans by
-  construction — no epoch counters needed.
+* **two entry kinds** — ``plan`` entries keyed by ``(graph_digest, budget,
+  family, objective)`` hold one ``DPResult``; ``sweep`` entries keyed by
+  ``(graph_digest, family, objective)`` — **no budget** — hold the whole
+  budget-free frontier of ``core.dp.sweep``, so a single cold solve admits
+  every future budget query (per-budget plans, minimal-feasible-budget
+  probes, trade-off grids) on that graph.  ``graph_digest`` (core.graph) is
+  invariant under node-id permutation and covers topology + quantized
+  costs + kinds.  Calibrated costs from the measured cost model
+  (core.cost_model) flow into the digest automatically, so re-profiling on
+  different hardware *invalidates* stale plans by construction — no epoch
+  counters needed.
 * **values in canonical coordinates** — lower-set sequences are stored as
   canonical node positions and mapped back through the querying graph's
   canonical order, so a cached plan transfers between isomorphic labelings
@@ -43,7 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.checkpointing.store import atomic_write_json, read_json
 
-from .dp import DPResult
+from .dp import DPResult, Sweep, decode_sweep
 from .graph import Graph, NodeSet, canonical_maps, graph_digest
 
 FORMAT_VERSION = 1
@@ -72,6 +77,28 @@ class PlanKey:
                 self.family,
                 self.objective,
             )
+        )
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepKey:
+    """Identity of one budget-*free* planning problem (``core.dp.sweep``).
+
+    Deliberately has no budget: one cached sweep answers every budget query
+    on its ``(graph, family, objective)`` by frontier lookup, which is what
+    turns the §5.1 binary search and multi-budget trade-off grids into
+    cache hits after a single cold solve.
+    """
+
+    graph_digest: str
+    family: str
+    objective: str
+
+    def content_hash(self) -> str:
+        payload = "|".join(
+            (f"sweep-v{FORMAT_VERSION}", self.graph_digest, self.family,
+             self.objective)
         )
         return hashlib.sha256(payload.encode()).hexdigest()
 
@@ -216,6 +243,61 @@ class PlanCache:
             )
         except (KeyError, IndexError, TypeError, ValueError):
             return None
+
+    # ------------------------------------------------------------- sweeps
+
+    @staticmethod
+    def sweep_key_for(g: Graph, family: str, objective: str) -> SweepKey:
+        return SweepKey(graph_digest(g), family, objective)
+
+    def get_sweep(self, key: SweepKey, count_miss: bool = True) -> Optional[Sweep]:
+        """Cached sweep in **canonical coordinates**; None on miss.
+
+        Unlike plan entries there is no per-get structural validation
+        against a querying graph — a sweep is not a single plan but a whole
+        surface.  Callers (``core.planner.Planner``) validate each
+        *extracted* sequence instead, so corruption still degrades to a
+        miss at the point of use, never a wrong plan.
+
+        ``count_miss=False`` keeps an absent sweep out of the miss stats —
+        for opportunistic probes whose fallback lookup (a ``plan`` entry)
+        does its own accounting.
+        """
+        h = key.content_hash()
+        entry = self._mem_get(h)
+        from_disk = False
+        if entry is None:
+            path = self._path(h)
+            if path is not None:
+                entry = read_json(path)
+                from_disk = entry is not None
+        if entry is None:
+            if count_miss:
+                self.misses += 1
+            return None
+        sweep = None
+        if isinstance(entry, dict) and entry.get("version") == FORMAT_VERSION \
+                and entry.get("kind") == "sweep":
+            sweep = decode_sweep(entry)
+        if sweep is None:
+            self.invalid_hits += 1
+            self.misses += 1
+            with self._lock:
+                self._mem.pop(h, None)
+            return None
+        if from_disk:
+            self.disk_hits += 1
+            self._mem_put(h, entry)
+        self.hits += 1
+        return sweep
+
+    def put_sweep(self, key: SweepKey, sweep: Sweep) -> None:
+        """Store a sweep (caller must pass it in canonical coordinates)."""
+        entry = {"version": FORMAT_VERSION, "kind": "sweep",
+                 "key": dataclasses.asdict(key), **sweep.encode()}
+        h = key.content_hash()
+        self._mem_put(h, entry)
+        self._disk_write(h, entry)
 
     # ------------------------------------------------- auxiliary scalar store
 

@@ -3,22 +3,31 @@ graph (or a traced JAX function) under a memory budget.
 
 The paper's §5.1 protocol: "for the memory budget B … we chose the minimal
 value B for which the solution … exists.  This value was determined using
-binary search."  ``min_feasible_budget`` implements that search;
-``plan`` is the one-call front door used by the framework.
+binary search."  The budget-sweep engine (``core.dp.sweep``) retires that
+search: ``min_feasible_budget`` reads the *exact* minimal budget off the
+sweep's terminal frontier, and ``plan`` is the one-call front door used by
+the framework.
 
-Plan compilation pipeline (beyond-paper): every DP solve and budget search
-is memoized through ``core.plan_cache`` behind a canonical graph digest, so
-repeated plans — multi-budget sweeps, dry-run matrices, job restarts — are
-hash lookups instead of exponential DP re-solves.  ``Planner`` is the
-stateful front door carrying the cache and an optional measured cost model
-(``core.cost_model``); the module-level ``plan``/``min_feasible_budget``
-functions route through a process-default ``Planner`` so existing callers
-inherit the caching transparently.
+Plan compilation pipeline (beyond-paper): planning is memoized through
+``core.plan_cache`` behind a canonical graph digest.  For the DP methods
+the cached object is a **budget-free sweep** — the full ``(t, m, peak)``
+Pareto surface of ``core.dp.sweep``, stored under the ``sweep`` entry kind
+keyed by ``(graph_digest, family, objective)`` with *no budget* — so one
+cold solve admits every future budget query on that graph: per-budget
+``solve`` calls become frontier lookups (bit-identical to the per-budget
+DP), ``min_feasible_budget`` becomes a terminal-frontier min, and whole
+trade-off grids (benchmarks/fig3_tradeoff.py) cost one DP pass.
+``Planner`` is the stateful front door carrying the cache, a small decoded
+sweep memo, and an optional measured cost model (``core.cost_model``); the
+module-level ``plan``/``min_feasible_budget`` functions route through a
+process-default ``Planner`` so existing callers inherit the caching
+transparently.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time as _time
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -26,11 +35,13 @@ from . import dp as dp_mod
 from .chen import chen_sqrt_n
 from .cost_model import OpProfile, calibrated_graph
 from .dp import DPResult, approx_dp, exact_dp, solve
-from .graph import Graph, NodeSet, graph_digest
+from .graph import Graph, NodeSet, canonical_maps, graph_digest
 from .liveness import simulate, vanilla_peak
 from .lower_sets import all_lower_sets, pruned_lower_sets
-from .plan_cache import PlanCache, default_cache
+from .plan_cache import PlanCache, SweepKey, default_cache
 from .schedule import ExecutionPlan, make_plan
+
+_LOG = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -52,8 +63,24 @@ class PlanReport:
 
 
 def _family(g: Graph, method: str) -> Sequence[NodeSet]:
+    """Canonical lower-set family for ``method``.
+
+    ``exact_dp`` falls back to the pruned family (§4.3) when 𝓛_G overflows
+    ``lower_sets.DEFAULT_LOWER_SET_LIMIT`` — that is the paper's own escape
+    hatch for wide graphs, and it keeps the planner total (a logged note
+    replaces the ``RuntimeError`` the raw enumeration raises).
+    """
     if method == "exact_dp":
-        return all_lower_sets(g)
+        from . import lower_sets
+
+        try:
+            return all_lower_sets(g, limit=lower_sets.DEFAULT_LOWER_SET_LIMIT)
+        except RuntimeError as e:
+            _LOG.warning(
+                "exact lower-set family overflowed for %r (%s); "
+                "falling back to the pruned family (§4.3)", g, e,
+            )
+            return pruned_lower_sets(g)
     if method == "approx_dp":
         return pruned_lower_sets(g)
     raise ValueError(method)
@@ -67,10 +94,17 @@ def _min_feasible_budget_uncached(
 ) -> float:
     """Binary search the minimal B with a feasible canonical strategy (§5.1).
 
-    Bounds: any strategy needs at least max_i 2·M_v-ish memory; the
-    single-segment strategy needs ≤ vanilla 2·M(V).  We search in
-    [max_v M_v, 2·M(V)] to relative tolerance ``tol``, using the fast
-    feasibility-only DP (core.dp.feasible) per probe.
+    Superseded by the exact terminal-frontier minimum of ``core.dp.sweep``
+    (see ``Planner.min_feasible_budget``); kept as the paper-faithful
+    reference that benchmarks/dp_runtime.py compares the sweep against.
+
+    Bounds: any strategy needs at least max_v M_v; the single-segment
+    strategy needs at most 2·M(V) plus one cached boundary value, so we
+    search in [max_v M_v, 2·M(V) + max_v M_v] to relative tolerance
+    ``tol``, using the fast feasibility-only DP (core.dp.feasible) per
+    probe.  The returned budget is always one of the *feasible* probes
+    (``hi`` only ever shrinks onto feasible midpoints), which the final
+    check enforces.
     """
     from .dp import _prepare, feasible
 
@@ -87,6 +121,10 @@ def _min_feasible_budget_uncached(
             hi = mid
         else:
             lo = mid
+    if not feasible(g, hi, fam, infos):  # pragma: no cover — invariant guard
+        raise RuntimeError(
+            f"binary search returned an infeasible budget {hi!r} — bug"
+        )
     return hi
 
 
@@ -101,9 +139,13 @@ class Planner:
     * ``quantize_levels`` — integer t-axis resolution for the calibration
       path (also usable without a profile to quantize FLOP-valued graphs).
 
-    ``solve`` results are cached by ``(graph_digest, budget, family,
-    objective)``; custom lower-set families bypass the cache (their identity
-    isn't captured by the method name).
+    Budget sweeps: ``solve_grid``/``frontier`` build one **budget-free
+    sweep** (``core.dp.sweep``) cached under ``(graph_digest, family,
+    objective)`` — no budget in the key — and every ``solve`` first checks
+    for one, so any budget on a swept graph is a frontier lookup,
+    bit-identical to the per-budget DP.  ``min_feasible_budget`` is exact
+    (one scalar pass, no binary search).  Custom lower-set families bypass
+    the cache (their identity isn't captured by the method name).
     """
 
     CACHEABLE_METHODS = ("exact_dp", "approx_dp")
@@ -113,10 +155,14 @@ class Planner:
         cache: Optional[PlanCache] = None,
         profile: Optional[OpProfile] = None,
         quantize_levels: Optional[int] = None,
+        sweep_max_states: int = 10_000_000,
     ):
         self.cache = default_cache() if cache is None else cache
         self.profile = profile
         self.quantize_levels = quantize_levels
+        # Work cap for budget-free sweeps (dp.sweep max_states): surfaces
+        # wider than this fall back to per-budget DP solves deterministically.
+        self.sweep_max_states = sweep_max_states
         # Tiny memo of the most recent canonical lower-set families:
         # enumerating 𝓛_G is the dominant cold-path cost (§4.2), and one
         # budget search + solve (or a multi-budget sweep) re-enumerates the
@@ -124,6 +170,12 @@ class Planner:
         from collections import OrderedDict
 
         self._family_memo: "OrderedDict[Tuple[str, str], List[NodeSet]]" = (
+            OrderedDict()
+        )
+        # Decoded sweeps (canonical coordinates), so repeat budget queries
+        # skip both the DP and the cache-entry decode.  The PlanCache tiers
+        # below this hold the JSON-able form.
+        self._sweep_memo: "OrderedDict[Tuple[str, str, str], dp_mod.Sweep]" = (
             OrderedDict()
         )
 
@@ -159,6 +211,148 @@ class Planner:
             return dp_mod.quantize_times(g, levels=self.quantize_levels)
         return g
 
+    # ---------------------------------------------------------------- sweeps
+
+    def _sweep_memo_put(self, key: Tuple[str, str, str], sw: dp_mod.Sweep) -> None:
+        self._sweep_memo[key] = sw
+        self._sweep_memo.move_to_end(key)
+        while len(self._sweep_memo) > 4:
+            self._sweep_memo.popitem(last=False)
+
+    def _cached_sweep(
+        self, gp: Graph, method: str, objective: str, count_miss: bool = False
+    ) -> Optional[dp_mod.Sweep]:
+        """An already-available sweep (memo or cache), never a fresh build.
+
+        ``count_miss=False`` makes the cache probe silent on miss — used by
+        ``solve``/``min_feasible_budget``, whose own primary lookups do the
+        stats accounting; a found sweep is always counted as a hit.
+        """
+        key = (graph_digest(gp), method, objective)
+        sw = self._sweep_memo.get(key)
+        if sw is not None:
+            self._sweep_memo.move_to_end(key)
+            return sw
+        if self.cache is not None:
+            sw = self.cache.get_sweep(SweepKey(*key), count_miss=count_miss)
+            if sw is not None:
+                self._sweep_memo_put(key, sw)
+        return sw
+
+    def _build_sweep(
+        self,
+        gp: Graph,
+        method: str,
+        objective: str,
+        cap: Optional[float],
+        raise_overflow: bool = False,
+    ) -> Optional[dp_mod.Sweep]:
+        """Build + cache a sweep; on ``sweep_max_states`` overflow either
+        re-raise (``raise_overflow``) or return None (the caller falls back
+        to per-budget solves)."""
+        fam = self._family_for(gp, method)
+        try:
+            sw = dp_mod.sweep(gp, fam, objective,
+                              max_states=self.sweep_max_states, cap=cap)
+        except dp_mod.SweepOverflow as e:
+            if raise_overflow:
+                raise
+            _LOG.info("budget sweep overflow for %r (%s); "
+                      "falling back to per-budget DP", gp, e)
+            return None
+        to_pos, _ = canonical_maps(gp)
+        sw = sw.to_canonical(to_pos)
+        key = (graph_digest(gp), method, objective)
+        if self.cache is not None:
+            self.cache.put_sweep(SweepKey(*key), sw)
+        self._sweep_memo_put(key, sw)
+        return sw
+
+    def _extract(
+        self, sw: dp_mod.Sweep, gp: Graph, budget: float
+    ) -> Optional[DPResult]:
+        """Budget-B frontier lookup, validated against ``gp``; None means the
+        sweep is unusable for this graph (corruption / digest collision)."""
+        try:
+            ok, t_star, masks = sw.extract(budget)
+        except (KeyError, IndexError, TypeError, ValueError):
+            return None
+        if not ok:
+            return DPResult([], dp_mod.INF, dp_mod.INF, feasible=False,
+                            states_visited=sw.states_visited)
+        _, from_pos = canonical_maps(gp)
+        try:
+            seq = [
+                frozenset(from_pos[p] for p in dp_mod.mask_iter(mk))
+                for mk in masks
+            ]
+            gp.check_increasing_sequence(seq)
+        except (ValueError, IndexError, KeyError):
+            return None
+        return DPResult(
+            sequence=seq,
+            overhead=t_star,
+            peak_memory=dp_mod.peak_memory(gp, seq),
+            feasible=True,
+            states_visited=sw.states_visited,
+        )
+
+    def frontier(
+        self,
+        g: Graph,
+        method: str = "approx_dp",
+        objective: str = "time_centric",
+        prepared: bool = False,
+    ) -> List[Tuple[float, float]]:
+        """The full (budget → overhead) Pareto staircase from one sweep.
+
+        Each entry is a critical budget and the overhead it unlocks; the
+        plan at any budget B is ``solve(g, B, ...)`` (a frontier lookup on
+        the same cached sweep).  Raises ``dp.SweepOverflow`` when the full
+        surface exceeds ``sweep_max_states`` — use ``solve_grid`` with
+        explicit budgets (a capped, much cheaper sweep) in that case.
+        """
+        gp = g if prepared else self.prepare(g)
+        sw = self._cached_sweep(gp, method, objective, count_miss=True)
+        if sw is None or sw.cap is not None:
+            sw = self._build_sweep(gp, method, objective, cap=None,
+                                   raise_overflow=True)
+        return sw.frontier()
+
+    def solve_grid(
+        self,
+        g: Graph,
+        budgets: Sequence[float],
+        method: str = "approx_dp",
+        objective: str = "time_centric",
+        prepared: bool = False,
+    ) -> List[DPResult]:
+        """Solve a whole budget grid from one (capped) sweep.
+
+        One DP pass capped at ``max(budgets)`` answers every point —
+        bit-identical to per-budget ``solve`` at each — and is cached, so
+        re-grids and co-located jobs pay nothing.  Falls back to per-budget
+        solves when the capped surface still overflows
+        ``sweep_max_states``.
+        """
+        budgets = list(budgets)
+        if not budgets:
+            return []
+        gp = g if prepared else self.prepare(g)
+        if method in self.CACHEABLE_METHODS:
+            b_max = max(budgets)
+            sw = self._cached_sweep(gp, method, objective, count_miss=True)
+            if sw is None or not sw.covers(b_max):
+                sw = self._build_sweep(gp, method, objective, cap=b_max)
+            if sw is not None:
+                out = [self._extract(sw, gp, b) for b in budgets]
+                if all(r is not None for r in out):
+                    return out
+        return [
+            self.solve(gp, b, method, objective, prepared=True)
+            for b in budgets
+        ]
+
     # ---------------------------------------------------------------- solve
 
     def solve(
@@ -170,21 +364,32 @@ class Planner:
         family: Optional[Sequence[NodeSet]] = None,
         prepared: bool = False,
     ) -> DPResult:
-        """Algorithm 1 through the cache; bit-identical to an uncached solve."""
+        """Algorithm 1 through the cache; bit-identical to an uncached solve.
+
+        A sweep already cached for ``(graph, family, objective)`` — by a
+        prior ``solve_grid``/``frontier`` call here or in another process
+        sharing the store — answers any budget it covers as a frontier
+        lookup; otherwise this is the per-budget DP memoized under the
+        ``plan`` entry kind, exactly as before.
+        """
         gp = g if prepared else self.prepare(g)
-        cacheable = (
-            self.cache is not None
-            and family is None
-            and method in self.CACHEABLE_METHODS
-        )
+        if family is not None:
+            return solve(gp, budget, list(family), objective)
+        if method not in self.CACHEABLE_METHODS:
+            return solve(gp, budget, self._family_for(gp, method), objective)
+        sw = self._cached_sweep(gp, method, objective)
+        if sw is not None and sw.covers(budget):
+            res = self._extract(sw, gp, budget)
+            if res is not None:
+                return res
+        cacheable = self.cache is not None
         key = None
         if cacheable:
             key = PlanCache.key_for(gp, budget, method, objective)
             hit = self.cache.get(gp, key)
             if hit is not None:
                 return hit
-        fam = list(family) if family is not None else self._family_for(gp, method)
-        res = solve(gp, budget, fam, objective)
+        res = solve(gp, budget, self._family_for(gp, method), objective)
         if cacheable:
             self.cache.put(gp, key, res)
         return res
@@ -197,17 +402,34 @@ class Planner:
         family: Optional[Sequence[NodeSet]] = None,
         prepared: bool = False,
     ) -> float:
+        """Exact minimal feasible budget (the §5.1 binary search, retired).
+
+        One O(#𝓛²) scalar pass (``dp.min_feasible_budget_exact``) computes
+        min over strategies of max_i 𝓜⁽ⁱ⁾ directly — faster than a single
+        binary-search probe, and the result is itself exactly feasible.
+        ``tol`` is kept for API compatibility and ignored.  An already
+        cached sweep (whose terminal frontier carries the same value)
+        answers first; feasibility does not depend on the objective.
+        """
+        del tol  # the scalar DP is exact — nothing to tolerate
         gp = g if prepared else self.prepare(g)
-        cacheable = self.cache is not None and family is None
+        if family is not None:
+            return dp_mod.min_feasible_budget_exact(gp, list(family))
+        if method in self.CACHEABLE_METHODS:
+            for objective in ("time_centric", "memory_centric"):
+                sw = self._cached_sweep(gp, method, objective)
+                if sw is not None:
+                    b = sw.min_feasible_budget()
+                    if b < dp_mod.INF:  # capped sweeps may not know
+                        return b
         aux_key = None
-        if cacheable:
-            aux_key = f"{graph_digest(gp)}|{method}|{tol!r}"
+        if self.cache is not None:
+            aux_key = f"{graph_digest(gp)}|{method}|exact"
             v = self.cache.get_aux("min_budget", aux_key)
             if v is not None:
                 return v
-        fam = family if family is not None else self._family_for(gp, method)
-        b = _min_feasible_budget_uncached(gp, method, tol, fam)
-        if cacheable:
+        b = dp_mod.min_feasible_budget_exact(gp, self._family_for(gp, method))
+        if self.cache is not None:
             self.cache.put_aux("min_budget", aux_key, b)
         return b
 
@@ -285,7 +507,9 @@ def min_feasible_budget(
     tol: float = 1e-3,
     family: Optional[Sequence[NodeSet]] = None,
 ) -> float:
-    """§5.1 minimal-feasible-budget search (cached via the default Planner)."""
+    """§5.1 minimal feasible budget — exact, from the default Planner's
+    cached sweep (the paper's binary search is retired; ``tol`` is accepted
+    for compatibility and ignored)."""
     return _DEFAULT_PLANNER.min_feasible_budget(g, method, tol, family)
 
 

@@ -259,16 +259,26 @@ def plan_with_microbatching(
 ) -> Tuple[SegmentPlan, DPResult]:
     """§5.1 protocol, production edition: find the smallest gradient-
     accumulation factor for which the general recomputation problem has a
-    solution, then take the DP-optimal canonical strategy at that factor."""
+    solution, then take the DP-optimal canonical strategy at that factor.
+
+    Each escalation step is a frontier lookup: the planner's budget sweep
+    for the candidate chain graph yields the *exact* minimal feasible
+    budget, so infeasible factors are rejected by one comparison instead of
+    a full budgeted DP — and the final ``plan_unit_segments`` solve reuses
+    the same cached sweep.
+    """
     b_loc = max(1, shape.global_batch // max(dp_shards, 1))
+    planner = get_default_planner()
     n_micro = 1
     while n_micro <= min(max_micro, b_loc):
-        sp, res = plan_unit_segments(
-            cfg, shape, dp_shards, seq_shards, model_shards, n_micro,
-            objective=objective,
-        )
-        if res.feasible:
-            return sp, res
+        pi = plan_inputs(cfg, shape, dp_shards, seq_shards, model_shards,
+                         n_micro)
+        g = _dp_chain_graph(pi)
+        if planner.min_feasible_budget(g, "exact_dp") <= pi.budget:
+            return plan_unit_segments(
+                cfg, shape, dp_shards, seq_shards, model_shards, n_micro,
+                objective=objective,
+            )
         n_micro *= 2
     return plan_unit_segments(
         cfg, shape, dp_shards, seq_shards, model_shards,

@@ -1,0 +1,333 @@
+"""Budget-sweep engine (PR 2): one DP pass = the whole (budget → plan)
+Pareto surface, bit-identical to the per-budget DP it subsumes.
+
+The property-based cross-check here is the oracle that pins the eq. 1 /
+eq. 2 bookkeeping inside the DP transitions: for random DAGs, both
+objectives, and budgets spanning infeasible → ample,
+
+  * ``Sweep.solve(B)`` returns exactly ``dp.solve(g, B, family, objective)``
+    (same lower-set sequence, same overhead, same feasibility);
+  * the reported overhead/peak equal the strategy evaluators
+    ``dp.overhead`` / ``dp.peak_memory`` recomputed from the sequence;
+  * the terminal frontier's minimum is the exact minimal feasible budget
+    (feasible itself, infeasible just below, ≤ the retired binary search).
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp as dp_mod
+from repro.core.dp import (
+    Sweep,
+    SweepOverflow,
+    decode_sweep,
+    min_feasible_budget_exact,
+    overhead,
+    peak_memory,
+    solve,
+    sweep,
+)
+from repro.core.graph import canonical_maps, chain
+from repro.core.lower_sets import all_lower_sets, pruned_lower_sets
+from repro.core.planner import Planner, _min_feasible_budget_uncached
+from repro.core.plan_cache import PlanCache
+
+from conftest import random_dag
+
+
+def _budget_grid(sw: Sweep, n: int = 8):
+    """Budgets spanning infeasible → ample, plus every critical budget."""
+    mfb = sw.min_feasible_budget()
+    grid = {mfb * (0.5 + 3.0 * i / (n - 1)) for i in range(n)}
+    grid |= {b for b, _ in sw.frontier()}
+    grid |= {mfb, mfb * (1.0 - 1e-9), 1e12}
+    return sorted(grid)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 7), st.booleans(), st.booleans())
+def test_sweep_bit_identical_to_per_budget_solve(seed, n, topo, exact_family):
+    r = random.Random(seed)
+    g = random_dag(r, n, topo_ids=topo)
+    fam = all_lower_sets(g) if exact_family else pruned_lower_sets(g)
+    for objective in ("time_centric", "memory_centric"):
+        sw = sweep(g, fam, objective)
+        for B in _budget_grid(sw):
+            ref = solve(g, B, fam, objective)
+            got = sw.solve(g, B)
+            assert got.feasible == ref.feasible
+            if ref.feasible:
+                assert got.sequence == ref.sequence  # bit-identical plan
+                assert got.overhead == ref.overhead
+                assert got.peak_memory == ref.peak_memory
+                # eq. 1 / eq. 2 oracles on the returned strategy
+                assert got.overhead == pytest.approx(overhead(g, got.sequence))
+                assert got.peak_memory == pytest.approx(
+                    peak_memory(g, got.sequence))
+                assert got.peak_memory <= B + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 7))
+def test_exact_min_feasible_budget(seed, n):
+    """Terminal-frontier min == scalar one-pass DP == tight and feasible,
+    and the retired binary search lands within its tolerance above it."""
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    fam = all_lower_sets(g)
+    mfb = min_feasible_budget_exact(g, fam)
+    for objective in ("time_centric", "memory_centric"):
+        assert sweep(g, fam, objective).min_feasible_budget() == mfb
+    assert solve(g, mfb, fam).feasible
+    assert not solve(g, mfb * (1.0 - 1e-9), fam).feasible
+    tol = 1e-3
+    bs = _min_feasible_budget_uncached(g, tol=tol, family=fam)
+    assert mfb <= bs + 1e-9
+    assert bs <= mfb * (1.0 + 2.0 * tol) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.floats(1.1, 3.0))
+def test_capped_sweep_matches_below_cap(seed, n, span):
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    fam = all_lower_sets(g)
+    full = sweep(g, fam)
+    cap = full.min_feasible_budget() * span
+    capped = sweep(g, fam, cap=cap)
+    for B in [b for b in _budget_grid(full) if b <= cap]:
+        ref = solve(g, B, fam)
+        got = capped.solve(g, B)
+        assert got.feasible == ref.feasible
+        if ref.feasible:
+            assert got.sequence == ref.sequence
+    with pytest.raises(ValueError):
+        capped.extract(cap * 2.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_sweep_serialization_roundtrip(seed, n):
+    """encode → JSON → decode preserves the whole extraction surface, through
+    canonical coordinates (the plan cache's storage form)."""
+    import json
+
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    fam = all_lower_sets(g)
+    sw = sweep(g, fam)
+    to_pos, from_pos = canonical_maps(g)
+    entry = json.loads(json.dumps(sw.to_canonical(to_pos).encode()))
+    back = decode_sweep(entry).remap({p: v for p, v in enumerate(from_pos)})
+    assert back.min_feasible_budget() == sw.min_feasible_budget()
+    assert back.frontier() == sw.frontier()
+    for B in _budget_grid(sw):
+        a, b = sw.solve(g, B), back.solve(g, B)
+        assert a.feasible == b.feasible and a.sequence == b.sequence
+
+
+def test_decode_sweep_rejects_garbage():
+    assert decode_sweep({"objective": "nope"}) is None
+    assert decode_sweep({}) is None
+    assert decode_sweep({"objective": "time_centric", "n": 2,
+                         "family": [[0]], "cells": [[]]}) is None
+
+
+def test_sweep_overflow_is_deterministic(rng):
+    g = random_dag(rng, 6)
+    fam = all_lower_sets(g)
+    with pytest.raises(SweepOverflow):
+        sweep(g, fam, max_states=1)
+    with pytest.raises(SweepOverflow):
+        sweep(g, fam, max_states=1)
+
+
+def test_frontier_staircase_monotone(rng):
+    for _ in range(10):
+        g = random_dag(rng, 6)
+        fam = all_lower_sets(g)
+        tc = sweep(g, fam, "time_centric").frontier()
+        assert all(b1 < b2 and t1 > t2
+                   for (b1, t1), (b2, t2) in zip(tc, tc[1:]))
+        mc = sweep(g, fam, "memory_centric").frontier()
+        assert all(b1 < b2 and t1 < t2
+                   for (b1, t1), (b2, t2) in zip(mc, mc[1:]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_float_memory_ulp_thresholds(seed, n):
+    """Regression: with non-dyadic float memories (the shape the measured
+    cost model produces), the exact min budget must sit on the per-budget
+    DP's own float feasibility threshold — feasible at B, infeasible one
+    ulp below — and extraction must stay bit-identical at ulp-adjacent
+    budgets.  This requires the sweep and the scalar pass to carry the
+    same float expressions as ``solve`` (no re-associated closed forms,
+    which drift by ulps and move thresholds)."""
+    import math
+
+    from repro.core.graph import Graph, Node
+
+    r = random.Random(seed)
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if r.random() < 0.35]
+    g = Graph(
+        [Node(i, f"v{i}", r.choice([1.0, 10.0]), r.uniform(1e3, 1e9))
+         for i in range(n)],
+        edges,
+    )
+    fam = all_lower_sets(g)
+    mfb = min_feasible_budget_exact(g, fam)
+    assert solve(g, mfb, fam).feasible
+    assert not solve(g, math.nextafter(mfb, 0.0), fam).feasible
+    sw = sweep(g, fam)
+    assert sw.min_feasible_budget() == mfb
+    probes = set()
+    for b, _ in sw.frontier():
+        probes |= {b, math.nextafter(b, 0.0), math.nextafter(b, math.inf)}
+    for B in sorted(probes):
+        ref = solve(g, B, fam)
+        got = sw.solve(g, B)
+        assert got.feasible == ref.feasible
+        if ref.feasible:
+            assert got.sequence == ref.sequence
+            assert got.overhead == ref.overhead
+
+
+# ----------------------------------------------------------- planner route
+
+
+def test_planner_grid_one_sweep_bit_identical(rng):
+    """Acceptance: one sweep answers an 8-point grid bit-identically to
+    per-budget solves, from a single cache entry."""
+    g = random_dag(rng, 6)
+    c = PlanCache()
+    p = Planner(cache=c)
+    mfb = p.min_feasible_budget(g, "exact_dp")
+    budgets = [mfb * (1.0 + 3.0 * i / 7) for i in range(8)]
+    grid = p.solve_grid(g, budgets, "exact_dp")
+    assert c.stats()["misses"] == 1  # one cold sweep admitted all 8 budgets
+    fresh = [solve(g, B, all_lower_sets(g)) for B in budgets]
+    for got, ref in zip(grid, fresh):
+        assert got.feasible == ref.feasible
+        assert got.sequence == ref.sequence
+        assert got.overhead == ref.overhead
+    # later single-budget solves on the swept graph are frontier lookups
+    again = p.solve(g, budgets[3], "exact_dp")
+    assert again.sequence == fresh[3].sequence
+    assert c.stats()["misses"] == 1  # no new DP, no new cache entry
+
+
+def test_planner_sweep_shared_across_processes(tmp_path, rng):
+    """A sweep cached on disk by one planner serves budgets a second planner
+    (≈ another process) never solved."""
+    g = random_dag(rng, 5)
+    store = str(tmp_path / "plans")
+    p1 = Planner(cache=PlanCache(cache_dir=store))
+    mfb = p1.min_feasible_budget(g, "exact_dp")
+    p1.solve_grid(g, [mfb, mfb * 2.0], "exact_dp")
+    c2 = PlanCache(cache_dir=store)
+    p2 = Planner(cache=c2)
+    res = p2.solve(g, mfb * 1.5, "exact_dp")  # budget p1 never solved
+    assert c2.stats()["disk_hits"] == 1
+    assert res.sequence == solve(g, mfb * 1.5, all_lower_sets(g)).sequence
+
+
+def test_planner_grid_overflow_falls_back(rng):
+    g = random_dag(rng, 6)
+    p = Planner(cache=PlanCache(), sweep_max_states=1)
+    mfb = p.min_feasible_budget(g, "exact_dp")
+    budgets = [mfb, mfb * 1.5, mfb * 3.0]
+    grid = p.solve_grid(g, budgets, "exact_dp")
+    fresh = [solve(g, B, all_lower_sets(g)) for B in budgets]
+    for got, ref in zip(grid, fresh):
+        assert got.sequence == ref.sequence and got.overhead == ref.overhead
+
+
+def test_planner_min_budget_exact_and_cached(rng):
+    g = random_dag(rng, 6)
+    c = PlanCache()
+    p = Planner(cache=c)
+    b1 = p.min_feasible_budget(g, "exact_dp")
+    b2 = p.min_feasible_budget(g, "exact_dp")  # aux-cache hit
+    assert b1 == b2 == min_feasible_budget_exact(g, all_lower_sets(g))
+    assert p.solve(g, b1, "exact_dp").feasible
+    assert not p.solve(g, b1 * (1.0 - 1e-9), "exact_dp").feasible
+
+
+def test_corrupt_sweep_entry_degrades_to_per_budget(tmp_path, rng):
+    import os
+
+    g = random_dag(rng, 5)
+    store = str(tmp_path / "plans")
+    p1 = Planner(cache=PlanCache(cache_dir=store))
+    mfb = p1.min_feasible_budget(g, "exact_dp")
+    ref = p1.solve_grid(g, [mfb * 1.2], "exact_dp")[0]
+    for root, _dirs, files in os.walk(store):
+        for f in files:
+            with open(os.path.join(root, f), "w") as fh:
+                fh.write('{"version": 1, "kind": "sweep", "cells": "junk"}')
+    p2 = Planner(cache=PlanCache(cache_dir=store))
+    res = p2.solve(g, mfb * 1.2, "exact_dp")  # no crash, correct plan
+    assert res.sequence == ref.sequence
+
+
+# ------------------------------------------------------ satellite bugfixes
+
+
+def test_quantize_times_degenerate_graphs():
+    from repro.core.graph import Graph
+
+    empty = Graph([], [])
+    assert dp_mod.quantize_times(empty) is empty
+    g = chain(4)
+    g.time_v = [0.0] * 4  # pure-view subgraph assembled past the ctor
+    assert dp_mod.quantize_times(g) is g
+
+
+def test_exact_family_limit_single_source_of_truth():
+    import inspect
+
+    from repro.core.lower_sets import DEFAULT_LOWER_SET_LIMIT, all_lower_sets
+
+    sig = inspect.signature(all_lower_sets)
+    assert sig.parameters["limit"].default == DEFAULT_LOWER_SET_LIMIT
+    # dp.exact_dp defaults to the same limit (None → shared constant)
+    sig = inspect.signature(dp_mod.exact_dp)
+    assert sig.parameters["limit"].default is None
+
+
+def test_planner_falls_back_to_pruned_family_over_limit(rng, caplog):
+    """A graph whose 𝓛_G overflows the limit plans via the pruned family
+    with a logged note instead of surfacing RuntimeError."""
+    import logging
+
+    from repro.core import lower_sets as ls
+    from repro.core.planner import _family
+
+    g = random_dag(rng, 7, p=0.05)  # sparse → wide antichains, many ideals
+    orig = ls.DEFAULT_LOWER_SET_LIMIT
+    try:
+        ls.DEFAULT_LOWER_SET_LIMIT = 4  # force the overflow
+        with caplog.at_level(logging.WARNING, "repro.core.planner"):
+            fam = _family(g, "exact_dp")
+        assert sorted(fam, key=lambda s: (len(s), sorted(s))) == \
+            pruned_lower_sets(g)
+        assert any("pruned" in rec.message for rec in caplog.records)
+    finally:
+        ls.DEFAULT_LOWER_SET_LIMIT = orig
+
+
+def test_binary_search_bracket_and_feasibility(rng):
+    """Satellite: the search bracket is [max_v M_v, 2·M(V) + max_v M_v] and
+    the returned budget is itself feasible even at coarse tolerance."""
+    from repro.core.dp import _prepare, feasible
+
+    for tol in (0.5, 1e-1, 1e-3):
+        g = random_dag(rng, 6)
+        fam = all_lower_sets(g)
+        b = _min_feasible_budget_uncached(g, tol=tol, family=fam)
+        assert max(g.mem_v) <= b <= 2.0 * g.total_memory + max(g.mem_v)
+        assert feasible(g, b, fam, _prepare(g, fam))

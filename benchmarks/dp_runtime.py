@@ -144,6 +144,71 @@ def check_sweep(rows: Dict[str, Dict]) -> list:
     return failures
 
 
+def check_plan_function() -> list:
+    """Front-door regression guard (returned as a list of failures).
+
+    ``repro.plan_function`` must (a) produce gradients bit-identical to
+    vanilla ``jax.value_and_grad`` under a halved byte budget, and (b)
+    cache-hit on the second call — a fresh planned function over the same
+    fn/shapes re-solves nothing.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax import lax
+
+    from repro.core import PlanCache, Planner
+    from repro.core.jaxpr_graph import trace as jtrace
+    from repro.core.liveness import vanilla_peak
+    from repro.core.lowering import plan_function
+
+    dn = (((1,), (0,)), ((), ()))
+
+    def fn(params, x):
+        h = x
+        for w in params:
+            h = lax.tanh(lax.dot_general(h, w, dn))
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [jax.random.normal(jax.random.fold_in(key, i), (16, 16)) * 0.3
+              for i in range(8)]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    budget = vanilla_peak(jtrace(fn, params, x).graph, liveness=False) / 2
+
+    failures = []
+    planner = Planner(cache=PlanCache())
+    out1 = plan_function(fn, budget, planner=planner)(params, x)
+    misses_cold = planner.cache.stats()["misses"]
+    pf2 = plan_function(fn, budget, planner=planner)
+    out2 = pf2(params, x)
+    stats = planner.cache.stats()
+    if stats["hits"] < 1:
+        failures.append("plan_function: second call did not hit the plan cache")
+    if stats["misses"] > misses_cold:
+        failures.append(
+            f"plan_function: second call re-solved "
+            f"({stats['misses']} misses > cold {misses_cold})"
+        )
+    ref = jax.value_and_grad(fn)(params, x)
+    for got in (out1, out2):
+        ok = np.array_equal(np.asarray(got[0]), np.asarray(ref[0])) and all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(got[1]),
+                            jax.tree_util.tree_leaves(ref[1]))
+        )
+        if not ok:
+            failures.append(
+                "plan_function: loss/gradients not bit-identical to vanilla"
+            )
+            break
+    print(f"\n== plan_function front door ==\n"
+          f"cache: {stats['hits']} hits / {stats['misses']} misses after "
+          f"two planned calls; gradients bit-identical: "
+          f"{not any('bit-identical' in f for f in failures)}")
+    return failures
+
+
 def paper_rows(nets) -> Dict[str, Dict]:
     """The paper's §5.1 exact-vs-approximate wall-time table."""
     print("\n== DP runtime: exact vs approximate (§5.1) ==")
@@ -201,6 +266,7 @@ def main(smoke: bool = False) -> Dict[str, Dict]:
         "vgg19", "unet", "resnet50", "googlenet")
     out = {"paper": paper_rows(nets), "sweep": sweep_rows(sweep_nets)}
     failures = check_sweep(out["sweep"])
+    failures += check_plan_function()
     if failures:
         print("\nREGRESSIONS:")
         for f in failures:
@@ -210,7 +276,8 @@ def main(smoke: bool = False) -> Dict[str, Dict]:
     elif smoke:
         print("\nsmoke OK: sweep grids bit-identical, within 2x of the "
               "per-budget loop's DP work; exact min budget feasible and "
-              "<= search")
+              "<= search; plan_function cache-hits and matches vanilla "
+              "gradients bit-for-bit")
     return out
 
 

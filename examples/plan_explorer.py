@@ -1,15 +1,25 @@
-"""Plan explorer: the paper's Table-1 methods on any benchmark network or
-assigned architecture, with an ASCII memory-vs-overhead frontier.
+"""Plan explorer: the paper's Table-1 methods on any benchmark network,
+assigned architecture, or **arbitrary traced JAX function**, with an ASCII
+memory-vs-overhead frontier.
 
 The whole exploration is ONE budget-free DP pass: ``Planner.solve_grid``
 builds a capped sweep (core.dp.sweep) whose terminal frontier carries the
-exact minimal feasible budget and every (budget → plan) point at once, and
+exact ``min_feasible_budget`` and every (budget → plan) point at once, and
 caches it in the content-addressed plan cache under the budget-free
 ``sweep`` entry kind — so re-exploring a network, or pointing --cache-dir
-(or REPRO_PLAN_CACHE_DIR) at a shared store, re-runs no DP at all.
+(or REPRO_PLAN_CACHE_DIR) at a shared store, re-runs no DP at all.  When a
+larger budget shows up later, the cached surface is lazily *extended*
+(``Sweep.extend``), never rebuilt.
 
 Run: PYTHONPATH=src:. python examples/plan_explorer.py --network unet
      PYTHONPATH=src:. python examples/plan_explorer.py --arch stablelm-3b
+     PYTHONPATH=src:. python examples/plan_explorer.py --traced demo
+     PYTHONPATH=src:. python examples/plan_explorer.py --traced pkg.mod:factory
+
+``--traced`` explores any model via the plan_function front door: pass
+``module:factory`` where ``factory()`` returns ``(fn, example_args)`` —
+the function is traced (one graph node per jaxpr equation) and explored
+like any benchmark network.  ``demo`` uses a built-in MLP factory.
 """
 
 import argparse
@@ -22,17 +32,26 @@ from repro.core import (
 )
 
 
+def _gb(x: float) -> str:
+    """Adaptive byte formatting (benchmark nets are GB, traced demos KB)."""
+    if x >= 1e8:
+        return f"{x/1e9:.2f} GB"
+    if x >= 1e5:
+        return f"{x/1e6:.2f} MB"
+    return f"{x:.0f} B"
+
+
 def frontier(g, n_points: int = 8):
     """One sweep: exact min budget + the whole trade-off curve."""
     planner = get_default_planner()
     fam = planner.family(g, "approx_dp")  # memoized — shared with the solves
     B_min = planner.min_feasible_budget(g, "approx_dp")  # exact, no search
     van = vanilla_peak(g, liveness=True)
-    print(f"#V={g.n}  #L^pruned={len(fam)}  vanilla peak={van/1e9:.2f} GB  "
-          f"min feasible B={B_min/1e9:.2f} GB (exact)")
+    print(f"#V={g.n}  #L^pruned={len(fam)}  vanilla peak={_gb(van)}  "
+          f"min_feasible_budget={_gb(B_min)} (exact)")
     chen = chen_sqrt_n(g)
     chen_pk = simulate(g, chen.sequence, liveness=True).peak_memory
-    print(f"Chen √n: peak {chen_pk/1e9:.2f} GB, overhead "
+    print(f"Chen √n: peak {_gb(chen_pk)}, overhead "
           f"{100*chen.overhead/g.total_time:.0f}% of fwd\n")
 
     budgets = [B_min * (1.0 + 3.0 * i / max(n_points - 1, 1))
@@ -45,11 +64,11 @@ def frontier(g, n_points: int = 8):
         pk = simulate(g, res.sequence, liveness=True).peak_memory
         oh = 100 * res.overhead / g.total_time
         rows.append((pk, oh, res.num_segments))
-    print(f"{'peak GB':>8s} {'overhead%':>10s} {'segments':>9s}  frontier")
+    print(f"{'peak':>12s} {'overhead%':>10s} {'segments':>9s}  frontier")
     max_oh = max(oh for _, oh, _ in rows) or 1
     for pk, oh, k in rows:
         bar = "#" * int(1 + 40 * oh / max_oh)
-        print(f"{pk/1e9:8.2f} {oh:10.1f} {k:9d}  {bar}")
+        print(f"{_gb(pk):>12s} {oh:10.1f} {k:9d}  {bar}")
 
     # the sweep's own Pareto staircase: every budget regime below the cap
     from repro.core import SweepOverflow
@@ -58,11 +77,64 @@ def frontier(g, n_points: int = 8):
         crit = planner.frontier(g, "approx_dp")
     except SweepOverflow:
         return  # surface too wide for a full sweep — grid above suffices
-    print(f"\n{len(crit)} critical budgets (full frontier from one sweep):")
+    print(f"\n{len(crit)} critical budgets (full frontier from one sweep; "
+          f"the first is min_feasible_budget):")
     for B, oh in crit[:12]:
-        print(f"  B ≥ {B/1e9:7.2f} GB → overhead {100*oh/g.total_time:5.1f}%")
+        print(f"  B ≥ {_gb(B):>12s} → overhead {100*oh/g.total_time:5.1f}%")
     if len(crit) > 12:
         print(f"  … {len(crit) - 12} more")
+
+
+def _demo_factory():
+    """Built-in --traced entry: a 12-layer lax MLP with a skip connection."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    dn = (((1,), (0,)), ((), ()))
+
+    def fn(params, x):
+        h = x
+        skip = None
+        for i, w in enumerate(params):
+            h = lax.tanh(lax.dot_general(h, w, dn))
+            if i == 2:
+                skip = h
+            if i == 8:
+                h = h + skip
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [
+        jax.random.normal(jax.random.fold_in(key, i), (64, 64)) * 0.2
+        for i in range(12)
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+    return fn, (params, x)
+
+
+def traced_graph(spec: str):
+    """``module:factory`` (or ``demo``) → paper graph via the front door."""
+    if spec == "demo":
+        fn, args = _demo_factory()
+    else:
+        import importlib
+
+        mod_name, _, attr = spec.partition(":")
+        if not attr:
+            raise SystemExit(
+                f"--traced wants 'module:factory' or 'demo', got {spec!r}"
+            )
+        fn, args = getattr(importlib.import_module(mod_name), attr)()
+    import repro
+
+    planned = repro.plan_function(fn)  # budget=None: min_feasible_budget
+    lowered = planned.lowered_for(*args)
+    g = lowered.carrier.to_graph()
+    print(f"traced {spec}: {g.n} equations, backend {lowered.backend!r}, "
+          f"plan at min_feasible_budget: {len(lowered.plan.segments)} "
+          f"segments, overhead {lowered.plan.overhead:.0f} T-units")
+    return g
 
 
 def main():
@@ -70,6 +142,9 @@ def main():
     ap.add_argument("--network", default=None,
                     help="one of the paper's nets (benchmarks.networks)")
     ap.add_argument("--arch", default=None, help="assigned architecture id")
+    ap.add_argument("--traced", default=None,
+                    help="'demo' or 'module:factory' returning "
+                         "(fn, example_args) — explore any JAX function")
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk plan cache (re-runs become lookups)")
     args = ap.parse_args()
@@ -79,7 +154,9 @@ def main():
 
         set_default_cache_dir(args.cache_dir)
 
-    if args.arch:
+    if args.traced:
+        g = traced_graph(args.traced)
+    elif args.arch:
         from repro.configs import SHAPES, get_config
         from repro.launch.plan import chain_graph, plan_inputs
 

@@ -1,67 +1,100 @@
-"""Quickstart: the paper's pipeline in 40 lines.
+"""Quickstart: plan ANY JAX function's recomputation in three lines.
 
-1. Describe (or trace) a network as the paper's graph G = (V, E).
-2. Solve the General Recomputation Problem under a memory budget.
-3. Execute the canonical strategy and verify it computes the same gradients.
+    planned = repro.plan_function(loss_fn, budget_bytes)
+    loss, grads = planned(params, x)       # value_and_grad twin
+
+Behind the front door: the function is traced to the paper's graph
+G = (V, E) (one node per jaxpr equation), the General Recomputation
+Problem is solved under the byte budget by the DP (through the
+content-addressed plan cache), and the plan is lowered to a
+``jax.checkpoint`` policy that saves exactly the cache set U_k.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+(The assertions double as the CI smoke for the front door.)
 """
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
-from repro.core import (
-    exact_dp,
-    min_feasible_budget,
-    make_plan,
-    plan_summary,
-    simulate,
-    vanilla_peak,
-)
-from repro.core.blockgraph import Block, BlockGraph
-from repro.core.executor import planned_value_and_grad, vanilla_value_and_grad
+import repro
+from repro.core import PlanCache, Planner, vanilla_peak
+from repro.core.jaxpr_graph import trace
 
+# ---------------------------------------------------------------------------
+# 1. A plain JAX function — no BlockGraph, no framework cooperation.
+#    (lax primitives keep eager replay bit-exact; jnp wrappers like
+#    jnp.tanh run as separate jit units eagerly and may drift by 1 ulp.)
+# ---------------------------------------------------------------------------
 
-def lin_init(rng, *in_shapes):
-    din = sum(s[-1] for s in in_shapes)
-    return {"w": jax.random.normal(rng, (din, 32)) * 0.2}
+DN = (((1,), (0,)), ((), ()))  # plain 2-D matmul dimension_numbers
 
 
-def lin(p, *xs):
-    x = jnp.concatenate(xs, axis=-1) if len(xs) > 1 else xs[0]
-    return jnp.tanh(x @ p["w"])
+def mlp_loss(params, x):
+    h = x
+    for w in params:
+        h = lax.tanh(lax.dot_general(h, w, DN))
+    return jnp.sum(h * h)
 
 
-# 1. an 8-block MLP with a skip connection — a small "general graph"
-blocks = [Block("b1", lin, ("x",), lin_init)]
-for i in range(2, 8):
-    blocks.append(Block(f"b{i}", lin, (f"b{i-1}",), lin_init))
-blocks.append(Block("b8", lin, ("b7", "b2"), lin_init))  # skip: b2 → b8
-bg = BlockGraph(blocks, ["x"], ["b8"])
+key = jax.random.PRNGKey(0)
+params = [
+    jax.random.normal(jax.random.fold_in(key, i), (32, 32)) * 0.3
+    for i in range(10)
+]
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
 
-params = bg.init(jax.random.PRNGKey(0), {"x": (16, 32)})
-inputs = {"x": jax.random.normal(jax.random.PRNGKey(1), (16, 32))}
+# ---------------------------------------------------------------------------
+# 2. Halve the activation budget and plan through the front door.
+# ---------------------------------------------------------------------------
 
-# 2. the paper's graph + the general recomputation problem
-g = bg.to_graph(params, inputs)
-B = min_feasible_budget(g, "exact_dp")
-result = exact_dp(g, B)
-plan = make_plan(g, result.sequence)
-print(plan_summary(g, plan))
-print(f"vanilla peak   : {vanilla_peak(g):.0f} bytes")
-print(f"planned peak   : {simulate(g, result.sequence).peak_memory:.0f} bytes "
-      f"(budget {B:.0f})")
-print(f"overhead       : {result.overhead:.0f} T-units "
-      f"({100 * result.overhead / g.total_time:.0f}% of one forward)")
+g = trace(mlp_loss, params, x).graph
+budget = vanilla_peak(g, liveness=False) / 2
+planner = Planner(cache=PlanCache())
 
-# 3. canonical strategy == vanilla backprop, exactly
-loss = lambda out: jnp.sum(out**2)
-l0, g0 = vanilla_value_and_grad(bg, loss)(params, inputs)
-l1, g1 = planned_value_and_grad(bg, plan, loss)(params, inputs)
-diff = max(
-    float(jnp.max(jnp.abs(a - b)))
-    for a, b in zip(jax.tree_util.tree_leaves(g0), jax.tree_util.tree_leaves(g1))
-)
-print(f"loss match: {float(l0):.6f} == {float(l1):.6f}; max grad diff {diff:.2e}")
-assert diff < 1e-5
-print("OK — the canonical strategy never alters the computation (§3).")
+planned = repro.plan_function(mlp_loss, budget, planner=planner)
+loss, grads = planned(params, x)
+
+lowered = planned.lowered_for(params, x)
+print(f"graph: {g.n} equations; budget {budget:.0f} B "
+      f"(vanilla needs {vanilla_peak(g, liveness=False):.0f} B)")
+print(f"plan: {len(lowered.plan.segments)} segments, "
+      f"analytic peak {lowered.plan.peak_memory:.0f} B, "
+      f"overhead {lowered.plan.overhead:.0f} T-units, "
+      f"backend {lowered.backend!r}")
+assert lowered.plan.peak_memory <= budget
+
+# ---------------------------------------------------------------------------
+# 3. The canonical strategy never alters the computation (§3): loss and
+#    gradients are bit-identical to vanilla jax.value_and_grad.
+# ---------------------------------------------------------------------------
+
+ref_loss, ref_grads = jax.value_and_grad(mlp_loss)(params, x)
+assert np.array_equal(np.asarray(loss), np.asarray(ref_loss))
+for a, b in zip(grads, ref_grads):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+print(f"loss {float(loss):.6f} == vanilla, gradients bit-identical")
+
+# The paper-faithful interpreter backend audits the memory claim live:
+audited = repro.plan_function(mlp_loss, budget, backend="interpreter",
+                              planner=planner, track_live=True)
+_, _, live = audited(params, x)
+peak_live = max(b for _, b in live)
+print(f"measured live intermediates {peak_live} B <= "
+      f"plan peak {lowered.plan.peak_memory:.0f} B")
+assert peak_live <= lowered.plan.peak_memory
+
+# ---------------------------------------------------------------------------
+# 4. Re-planning is a cache hit: a fresh planned function re-solves nothing.
+# ---------------------------------------------------------------------------
+
+before = planner.cache.stats()
+again = repro.plan_function(mlp_loss, budget, planner=planner)
+_ = again(params, x)
+after = planner.cache.stats()
+assert after["hits"] > before["hits"], (before, after)
+assert again.lowered_for(params, x).plan == lowered.plan
+print(f"second plan_function call: plan-cache hit "
+      f"({after['hits']} hits, {after['misses']} misses)")
+print("OK — one pipeline: trace -> plan (cached) -> lowering.")

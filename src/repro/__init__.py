@@ -1,0 +1,40 @@
+"""repro — graph-theoretic recomputation planning on JAX (Kusumoto et al.).
+
+Front door::
+
+    import repro
+
+    planned = repro.plan_function(loss_fn, budget=bytes)   # any JAX callable
+    loss, grads = planned(params, batch)                   # value_and_grad twin
+
+One pipeline behind it: graph carriers (traced jaxpr | BlockGraph) →
+``core.planner.Planner`` (plan cache + budget sweep) → registered Lowering
+backends (``core.lowering``).  Heavy imports are deferred: ``import repro``
+alone stays cheap.
+"""
+
+from typing import TYPE_CHECKING
+
+__all__ = [
+    "plan_function",
+    "PlannedFunction",
+    "Planner",
+    "plan",
+    "min_feasible_budget",
+]
+
+if TYPE_CHECKING:  # pragma: no cover — static-analysis only
+    from repro.core.lowering import PlannedFunction, plan_function
+    from repro.core.planner import Planner, min_feasible_budget, plan
+
+
+def __getattr__(name):  # PEP 562 lazy re-exports
+    if name in ("plan_function", "PlannedFunction"):
+        from repro.core import lowering
+
+        return getattr(lowering, name)
+    if name in ("Planner", "plan", "min_feasible_budget"):
+        from repro.core import planner
+
+        return getattr(planner, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,9 +1,26 @@
 """repro.core — the paper's contribution as a library.
 
-Graph-theoretic recomputation planning (Kusumoto et al., NeurIPS 2019):
-lower-set sequences, exact/approximate DP, memory-/time-centric strategies,
-Chen's √n baseline, liveness simulation, and the bridges into JAX
-(jaxpr graph extraction, checkpoint-policy lowering, segmented executor).
+Graph-theoretic recomputation planning (Kusumoto et al., NeurIPS 2019),
+organized as **one pipeline**:
+
+    graph carriers → Planner → Lowering backends
+
+* **Carriers** (``core.lowering.carriers``): what gets planned — a
+  ``BlockGraph`` model DAG, or *any traced JAX function* via
+  ``core.jaxpr_graph``.  Both export the paper's ``Graph`` (§2).
+* **Planner** (``core.planner``): lower-set families (§4.2/§4.3), the
+  exact/approximate DP (Algorithm 1), the budget-free sweep engine with
+  lazy cap extension, the exact minimal feasible budget, Chen's √n
+  baseline — all memoized through the content-addressed plan cache and
+  optionally priced by the measured cost model.
+* **Lowerings** (``core.lowering``): registered backends turning an
+  ``ExecutionPlan`` into runnable code — the §3 interpreter (validation +
+  live-byte audit), the ``jax.checkpoint``/``save_only_these_names``
+  policy and per-segment groupings (production BlockGraph paths), and the
+  jaxpr-level lowering for traced functions.
+
+``plan_function`` (also ``repro.plan_function``) is the front door;
+``core.executor`` and ``core.remat`` remain as deprecation shims.
 """
 
 from .chen import articulation_points, candidate_split_points, chen_sqrt_n
@@ -41,6 +58,14 @@ from .graph import (
 )
 from .liveness import SimResult, simulate, vanilla_peak
 from .lower_sets import all_lower_sets, count_lower_sets, pruned_lower_sets
+from .lowering import (
+    Lowering,
+    PlannedFunction,
+    available_backends,
+    get_lowering,
+    plan_function,
+    register_lowering,
+)
 from .plan_cache import (
     PlanCache,
     PlanKey,
@@ -110,4 +135,11 @@ __all__ = [
     "load_or_profile",
     "measured_times",
     "calibrated_graph",
+    # unified lowering pipeline
+    "plan_function",
+    "PlannedFunction",
+    "Lowering",
+    "register_lowering",
+    "get_lowering",
+    "available_backends",
 ]

@@ -21,7 +21,6 @@ TPU, where XLA already fuses within a block.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -30,7 +29,7 @@ import numpy as np
 
 from .graph import Graph, Node
 from .jaxpr_graph import aval_bytes, eqn_is_heavy, trace
-from .schedule import ExecutionPlan, Segment
+from .schedule import ExecutionPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,53 +157,15 @@ class BlockGraph:
     ) -> Any:
         """Execute under the canonical strategy: per-segment jax.checkpoint.
 
-        Each segment V_i runs inside ``jax.checkpoint``: its residuals are its
-        *inputs* — exactly the cached boundary values ∂(L_{i-1}) ∪ earlier
-        caches it consumes — and its interior is recomputed during backward,
-        which is precisely §3's canonical strategy.
+        Delegates to the ``"segment"`` lowering backend
+        (``core.lowering.segment.apply_segmented``): each segment V_i runs
+        inside ``jax.checkpoint``, its residuals are its inputs (the cached
+        boundary values) and its interior is recomputed during backward —
+        precisely §3's canonical strategy.
         """
-        name_of = {i: b.name for i, b in enumerate(self.blocks)}
-        values: Dict[str, Any] = dict(inputs)
+        from .lowering.segment import apply_segmented
 
-        for seg in plan.segments:
-            seg_blocks = [self.by_name[name_of[v]] for v in seg.nodes]
-            # external inputs of this segment (cached boundary values)
-            internal = {b.name for b in seg_blocks}
-            ext_names: List[str] = []
-            for b in seg_blocks:
-                for i in b.inputs:
-                    if i not in internal and i not in ext_names:
-                        ext_names.append(i)
-            # values the rest of the graph needs from this segment
-            out_names = [
-                b.name
-                for b in seg_blocks
-                if self._needed_later(b.name, internal)
-            ]
-
-            def seg_fn(seg_params, *ext_vals, _blocks=seg_blocks, _ext=tuple(ext_names), _out=tuple(out_names)):
-                local: Dict[str, Any] = dict(zip(_ext, ext_vals))
-                for b in _blocks:
-                    local[b.name] = b.apply(
-                        seg_params[b.name], *[local[i] for i in b.inputs]
-                    )
-                return tuple(local[o] for o in _out)
-
-            seg_params = {b.name: params[b.name] for b in seg_blocks}
-            wrapped = jax.checkpoint(seg_fn, policy=checkpoint_policy)
-            outs = wrapped(seg_params, *[values[i] for i in ext_names])
-            values.update(dict(zip(out_names, outs)))
-
-        res = tuple(values[o] for o in self.outputs)
-        return res[0] if len(res) == 1 else res
-
-    def _needed_later(self, name: str, internal: set) -> bool:
-        if name in self.outputs:
-            return True
-        for b in self.blocks:
-            if name in b.inputs and b.name not in internal:
-                return True
-        return False
+        return apply_segmented(self, params, inputs, plan, checkpoint_policy)
 
 
 # ---------------------------------------------------------------------------
@@ -221,13 +182,20 @@ def plan_blockgraph(
     objective: str = "time_centric",
     cost_model: str = "paper",
 ):
-    """Trace → plan → return (PlanReport, planned_apply)."""
+    """Trace → plan → return (PlanReport, planned_apply).
+
+    The plan-only slice of the unified pipeline: carrier (this BlockGraph)
+    → shared Planner (plan cache + budget sweep) → the ``"segment"``
+    lowering via ``apply_planned``.  Callers wanting a value_and_grad twin
+    should use ``repro.plan_function(bg, budget, loss_fn=...)`` instead.
+    """
+    from .lowering.base import InfeasibleBudgetError
     from .planner import plan as _plan
 
     g = bg.to_graph(params, inputs, cost_model=cost_model)
     report = _plan(g, budget=budget, method=method, objective=objective)
     if report.plan is None:
-        raise ValueError("infeasible budget for this BlockGraph")
+        raise InfeasibleBudgetError("infeasible budget for this BlockGraph")
 
     def planned_apply(p, x):
         return bg.apply_planned(p, x, report.plan)

@@ -40,21 +40,9 @@ from typing import Dict, Optional
 
 from .dp import quantize_times
 from .graph import Graph, Node
+from .prims import ATTENTION_KINDS, MATMUL_KINDS  # shared tables (core.prims)
 
 PROFILE_VERSION = 1
-
-# Node kinds priced as compute-bound matmul-class work (time field = FLOPs).
-MATMUL_KINDS = {
-    "dot_general",
-    "conv_general_dilated",
-    "ragged_dot",
-    "unit",  # launch.plan.chain_graph interior nodes (FLOPs in `time`)
-    "matmul",
-    "conv",
-}
-
-# Node kinds priced at the attention kernel's achieved rate.
-ATTENTION_KINDS = {"attention", "flash_attention", "custom_vjp_call"}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -426,6 +426,15 @@ class _Cell:
     def min_peak(self) -> float:
         return self.peaks[0] if self.peaks else INF
 
+    def copy(self) -> "_Cell":
+        out = _Cell()
+        out.peaks = list(self.peaks)
+        out.ms = list(self.ms)
+        out.poss = list(self.poss)
+        out.parent_ids = list(self.parent_ids)
+        out.parent_ts = list(self.parent_ts)
+        return out
+
 
 class SweepOverflow(RuntimeError):
     """Raised when a sweep would exceed its ``max_states`` work cap.
@@ -533,6 +542,31 @@ class Sweep:
         """True iff ``extract(budget)`` is answerable from this sweep."""
         return self.cap is None or budget <= self.cap
 
+    def extend(self, g: Graph, cap: Optional[float] = None,
+               max_states: Optional[int] = None) -> "Sweep":
+        """Grow this capped surface to ``cap`` (None = the full surface).
+
+        Lazy refinement: a capped sweep's cells are exactly the full
+        surface's cells with every candidate of peak > cap dropped — a
+        large-peak candidate can only dominate/evict larger-peak ones, so
+        the ≤ cap band is unaffected by the missing tail.  Extension
+        therefore re-runs the transition pass seeded with the existing
+        cells and only *inserts* candidates in the new ``(old cap, cap]``
+        band; the already-materialized band is never re-built, and pairs
+        that cannot reach the new band are skipped outright.
+
+        ``g`` must be labeled in the sweep's own coordinates (as for
+        :meth:`solve`); the planner remaps cached canonical sweeps first.
+        Returns a **new** Sweep (``self`` is not mutated) whose
+        ``extract(B)`` is bit-identical to a fresh
+        ``sweep(g, family, cap=cap)`` at every ``B ≤ cap``.
+        """
+        if self.cap is None or (cap is not None and cap <= self.cap):
+            return self  # already covers the requested range
+        family = [from_mask(mk) for mk in self.family_masks]
+        return sweep(g, family, self.objective, max_states=max_states,
+                     cap=cap, prior=self)
+
     # ------------------------------------------------------------ extraction
 
     def _terminal_t(self, budget: float) -> Optional[float]:
@@ -605,7 +639,11 @@ class Sweep:
         Memory-centric: overhead strictly increasing (§4.4 maximizes).
         """
         term = self.cells[self.full_id]
-        pts = sorted((cell.min_peak(), t) for t, cell in term.items())
+        # empty cells (every candidate above the cap) carry peak = INF and
+        # would otherwise emit phantom staircase entries
+        pts = sorted(
+            (cell.min_peak(), t) for t, cell in term.items() if cell.peaks
+        )
         out: List[Tuple[float, float]] = []
         better = (lambda a, b: a < b) if self.objective == "time_centric" else (
             lambda a, b: a > b)
@@ -707,7 +745,8 @@ def decode_sweep(entry: dict) -> Optional[Sweep]:
 def sweep(g: Graph, family: Sequence[NodeSet],
           objective: str = "time_centric",
           max_states: Optional[int] = None,
-          cap: Optional[float] = None) -> Sweep:
+          cap: Optional[float] = None,
+          prior: Optional[Sweep] = None) -> Sweep:
     """One budget-free DP pass carrying ``(t, m, peak)`` frontiers.
 
     Identical transition structure to :func:`solve`, with eq. 2's 𝓜⁽ⁱ⁾
@@ -737,6 +776,13 @@ def sweep(g: Graph, family: Sequence[NodeSet],
     *largest* budget of interest times the number of regimes below it,
     instead of the full surface.  ``extract(B)`` stays bit-identical for
     every ``B ≤ cap`` and raises beyond it.
+
+    ``prior`` (normally via :meth:`Sweep.extend`) seeds the pass with an
+    existing capped sweep over the *same* graph/family/objective: only
+    candidates with peak in ``(prior.cap, cap]`` are inserted, and
+    transition pairs that cannot reach that band are skipped, so growing a
+    cap costs the new band, not a rebuild.  ``states_visited`` then counts
+    the prior's work plus this pass's *new* expansion work only.
     """
     if objective not in ("time_centric", "memory_centric"):
         raise ValueError(f"unknown objective {objective!r}")
@@ -759,7 +805,25 @@ def sweep(g: Graph, family: Sequence[NodeSet],
     if empty_id is None or full_id is None:
         raise ValueError("family must contain ∅ and V")
 
-    cells: List[Dict[float, _Cell]] = [{} for _ in infos]
+    skip_cap = -INF  # candidates with peak ≤ skip_cap are already present
+    prior_states = 0
+    if prior is not None:
+        if prior.objective != objective:
+            raise ValueError(
+                f"prior sweep objective {prior.objective!r} != {objective!r}"
+            )
+        if prior.family_masks != [info.mask for info in infos]:
+            raise ValueError("prior sweep was built over a different family")
+        if prior.cap is None or (cap is not None and cap <= prior.cap):
+            return prior  # nothing to extend
+        skip_cap = prior.cap
+        prior_states = prior.states_visited
+        cells = [
+            {t: cell.copy() for t, cell in cdict.items()}
+            for cdict in prior.cells
+        ]
+    else:
+        cells = [{} for _ in infos]
 
     states = 0
     state_cap = max_states if max_states is not None else INF
@@ -767,9 +831,10 @@ def sweep(g: Graph, family: Sequence[NodeSet],
     n_fam = len(order)
     sizes = [infos[i].size for i in order]
 
-    seed = _Cell()
-    seed.insert(0.0, 0.0, -1, -1, 0.0)
-    cells[empty_id][0.0] = seed
+    if prior is None:
+        seed = _Cell()
+        seed.insert(0.0, 0.0, -1, -1, 0.0)
+        cells[empty_id][0.0] = seed
 
     for pos, i in enumerate(order):
         info_L = infos[i]
@@ -828,6 +893,8 @@ def sweep(g: Graph, family: Sequence[NodeSet],
             m_fixed = 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
             target = cells[j]
             for t, kms, kpeaks in expansions:
+                if kpeaks[0] <= skip_cap and kms[-1] + m_fixed <= skip_cap:
+                    continue  # extension: every candidate is in the old band
                 t2 = t + t_step
                 cell2 = target.get(t2)
                 if cell2 is None:
@@ -846,7 +913,13 @@ def sweep(g: Graph, family: Sequence[NodeSet],
                     else:
                         lo = mid + 1
                 end = lo + 1 if lo < len(kms) else lo
-                states += end
+                if prior is None:
+                    states += end
+                # extension pass: counted per new-band candidate below —
+                # each unit of count is a candidate that can actually grow
+                # the surface, so cumulative extensions stay bounded by
+                # max_states (a lower bound on a fresh build's count, i.e.
+                # extensions never overflow where a fresh build would fit)
                 # inlined _Cell.insert — this is the sweep's hot loop
                 peaks2 = cell2.peaks
                 ms2 = cell2.ms
@@ -861,6 +934,10 @@ def sweep(g: Graph, family: Sequence[NodeSet],
                         peak = Mi
                     if peak > budget_cap:
                         continue  # beyond the swept budget range
+                    if peak <= skip_cap:
+                        continue  # already materialized by the prior sweep
+                    if prior is not None:
+                        states += 1  # extension: count new-band work only
                     m2 = m + m_step
                     ci = bisect_left(peaks2, peak)
                     if ci > 0:
@@ -884,10 +961,14 @@ def sweep(g: Graph, family: Sequence[NodeSet],
                     poss2.insert(ci, src_pos)
                     pids2.insert(ci, i)
                     pts2.insert(ci, t)
-        if states > state_cap:
+        # the cap bounds the *cumulative* surface (prior + extension): a
+        # runaway sequence of lazy extensions trips it just as unbounded
+        # fresh builds would (extension counts only surface-growing work,
+        # so it is the permissive side of the fresh-build count)
+        if prior_states + states > state_cap:
             raise SweepOverflow(
                 f"budget sweep exceeded max_states={max_states} "
-                f"({states} transitions; family of {n_fam})"
+                f"({prior_states + states} transitions; family of {n_fam})"
             )
 
     return Sweep(
@@ -897,7 +978,7 @@ def sweep(g: Graph, family: Sequence[NodeSet],
         cells=cells,
         empty_id=empty_id,
         full_id=full_id,
-        states_visited=states,
+        states_visited=prior_states + states,
         cap=cap,
     )
 

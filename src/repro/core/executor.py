@@ -1,184 +1,23 @@
-"""Paper-faithful interpreter of the canonical strategy (§3).
+"""Deprecated shim — the interpreter now lives in ``core.lowering``.
 
-While ``BlockGraph.apply_planned`` lowers the plan into ``jax.checkpoint``
-(the production path), this module *interprets* the strategy step by step —
-forward caching only ∂(L_i), backward recomputing each V_i from ∂(L_{i-1}) —
-so tests can assert that the strategy's gradients match vanilla
-backpropagation exactly, and so the per-step live set can be audited against
-the liveness simulator.
+The paper-faithful segment interpreter moved to
+``core.lowering.interpreter`` as the ``"interpreter"`` backend of the
+unified planning pipeline; ``planned_value_and_grad_under_budget`` is a
+wrapper over ``repro.plan_function``.  This module re-exports the old
+entry points for existing callers — new code should use::
 
-This is the executable twin of ``core.liveness.build_events``.
+    from repro.core.lowering import plan_function
+
+    planned = plan_function(bg, budget, backend="interpreter", loss_fn=...)
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from .lowering.front_door import planned_value_and_grad_under_budget
+from .lowering.interpreter import planned_value_and_grad, vanilla_value_and_grad
 
-import jax
-import jax.numpy as jnp
-
-from .blockgraph import BlockGraph
-from .schedule import ExecutionPlan
-
-
-def planned_value_and_grad(
-    bg: BlockGraph,
-    plan: ExecutionPlan,
-    loss_fn: Callable[..., jax.Array],
-    track_live: bool = False,
-):
-    """Return f(params, inputs) -> (loss, grads_params[, live_trace]).
-
-    loss_fn consumes the BlockGraph outputs and returns a scalar.
-    Gradients are produced by interpreting the canonical strategy:
-
-      forward : run segments in order; after segment i discard every value of
-                V_i not in U_k (the union of boundaries).
-      backward: for i = k…1, recompute the discarded values of V_i from the
-                caches, then run per-block VJPs in reverse topological order.
-    """
-    name_of = {i: b.name for i, b in enumerate(bg.blocks)}
-
-    def run(params: Dict[str, Any], inputs: Dict[str, Any]):
-        live_trace: List[Tuple[str, int]] = []
-        cached_names = {name_of[v] for v in plan.cached}
-
-        def snapshot(tag: str, store: Dict[str, Any]) -> None:
-            if track_live:
-                nbytes = sum(
-                    sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(v))
-                    for v in store.values()
-                )
-                live_trace.append((tag, int(nbytes)))
-
-        # ---------------- forward ----------------
-        cache: Dict[str, Any] = dict(inputs)
-        for seg in plan.segments:
-            local: Dict[str, Any] = {}
-            for v in seg.nodes:
-                b = bg.by_name[name_of[v]]
-                args = [
-                    local[i] if i in local else cache[i] for i in b.inputs
-                ]
-                local[b.name] = b.apply(params[b.name], *args)
-            # canonical rule: keep only boundary values (and model outputs)
-            for name, val in local.items():
-                if name in cached_names or name in bg.outputs:
-                    cache[name] = val
-            snapshot(f"fwd_seg{seg.index}", cache)
-
-        outs = tuple(cache[o] for o in bg.outputs)
-        loss, loss_vjp = jax.vjp(
-            lambda *o: loss_fn(*o) if len(o) > 1 else loss_fn(o[0]), *outs
-        )
-        out_grads = loss_vjp(jnp.ones_like(loss))
-
-        # ---------------- backward ----------------
-        grad_of: Dict[str, Any] = {}
-        for o, g in zip(bg.outputs, out_grads):
-            grad_of[o] = g
-        param_grads: Dict[str, Any] = {}
-
-        for seg in reversed(plan.segments):
-            # recompute discarded values of V_i from live caches
-            local: Dict[str, Any] = {}
-            for v in seg.nodes:
-                b = bg.by_name[name_of[v]]
-                if b.name in cache:
-                    local[b.name] = cache[b.name]
-                    continue
-                args = [local[i] if i in local else cache[i] for i in b.inputs]
-                local[b.name] = b.apply(params[b.name], *args)
-            snapshot(f"bwd_recompute_seg{seg.index}", {**cache, **local})
-
-            # VJP sweep, reverse topological order within the segment
-            for v in reversed(seg.nodes):
-                b = bg.by_name[name_of[v]]
-                g_out = grad_of.pop(b.name, None)
-                if g_out is None:
-                    continue  # value unused by the loss
-                args = [local[i] if i in local else cache[i] for i in b.inputs]
-                _out, vjp = jax.vjp(b.apply, params[b.name], *args)
-                pulls = vjp(g_out)
-                g_param, g_args = pulls[0], pulls[1:]
-                param_grads[b.name] = (
-                    jax.tree_util.tree_map(jnp.add, param_grads[b.name], g_param)
-                    if b.name in param_grads
-                    else g_param
-                )
-                for i_name, g_arg in zip(b.inputs, g_args):
-                    if i_name in inputs:
-                        continue  # no grads w.r.t. graph inputs requested
-                    grad_of[i_name] = (
-                        grad_of[i_name] + g_arg if i_name in grad_of else g_arg
-                    )
-            # discard this segment's forward values (canonical rule); its
-            # cached boundary values are no longer needed either once the
-            # earlier-segment gradients that flow *through* them are queued.
-            for v in seg.nodes:
-                cache.pop(name_of[v], None)
-            snapshot(f"bwd_done_seg{seg.index}", cache)
-
-        # blocks with no params still get an empty-grads entry for tree-match
-        for b in bg.blocks:
-            if b.name not in param_grads:
-                param_grads[b.name] = jax.tree_util.tree_map(
-                    jnp.zeros_like, params[b.name]
-                )
-        if track_live:
-            return loss, param_grads, live_trace
-        return loss, param_grads
-
-    return run
-
-
-def vanilla_value_and_grad(
-    bg: BlockGraph, loss_fn: Callable[..., jax.Array]
-):
-    """Reference: jax.value_and_grad over the vanilla executor."""
-
-    def f(params, inputs):
-        out = bg.apply(params, inputs)
-        return loss_fn(*out) if isinstance(out, tuple) else loss_fn(out)
-
-    return jax.value_and_grad(f)
-
-
-def planned_value_and_grad_under_budget(
-    bg: BlockGraph,
-    params: Dict[str, Any],
-    inputs: Dict[str, Any],
-    loss_fn: Callable[..., jax.Array],
-    budget: Optional[float] = None,
-    method: str = "approx_dp",
-    objective: str = "time_centric",
-    cost_model: str = "paper",
-    planner=None,
-    track_live: bool = False,
-):
-    """Trace → plan (through the plan cache) → interpret, in one call.
-
-    The planning step routes through ``core.planner.Planner`` (the
-    process-default one unless ``planner`` is given), so rebuilding the
-    runner for the same BlockGraph and budget — a new training process, a
-    re-created executor in a sweep — reuses the cached DP solution instead
-    of re-solving it.  Returns ``(run_fn, PlanReport)``.
-    """
-    from .planner import get_default_planner
-
-    g = bg.to_graph(params, inputs, cost_model=cost_model)
-    pl = planner or get_default_planner()
-    report = pl.plan(g, budget, method, objective)
-    if report.plan is None:
-        # The budget sweep that just failed already carries the exact
-        # minimal feasible budget on its terminal frontier — surface it so
-        # the caller knows how much memory the strategy actually needs.
-        hint = ""
-        if method in ("exact_dp", "approx_dp"):
-            needed = pl.min_feasible_budget(g, method)
-            hint = f"; minimal feasible budget is {needed:g}"
-        raise ValueError(
-            f"no feasible strategy for budget {budget!r} "
-            f"({method}/{objective}){hint}"
-        )
-    return planned_value_and_grad(bg, report.plan, loss_fn, track_live), report
+__all__ = [
+    "planned_value_and_grad",
+    "vanilla_value_and_grad",
+    "planned_value_and_grad_under_budget",
+]

@@ -28,31 +28,13 @@ import numpy as np
 from jax.extend import core as jcore
 
 from .graph import Graph, Node
-
-HEAVY_PRIMS = {
-    "dot_general",
-    "conv_general_dilated",
-    "ragged_dot",
-    "scan",
-    "while",
-    "pjit",
-    "closed_call",
-    "custom_vjp_call",
-    "custom_jvp_call",
-    "remat",
-    "checkpoint",
-}
-
-_ELEMENTWISE_FREE = {
-    "broadcast_in_dim",
-    "reshape",
-    "squeeze",
-    "transpose",
-    "convert_element_type",
-    "slice",
-    "dynamic_slice",
-    "concatenate",
-}
+from .prims import (  # single source of truth (core.prims)
+    ELEMENTWISE_FREE as _ELEMENTWISE_FREE,
+    HEAVY_PRIMS,
+    HIGHER_ORDER_PRIMS as _HIGHER_ORDER_PRIMS,
+    INNER_JAXPR_KEYS as _INNER_JAXPR_KEYS,
+    MATMUL_PRIMS as _MATMUL_PRIMS,
+)
 
 
 def aval_bytes(aval) -> int:
@@ -91,7 +73,7 @@ def _conv_flops(eqn) -> float:
 
 def _inner_jaxpr_flops(eqn) -> float:
     total = 0.0
-    for key in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr", "branches"):
+    for key in _INNER_JAXPR_KEYS:
         sub = eqn.params.get(key)
         if sub is None:
             continue
@@ -113,8 +95,7 @@ def eqn_flops_for(eqn) -> float:
             return _dot_flops(eqn)
         if name == "conv_general_dilated":
             return _conv_flops(eqn)
-        if name in ("pjit", "closed_call", "custom_vjp_call", "custom_jvp_call",
-                    "remat", "remat2", "checkpoint", "scan", "while", "cond"):
+        if name in _HIGHER_ORDER_PRIMS:
             return max(1.0, _inner_jaxpr_flops(eqn))
     except Exception:
         pass
@@ -140,10 +121,9 @@ def eqn_bytes_for(eqn) -> float:
     bodies recursed and multiplied by trip count (the piece XLA's
     cost_analysis drops — it counts loop bodies once)."""
     name = eqn.primitive.name
-    if name in ("pjit", "closed_call", "custom_vjp_call", "custom_jvp_call",
-                "remat", "remat2", "checkpoint", "scan", "while", "cond"):
+    if name in _HIGHER_ORDER_PRIMS:
         total = 0.0
-        for key in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr", "branches"):
+        for key in _INNER_JAXPR_KEYS:
             sub = eqn.params.get(key)
             if sub is None:
                 continue
@@ -170,10 +150,9 @@ def jaxpr_totals(closed_jaxpr) -> Dict[str, float]:
 
 def eqn_is_heavy(eqn) -> bool:
     name = eqn.primitive.name
-    if name in ("dot_general", "conv_general_dilated", "ragged_dot"):
+    if name in _MATMUL_PRIMS:
         return True
-    if name in ("pjit", "closed_call", "scan", "while", "remat", "checkpoint",
-                "custom_vjp_call", "custom_jvp_call"):
+    if name in HEAVY_PRIMS:
         # heavy iff it contains a heavy eqn
         for key in ("jaxpr", "call_jaxpr", "body_jaxpr"):
             sub = eqn.params.get(key)

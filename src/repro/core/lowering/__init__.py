@@ -1,0 +1,78 @@
+"""repro.core.lowering — one planning pipeline, many executable forms.
+
+The unified execution subsystem of the framework:
+
+    graph carriers (BlockGraph | traced JAX fn)
+        → core.planner.Planner (plan cache + budget sweep)
+        → ExecutionPlan
+        → a registered Lowering backend
+        → runnable value_and_grad
+
+Backends (``base.register_lowering``):
+
+* ``"interpreter"`` — §3 interpreted step by step; validation + live-byte
+  audit (both carriers);
+* ``"policy"``      — one ``jax.checkpoint`` + ``save_only_these_names``
+  over named block outputs (BlockGraph production path);
+* ``"segment"``     — per-segment ``jax.checkpoint`` (BlockGraph), whose
+  layer-chain projection (``segment_groups``) drives the scan models;
+* ``"jaxpr"``       — equation-level ``checkpoint_name`` tagging for any
+  traced function (the trace-anything production path).
+
+``plan_function`` is the front door; ``core.executor`` / ``core.remat``
+remain as thin deprecation shims over this package.
+"""
+
+from .base import (
+    InfeasibleBudgetError,
+    Lowering,
+    available_backends,
+    get_lowering,
+    register_lowering,
+    resolve_backend,
+)
+from .carriers import BlockGraphCarrier, TracedCarrier, abstract_signature
+from .front_door import (
+    LoweredPlan,
+    PlannedFunction,
+    plan_function,
+    planned_value_and_grad_under_budget,
+)
+from .interpreter import (
+    planned_value_and_grad,
+    traced_planned_value_and_grad,
+    vanilla_value_and_grad,
+)
+from .policy import (
+    apply_with_policy,
+    plan_policy,
+    tagged_eval,
+    traced_value_and_grad,
+)
+from .segment import apply_segmented, even_groups, segment_groups
+
+__all__ = [
+    "InfeasibleBudgetError",
+    "Lowering",
+    "register_lowering",
+    "get_lowering",
+    "available_backends",
+    "resolve_backend",
+    "BlockGraphCarrier",
+    "TracedCarrier",
+    "abstract_signature",
+    "plan_function",
+    "PlannedFunction",
+    "LoweredPlan",
+    "planned_value_and_grad_under_budget",
+    "planned_value_and_grad",
+    "traced_planned_value_and_grad",
+    "vanilla_value_and_grad",
+    "apply_with_policy",
+    "plan_policy",
+    "tagged_eval",
+    "traced_value_and_grad",
+    "apply_segmented",
+    "segment_groups",
+    "even_groups",
+]

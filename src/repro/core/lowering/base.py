@@ -1,0 +1,118 @@
+"""The ``Lowering`` interface: one plan, many executable forms.
+
+A *lowering backend* turns ``(carrier, ExecutionPlan)`` into a runnable
+``value_and_grad`` twin of the carried computation.  The three execution
+paths the framework grew historically — the paper-faithful segment
+interpreter (old ``core.executor``), the ``jax.checkpoint`` +
+``save_only_these_names`` policy lowering and the per-segment checkpoint
+grouping (old ``core.remat`` / ``BlockGraph.apply_planned``) — are
+registered backends of this one interface, joined by the jaxpr-level
+backend that lowers plans for *traced* functions.
+
+Backends register under a short name (``"interpreter"``, ``"policy"``,
+``"segment"``, ``"jaxpr"``); ``resolve_backend(name, carrier)`` picks the
+right one, with ``"auto"`` selecting each carrier's production path.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from ..schedule import ExecutionPlan
+
+
+class InfeasibleBudgetError(ValueError):
+    """No canonical strategy fits the requested budget (typed, so callers
+    can distinguish infeasibility from configuration errors)."""
+
+
+def reject_track_live(backend_name: str) -> None:
+    """Shared guard for the XLA-owned backends (no host-visible buffers)."""
+    raise ValueError(
+        f"track_live is interpreter-only (XLA owns the buffers under the "
+        f"{backend_name!r} backend)"
+    )
+
+
+def blockgraph_value_and_grad(fwd: Callable[..., Any],
+                              loss_fn: Callable[..., Any]):
+    """``jax.value_and_grad`` of ``loss_fn`` over a BlockGraph forward.
+
+    Shared by the checkpoint-based BlockGraph backends: ``fwd(params,
+    inputs)`` returns the model outputs (tuple or single value).
+    """
+    import jax
+
+    def f(p, x):
+        out = fwd(p, x)
+        return loss_fn(*out) if isinstance(out, tuple) else loss_fn(out)
+
+    return jax.value_and_grad(f)
+
+
+class Lowering(abc.ABC):
+    """One way of executing an :class:`ExecutionPlan`.
+
+    ``lower`` returns a callable with the carrier's calling convention:
+
+    * BlockGraph carrier — ``f(params, inputs) -> (loss, param_grads)``;
+    * traced carrier     — ``f(*args) -> (value, grads)`` (like
+      ``jax.value_and_grad(fn, argnums)``).
+
+    ``track_live=True`` (interpreter only) appends a live-byte trace:
+    ``f(...) -> (loss, grads, [(tag, bytes), ...])``.
+    """
+
+    #: registry name, e.g. "interpreter"
+    name: str = "?"
+
+    @abc.abstractmethod
+    def supports(self, carrier: Any) -> bool:
+        """Whether this backend can lower plans for ``carrier``."""
+
+    @abc.abstractmethod
+    def lower(
+        self, carrier: Any, plan: ExecutionPlan, track_live: bool = False
+    ) -> Callable[..., Any]:
+        """Lower ``plan`` over ``carrier`` into a value_and_grad callable."""
+
+
+_REGISTRY: Dict[str, Lowering] = {}
+
+
+def register_lowering(backend: Lowering) -> Lowering:
+    """Register a backend instance under ``backend.name`` (last wins)."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_lowering(name: str) -> Lowering:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown lowering backend {name!r}; "
+            f"available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends(carrier: Any = None) -> List[str]:
+    """Registered backend names (optionally those supporting ``carrier``)."""
+    if carrier is None:
+        return sorted(_REGISTRY)
+    return sorted(n for n, b in _REGISTRY.items() if b.supports(carrier))
+
+
+def resolve_backend(name: str, carrier: Any) -> Lowering:
+    """``name`` or the carrier's production default for ``"auto"``."""
+    if name == "auto":
+        name = carrier.default_backend
+    backend = get_lowering(name)
+    if not backend.supports(carrier):
+        raise ValueError(
+            f"backend {name!r} does not support {type(carrier).__name__}; "
+            f"use one of {available_backends(carrier)}"
+        )
+    return backend

@@ -1,0 +1,151 @@
+"""Graph carriers: the model representations the planning pipeline accepts.
+
+A *carrier* pairs a computation with enough structure to (a) extract the
+paper's ``core.Graph`` for the Planner and (b) be re-executed under a plan
+by the lowering backends.  Two carriers cover the framework:
+
+* :class:`BlockGraphCarrier` — the layer-granularity model DAG
+  (``core.blockgraph.BlockGraph``) plus a loss over its outputs.  Node =
+  block; the production lowering is the checkpoint-policy backend.
+* :class:`TracedCarrier` — **any JAX callable**, traced to a jaxpr on
+  example arguments (``core.jaxpr_graph``).  Node = jaxpr equation; the
+  production lowering tags equation outputs with ``checkpoint_name`` and
+  saves exactly the plan's cache set.
+
+Both expose the same minimal surface: ``to_graph()`` (planner input),
+``node_names()`` (checkpoint names, index-aligned with graph nodes) and
+``default_backend``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+
+from ..graph import Graph
+from ..jaxpr_graph import JaxprGraph, from_jaxpr
+
+
+@dataclasses.dataclass
+class BlockGraphCarrier:
+    """A ``BlockGraph`` bound to concrete params/inputs and a loss.
+
+    The lowered callables take ``(params, inputs)`` — fresh values of the
+    same shapes — and return ``(loss, param_grads)``.
+    """
+
+    bg: Any  # core.blockgraph.BlockGraph (kept untyped to avoid a cycle)
+    loss_fn: Callable[..., jax.Array]
+    params: Any
+    inputs: Dict[str, Any]
+    cost_model: str = "paper"
+
+    default_backend = "policy"
+
+    def to_graph(self) -> Graph:
+        return self.bg.to_graph(self.params, self.inputs,
+                                cost_model=self.cost_model)
+
+    def node_names(self) -> List[str]:
+        return [b.name for b in self.bg.blocks]
+
+
+def _tree_flatten(args):
+    return jax.tree_util.tree_flatten(args)
+
+
+def is_drop_var(v) -> bool:
+    """True for jaxpr DropVar outputs (placeholders with no uses)."""
+    return type(v).__name__ == "DropVar"
+
+
+@dataclasses.dataclass
+class TracedCarrier:
+    """Any JAX callable, traced on example arguments.
+
+    ``fn`` must return a scalar (``jax.value_and_grad`` semantics); the
+    lowered callables take the same positional arguments (same pytree
+    structure and avals) and return ``(value, grads)`` w.r.t. ``argnums``.
+    """
+
+    fn: Callable[..., jax.Array]
+    argnums: Union[int, Tuple[int, ...]]
+    cost_model: str
+    closed: Any  # ClosedJaxpr of the flattened function
+    in_tree: Any  # treedef of the args tuple
+    flat_avals: Tuple[jax.ShapeDtypeStruct, ...]
+    arg_slices: Tuple[Tuple[int, int], ...]  # flat-leaf span per position arg
+    jg: JaxprGraph
+
+    default_backend = "jaxpr"
+
+    @classmethod
+    def trace(
+        cls,
+        fn: Callable[..., jax.Array],
+        args: Sequence[Any],
+        argnums: Union[int, Tuple[int, ...]] = 0,
+        cost_model: str = "paper",
+    ) -> "TracedCarrier":
+        flat, in_tree = _tree_flatten(tuple(args))
+        # flat-leaf span of each positional argument (interpreter backward)
+        slices = []
+        start = 0
+        for a in args:
+            leaves, _ = _tree_flatten(a)
+            slices.append((start, start + len(leaves)))
+            start += len(leaves)
+
+        def flat_fn(*flat_args):
+            return fn(*jax.tree_util.tree_unflatten(in_tree, flat_args))
+
+        closed = jax.make_jaxpr(flat_fn)(*flat)
+        outvars = closed.jaxpr.outvars
+        if len(outvars) != 1 or getattr(outvars[0].aval, "shape", ()) != ():
+            raise TypeError(
+                "plan_function requires a scalar-output function "
+                "(jax.value_and_grad semantics); got "
+                f"{len(outvars)} outputs"
+            )
+        return cls(
+            fn=fn,
+            argnums=argnums,
+            cost_model=cost_model,
+            closed=closed,
+            in_tree=in_tree,
+            flat_avals=tuple(
+                jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+                for v in closed.jaxpr.invars
+            ),
+            arg_slices=tuple(slices),
+            jg=from_jaxpr(closed, cost_model=cost_model),
+        )
+
+    def to_graph(self) -> Graph:
+        return self.jg.graph
+
+    def node_names(self) -> List[str]:
+        return [nd.name for nd in self.jg.graph.nodes]
+
+    def flatten_args(self, args: Sequence[Any]) -> List[Any]:
+        """Flatten call-time args, checking the traced structure."""
+        flat, tree = _tree_flatten(tuple(args))
+        if tree != self.in_tree:
+            raise TypeError(
+                "argument structure differs from the traced example "
+                f"({tree} != {self.in_tree})"
+            )
+        return flat
+
+
+def abstract_signature(args: Sequence[Any]) -> Tuple:
+    """Hashable (treedef, avals) key of a call's arguments — the memo key
+    under which ``plan_function`` caches one traced/planned lowering."""
+    flat, tree = _tree_flatten(tuple(args))
+    avals = tuple(
+        (tuple(getattr(x, "shape", ())), str(getattr(x, "dtype", type(x))))
+        for x in flat
+    )
+    return (tree, avals)

@@ -1,0 +1,403 @@
+"""Paper-faithful interpreter backend (§3) for both graph carriers.
+
+Interprets the canonical strategy step by step — forward caching only the
+boundary values ∂(L_i), backward recomputing each V_i from the caches — so
+tests can assert that a strategy's gradients match vanilla backpropagation,
+and so the per-step live set can be audited against ``core.liveness`` and
+the plan's analytic peak (eq. 2).
+
+Two granularities, one semantics:
+
+* ``planned_value_and_grad`` — block granularity over a ``BlockGraph``
+  (the seed repo's ``core.executor``, moved here verbatim);
+* ``traced_planned_value_and_grad`` — equation granularity over a traced
+  JAX function (``TracedCarrier``): each segment is recomputed from the
+  cached boundary values and pulled back through one ``jax.vjp``.
+
+``track_live=True`` appends a ``[(tag, live_bytes), ...]`` trace counting
+the *intermediate forward values* held at each step (function inputs and
+parameters are excluded, as in §2), which the tests assert stays within
+the plan's ``peak_memory``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..schedule import ExecutionPlan
+from .base import Lowering, register_lowering
+from .carriers import BlockGraphCarrier, TracedCarrier, is_drop_var as _is_drop
+
+
+def _nbytes(x) -> int:
+    return int(x.size * x.dtype.itemsize) if hasattr(x, "dtype") else 0
+
+
+# ---------------------------------------------------------------------------
+# Block granularity (BlockGraph)
+# ---------------------------------------------------------------------------
+
+
+def planned_value_and_grad(
+    bg,
+    plan: ExecutionPlan,
+    loss_fn: Callable[..., jax.Array],
+    track_live: bool = False,
+):
+    """Return f(params, inputs) -> (loss, grads_params[, live_trace]).
+
+    loss_fn consumes the BlockGraph outputs and returns a scalar.
+    Gradients are produced by interpreting the canonical strategy:
+
+      forward : run segments in order; after segment i discard every value of
+                V_i not in U_k (the union of boundaries).
+      backward: for i = k…1, recompute the discarded values of V_i from the
+                caches, then run per-block VJPs in reverse topological order.
+    """
+    name_of = {i: b.name for i, b in enumerate(bg.blocks)}
+
+    def run(params: Dict[str, Any], inputs: Dict[str, Any]):
+        live_trace: List[Tuple[str, int]] = []
+        cached_names = {name_of[v] for v in plan.cached}
+
+        def snapshot(tag: str, store: Dict[str, Any]) -> None:
+            # graph inputs are excluded from the accounting, as in §2 (the
+            # paper's budget covers intermediate values only)
+            if track_live:
+                nbytes = sum(
+                    sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(v))
+                    for name, v in store.items()
+                    if name not in inputs
+                )
+                live_trace.append((tag, int(nbytes)))
+
+        # ---------------- forward ----------------
+        cache: Dict[str, Any] = dict(inputs)
+        for seg in plan.segments:
+            local: Dict[str, Any] = {}
+            for v in seg.nodes:
+                b = bg.by_name[name_of[v]]
+                args = [
+                    local[i] if i in local else cache[i] for i in b.inputs
+                ]
+                local[b.name] = b.apply(params[b.name], *args)
+            # canonical rule: keep only boundary values (and model outputs)
+            for name, val in local.items():
+                if name in cached_names or name in bg.outputs:
+                    cache[name] = val
+            snapshot(f"fwd_seg{seg.index}", cache)
+
+        outs = tuple(cache[o] for o in bg.outputs)
+        loss, loss_vjp = jax.vjp(
+            lambda *o: loss_fn(*o) if len(o) > 1 else loss_fn(o[0]), *outs
+        )
+        out_grads = loss_vjp(jnp.ones_like(loss))
+
+        # ---------------- backward ----------------
+        grad_of: Dict[str, Any] = {}
+        for o, g in zip(bg.outputs, out_grads):
+            grad_of[o] = g
+        param_grads: Dict[str, Any] = {}
+
+        for seg in reversed(plan.segments):
+            # recompute discarded values of V_i from live caches
+            local: Dict[str, Any] = {}
+            for v in seg.nodes:
+                b = bg.by_name[name_of[v]]
+                if b.name in cache:
+                    local[b.name] = cache[b.name]
+                    continue
+                args = [local[i] if i in local else cache[i] for i in b.inputs]
+                local[b.name] = b.apply(params[b.name], *args)
+            snapshot(f"bwd_recompute_seg{seg.index}", {**cache, **local})
+
+            # VJP sweep, reverse topological order within the segment
+            for v in reversed(seg.nodes):
+                b = bg.by_name[name_of[v]]
+                g_out = grad_of.pop(b.name, None)
+                if g_out is None:
+                    continue  # value unused by the loss
+                args = [local[i] if i in local else cache[i] for i in b.inputs]
+                _out, vjp = jax.vjp(b.apply, params[b.name], *args)
+                pulls = vjp(g_out)
+                g_param, g_args = pulls[0], pulls[1:]
+                param_grads[b.name] = (
+                    jax.tree_util.tree_map(jnp.add, param_grads[b.name], g_param)
+                    if b.name in param_grads
+                    else g_param
+                )
+                for i_name, g_arg in zip(b.inputs, g_args):
+                    if i_name in inputs:
+                        continue  # no grads w.r.t. graph inputs requested
+                    grad_of[i_name] = (
+                        grad_of[i_name] + g_arg if i_name in grad_of else g_arg
+                    )
+            # discard this segment's forward values (canonical rule); its
+            # cached boundary values are no longer needed either once the
+            # earlier-segment gradients that flow *through* them are queued.
+            for v in seg.nodes:
+                cache.pop(name_of[v], None)
+            snapshot(f"bwd_done_seg{seg.index}", cache)
+
+        # blocks with no params still get an empty-grads entry for tree-match
+        for b in bg.blocks:
+            if b.name not in param_grads:
+                param_grads[b.name] = jax.tree_util.tree_map(
+                    jnp.zeros_like, params[b.name]
+                )
+        if track_live:
+            return loss, param_grads, live_trace
+        return loss, param_grads
+
+    return run
+
+
+def vanilla_value_and_grad(
+    bg, loss_fn: Callable[..., jax.Array]
+):
+    """Reference: jax.value_and_grad over the vanilla executor."""
+
+    def f(params, inputs):
+        out = bg.apply(params, inputs)
+        return loss_fn(*out) if isinstance(out, tuple) else loss_fn(out)
+
+    return jax.value_and_grad(f)
+
+
+# ---------------------------------------------------------------------------
+# Equation granularity (traced JAX functions)
+# ---------------------------------------------------------------------------
+
+
+def _eval_eqn(eqn, invals):
+    subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+    ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+    return list(ans) if eqn.primitive.multiple_results else [ans]
+
+
+def _is_inexact_var(v) -> bool:
+    aval = getattr(v, "aval", None)
+    return aval is not None and jnp.issubdtype(
+        getattr(aval, "dtype", jnp.float32), jnp.inexact
+    )
+
+
+def traced_planned_value_and_grad(
+    carrier: TracedCarrier,
+    plan: ExecutionPlan,
+    track_live: bool = False,
+):
+    """Interpret the canonical strategy over a traced function's jaxpr.
+
+    Returns ``f(*args) -> (value, grads[, live_trace])`` with grads w.r.t.
+    ``carrier.argnums``, matching ``jax.value_and_grad(fn, argnums)``.
+
+    Forward: evaluate each segment's equations in order and keep only the
+    values of the plan's cache set U_k (and the output).  Backward: for
+    each segment in reverse, ``jax.vjp`` through the segment function —
+    whose primal evaluation recomputes the discarded interior from the
+    cached boundary values, exactly §3's canonical strategy.
+    """
+    from jax.extend import core as jcore
+
+    closed = carrier.closed
+    jaxpr = closed.jaxpr
+    eqns = jaxpr.eqns
+    outvar = jaxpr.outvars[0]
+    cached = plan.cached
+
+    def read(v, local, env):
+        if isinstance(v, jcore.Literal):
+            return v.val
+        return local[v] if v in local else env[v]
+
+    # ---- static per-segment structure -------------------------------------
+    consumer_segs: Dict[Any, set] = {}  # var -> segment indices reading it
+    for seg in plan.segments:
+        for v_idx in seg.nodes:
+            for iv in eqns[v_idx].invars:
+                if not isinstance(iv, jcore.Literal):
+                    consumer_segs.setdefault(iv, set()).add(seg.index)
+
+    ext_vars: List[List[Any]] = []  # per segment: external vars it reads
+    out_vars: List[List[Any]] = []  # per segment: produced vars needed later
+    for seg in plan.segments:
+        ext: List[Any] = []
+        seen = set()
+        produced = set()
+        for v_idx in seg.nodes:
+            for iv in eqns[v_idx].invars:
+                if isinstance(iv, jcore.Literal) or iv in produced or iv in seen:
+                    continue
+                seen.add(iv)
+                ext.append(iv)
+            for ov in eqns[v_idx].outvars:
+                produced.add(ov)
+        outs: List[Any] = []
+        for v_idx in seg.nodes:
+            for ov in eqns[v_idx].outvars:
+                if _is_drop(ov) or not _is_inexact_var(ov):
+                    continue
+                read_later = any(
+                    j > seg.index for j in consumer_segs.get(ov, ())
+                )
+                if read_later or ov is outvar:
+                    outs.append(ov)
+        ext_vars.append(ext)
+        out_vars.append(outs)
+
+    def run(*args):
+        flat = carrier.flatten_args(args)
+        env: Dict[Any, Any] = {}
+        base: set = set()
+        for v, c in zip(jaxpr.constvars, closed.consts):
+            env[v] = c
+            base.add(v)
+        for v, a in zip(jaxpr.invars, flat):
+            env[v] = a
+            base.add(v)
+
+        live_trace: List[Tuple[str, int]] = []
+
+        def snapshot(tag: str, *stores: Dict[Any, Any]) -> None:
+            if not track_live:
+                return
+            seen_vars = set()
+            nbytes = 0
+            for store in stores:
+                for v, val in store.items():
+                    if v in base or v in seen_vars:
+                        continue
+                    seen_vars.add(v)
+                    nbytes += _nbytes(val)
+            live_trace.append((tag, nbytes))
+
+        def eval_segment(seg, env_like):
+            """All values of V_i from ``env_like`` (canonical recompute)."""
+            local: Dict[Any, Any] = {}
+            for v_idx in seg.nodes:
+                eqn = eqns[v_idx]
+                invals = [read(iv, local, env_like) for iv in eqn.invars]
+                for ov, o in zip(eqn.outvars, _eval_eqn(eqn, invals)):
+                    if not _is_drop(ov):
+                        local[ov] = o
+            return local
+
+        # ---------------- forward ----------------
+        for seg in plan.segments:
+            local = eval_segment(seg, env)
+            for v_idx in seg.nodes:
+                keep = v_idx in cached
+                for ov in eqns[v_idx].outvars:
+                    if _is_drop(ov):
+                        continue
+                    if keep or ov is outvar:
+                        env[ov] = local[ov]
+            snapshot(f"fwd_seg{seg.index}", env)
+
+        if isinstance(outvar, jcore.Literal):
+            loss = outvar.val
+        else:
+            loss = env[outvar]
+
+        # ---------------- backward ----------------
+        ct_env: Dict[Any, Any] = {}
+        if not isinstance(outvar, jcore.Literal):
+            ct_env[outvar] = jnp.ones_like(loss)
+        invar_set = set(jaxpr.invars)
+
+        for seg in reversed(plan.segments):
+            ext = ext_vars[seg.index]
+            outs = out_vars[seg.index]
+            if track_live:
+                # accounting-only eager recompute: the canonical strategy's
+                # backward working set is caches + this segment's interior
+                snapshot(f"bwd_recompute_seg{seg.index}", env,
+                         eval_segment(seg, env))
+            if outs:
+
+                def seg_fn(*ext_vals, _seg=seg, _ext=tuple(ext), _outs=tuple(outs)):
+                    # primal = recompute V_i from the cached boundary values;
+                    # the vjp then sums output cotangents (from later
+                    # segments) with the in-segment uses, §3's VJP sweep
+                    inner = eval_segment(_seg, dict(zip(_ext, ext_vals)))
+                    return tuple(inner[o] for o in _outs)
+
+                ext_vals = [env[v] for v in ext]
+                _primals, vjp = jax.vjp(seg_fn, *ext_vals)
+                cts = tuple(
+                    ct_env.pop(o)
+                    if o in ct_env
+                    else jnp.zeros(o.aval.shape, o.aval.dtype)
+                    for o in outs
+                )
+                ext_cts = vjp(cts)
+                for v, ct in zip(ext, ext_cts):
+                    if v in base and v not in invar_set:
+                        continue  # constvars: no gradients requested
+                    if not (
+                        hasattr(ct, "dtype")
+                        and jnp.issubdtype(ct.dtype, jnp.inexact)
+                    ):
+                        continue  # float0 cotangent of an integer value
+                    ct_env[v] = ct_env[v] + ct if v in ct_env else ct
+            # canonical rule: this segment's caches and cotangents are dead
+            for v_idx in seg.nodes:
+                for ov in eqns[v_idx].outvars:
+                    env.pop(ov, None)
+                    ct_env.pop(ov, None)
+            snapshot(f"bwd_done_seg{seg.index}", env)
+
+        def zeros_for(v):
+            return jnp.zeros(v.aval.shape, v.aval.dtype)
+
+        flat_cts = [
+            ct_env.get(v, zeros_for(v) if _is_inexact_var(v) else None)
+            for v in jaxpr.invars
+        ]
+        argnums = carrier.argnums
+        single = isinstance(argnums, int)
+        nums = (argnums,) if single else tuple(argnums)
+        grads = []
+        for a_idx in nums:
+            lo, hi = carrier.arg_slices[a_idx]
+            leaves, _ = jax.tree_util.tree_flatten(args[a_idx])
+            treedef = jax.tree_util.tree_structure(args[a_idx])
+            grads.append(
+                jax.tree_util.tree_unflatten(treedef, flat_cts[lo:hi])
+            )
+        grad_out = grads[0] if single else tuple(grads)
+        if track_live:
+            return loss, grad_out, live_trace
+        return loss, grad_out
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Registry glue
+# ---------------------------------------------------------------------------
+
+
+class InterpreterLowering(Lowering):
+    """§3's canonical strategy, interpreted (validation / audit backend)."""
+
+    name = "interpreter"
+
+    def supports(self, carrier) -> bool:
+        return isinstance(carrier, (BlockGraphCarrier, TracedCarrier))
+
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+        if isinstance(carrier, BlockGraphCarrier):
+            return planned_value_and_grad(
+                carrier.bg, plan, carrier.loss_fn, track_live=track_live
+            )
+        return traced_planned_value_and_grad(
+            carrier, plan, track_live=track_live
+        )
+
+
+register_lowering(InterpreterLowering())

@@ -1,0 +1,174 @@
+"""Checkpoint-policy backends: the plan as a single jit/pjit citizen.
+
+Both backends lower the canonical strategy the same way XLA wants it: tag
+every node's output with ``jax.ad_checkpoint.checkpoint_name`` and run the
+whole forward under one ``jax.checkpoint`` whose policy is
+``save_only_these_names(U_k)`` — XLA then materializes exactly the paper's
+cache set ∂(L₁) ∪ … ∪ ∂(L_k) and rematerializes everything else during the
+backward pass.
+
+* ``"policy"``  — block granularity over a ``BlockGraph``
+  (``apply_with_policy``, the old ``core.remat`` entry point);
+* ``"jaxpr"``   — equation granularity over **any traced JAX function**:
+  the jaxpr is re-evaluated with each equation's outputs tagged by its
+  graph-node name, so the plan's cache set lowers to
+  ``save_only_these_names`` with no model cooperation at all.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.ad_checkpoint import checkpoint_policies as _cp
+
+from ..schedule import ExecutionPlan
+from .base import (
+    Lowering,
+    blockgraph_value_and_grad,
+    register_lowering,
+    reject_track_live,
+)
+from .carriers import BlockGraphCarrier, TracedCarrier, is_drop_var as _is_drop
+
+
+def plan_policy(plan: ExecutionPlan, names: Sequence[str]):
+    """``save_only_these_names`` over the plan's cache set U_k.
+
+    ``names[v]`` is the checkpoint-name of node v (block name or jaxpr
+    equation name).
+    """
+    keep = tuple(sorted(names[v] for v in plan.cached))
+    return _cp.save_only_these_names(*keep)
+
+
+# ---------------------------------------------------------------------------
+# Block granularity (BlockGraph)
+# ---------------------------------------------------------------------------
+
+
+def apply_with_policy(bg, params: Dict[str, Any], inputs: Dict[str, Any],
+                      plan: ExecutionPlan) -> Any:
+    """Run a BlockGraph forward with the plan lowered to a checkpoint policy.
+
+    Differentiating this function recomputes exactly the non-cached nodes —
+    the canonical strategy as a single first-class jit citizen.
+    """
+    names = [b.name for b in bg.blocks]
+    policy = plan_policy(plan, names)
+
+    def fwd(p: Dict[str, Any], x: Dict[str, Any]):
+        values: Dict[str, Any] = dict(x)
+        for b in bg.blocks:
+            out = b.apply(p[b.name], *[values[i] for i in b.inputs])
+            values[b.name] = checkpoint_name(out, b.name)
+        outs = tuple(values[o] for o in bg.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    return jax.checkpoint(fwd, policy=policy)(params, inputs)
+
+
+# ---------------------------------------------------------------------------
+# Equation granularity (traced JAX functions)
+# ---------------------------------------------------------------------------
+
+
+def _taggable(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+def tagged_eval(closed, names: Sequence[str], *flat_args):
+    """Evaluate a ClosedJaxpr with each equation's outputs named.
+
+    ``names[idx]`` tags equation ``idx``'s (inexact) outputs via
+    ``checkpoint_name`` — the hook ``save_only_these_names`` keys on.
+    """
+    from jax.extend import core as jcore
+
+    jaxpr = closed.jaxpr
+    env: Dict[Any, Any] = {}
+
+    def read(v):
+        return v.val if isinstance(v, jcore.Literal) else env[v]
+
+    for v, c in zip(jaxpr.constvars, closed.consts):
+        env[v] = c
+    for v, a in zip(jaxpr.invars, flat_args):
+        env[v] = a
+    for idx, eqn in enumerate(jaxpr.eqns):
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        ans = eqn.primitive.bind(
+            *subfuns, *[read(iv) for iv in eqn.invars], **bind_params
+        )
+        outs = list(ans) if eqn.primitive.multiple_results else [ans]
+        outs = [
+            checkpoint_name(o, names[idx]) if _taggable(o) else o
+            for o in outs
+        ]
+        for ov, o in zip(eqn.outvars, outs):
+            if not _is_drop(ov):
+                env[ov] = o
+    return read(jaxpr.outvars[0])
+
+
+def traced_value_and_grad(carrier: TracedCarrier, plan: ExecutionPlan):
+    """``jax.value_and_grad`` twin of the traced fn under the plan.
+
+    The result composes with ``jax.jit``/``pjit`` like any JAX function;
+    gradients are w.r.t. ``carrier.argnums``.
+    """
+    names = carrier.node_names()
+    policy = plan_policy(plan, names)
+    closed = carrier.closed
+
+    ckpt_flat = jax.checkpoint(
+        lambda *flat: tagged_eval(closed, names, *flat), policy=policy
+    )
+
+    def scalar_fn(*args):
+        return ckpt_flat(*carrier.flatten_args(args))
+
+    return jax.value_and_grad(scalar_fn, argnums=carrier.argnums)
+
+
+# ---------------------------------------------------------------------------
+# Registry glue
+# ---------------------------------------------------------------------------
+
+
+class PolicyLowering(Lowering):
+    """BlockGraph production path: one checkpoint over named block outputs."""
+
+    name = "policy"
+
+    def supports(self, carrier) -> bool:
+        return isinstance(carrier, BlockGraphCarrier)
+
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+        if track_live:
+            reject_track_live(self.name)
+        return blockgraph_value_and_grad(
+            lambda p, x, _bg=carrier.bg, _plan=plan:
+                apply_with_policy(_bg, p, x, _plan),
+            carrier.loss_fn,
+        )
+
+
+class JaxprLowering(Lowering):
+    """Traced-function production path: named equations + one checkpoint."""
+
+    name = "jaxpr"
+
+    def supports(self, carrier) -> bool:
+        return isinstance(carrier, TracedCarrier)
+
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+        if track_live:
+            reject_track_live(self.name)
+        return traced_value_and_grad(carrier, plan)
+
+
+register_lowering(PolicyLowering())
+register_lowering(JaxprLowering())

@@ -1,0 +1,139 @@
+"""Per-segment checkpoint backend, plus the layer-chain projections.
+
+The third lowering of the canonical strategy: each segment V_i runs inside
+its own ``jax.checkpoint`` — its residuals are its *inputs* (exactly the
+cached boundary values ∂(L_{i-1}) ∪ earlier caches it consumes) and its
+interior is recomputed during backward.  For scan-over-layers production
+models the same plan projects to grouped scan remat (``segment_groups`` /
+``SegmentPlan`` in ``launch.plan``): segments become inner-scan groups, so
+the DP plan drives ``models.transformer`` without leaving the scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+
+from ..schedule import ExecutionPlan
+from .base import (
+    Lowering,
+    blockgraph_value_and_grad,
+    register_lowering,
+    reject_track_live,
+)
+from .carriers import BlockGraphCarrier
+
+
+def apply_segmented(bg, params: Dict[str, Any], inputs: Dict[str, Any],
+                    plan: ExecutionPlan, checkpoint_policy=None) -> Any:
+    """Execute a BlockGraph under the plan: per-segment ``jax.checkpoint``.
+
+    Each segment V_i runs inside ``jax.checkpoint``: its residuals are its
+    *inputs* — exactly the cached boundary values ∂(L_{i-1}) ∪ earlier
+    caches it consumes — and its interior is recomputed during backward,
+    which is precisely §3's canonical strategy.
+    """
+    name_of = {i: b.name for i, b in enumerate(bg.blocks)}
+    values: Dict[str, Any] = dict(inputs)
+
+    for seg in plan.segments:
+        seg_blocks = [bg.by_name[name_of[v]] for v in seg.nodes]
+        # external inputs of this segment (cached boundary values)
+        internal = {b.name for b in seg_blocks}
+        ext_names: List[str] = []
+        for b in seg_blocks:
+            for i in b.inputs:
+                if i not in internal and i not in ext_names:
+                    ext_names.append(i)
+        # values the rest of the graph needs from this segment
+        out_names = [
+            b.name
+            for b in seg_blocks
+            if _needed_later(bg, b.name, internal)
+        ]
+
+        def seg_fn(seg_params, *ext_vals, _blocks=seg_blocks, _ext=tuple(ext_names), _out=tuple(out_names)):
+            local: Dict[str, Any] = dict(zip(_ext, ext_vals))
+            for b in _blocks:
+                local[b.name] = b.apply(
+                    seg_params[b.name], *[local[i] for i in b.inputs]
+                )
+            return tuple(local[o] for o in _out)
+
+        seg_params = {b.name: params[b.name] for b in seg_blocks}
+        wrapped = jax.checkpoint(seg_fn, policy=checkpoint_policy)
+        outs = wrapped(seg_params, *[values[i] for i in ext_names])
+        values.update(dict(zip(out_names, outs)))
+
+    res = tuple(values[o] for o in bg.outputs)
+    return res[0] if len(res) == 1 else res
+
+
+def _needed_later(bg, name: str, internal: set) -> bool:
+    if name in bg.outputs:
+        return True
+    for b in bg.blocks:
+        if name in b.inputs and b.name not in internal:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Layer-chain projections (scan-over-layers production models)
+# ---------------------------------------------------------------------------
+
+
+def segment_groups(plan: ExecutionPlan, num_layers: int, nodes_per_layer: int = 1) -> List[int]:
+    """Layer-group sizes [g₁, …, g_k] induced by the plan on a layer chain.
+
+    For the scan-over-layers production models the graph is a chain of
+    ``num_layers`` macro-nodes; the plan's segments V_i are contiguous layer
+    runs.  Returns the run lengths, which models.transformer uses to build a
+    per-group ``jax.checkpoint`` inner scan (segment remat ≙ canonical
+    strategy on the chain graph).
+    """
+    sizes = []
+    for seg in plan.segments:
+        n_nodes = len(seg.nodes)
+        if n_nodes % nodes_per_layer:
+            raise ValueError(
+                f"segment {seg.index} has {n_nodes} nodes, not a multiple of "
+                f"{nodes_per_layer} per layer — plan does not align to layers"
+            )
+        sizes.append(n_nodes // nodes_per_layer)
+    if sum(sizes) != num_layers:
+        raise ValueError(f"plan covers {sum(sizes)} layers, model has {num_layers}")
+    return sizes
+
+
+def even_groups(num_layers: int, num_segments: int) -> List[int]:
+    """Chen-style √n fallback grouping (equal-size contiguous segments)."""
+    base, extra = divmod(num_layers, num_segments)
+    return [base + (1 if i < extra else 0) for i in range(num_segments)]
+
+
+# ---------------------------------------------------------------------------
+# Registry glue
+# ---------------------------------------------------------------------------
+
+
+class SegmentLowering(Lowering):
+    """Per-segment ``jax.checkpoint`` over a BlockGraph."""
+
+    name = "segment"
+
+    def supports(self, carrier) -> bool:
+        return isinstance(carrier, BlockGraphCarrier)
+
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+        if track_live:
+            reject_track_live(self.name)
+        return blockgraph_value_and_grad(
+            lambda p, x, _bg=carrier.bg, _plan=plan:
+                apply_segmented(_bg, p, x, _plan),
+            carrier.loss_fn,
+        )
+
+
+register_lowering(SegmentLowering())

@@ -143,7 +143,10 @@ class Planner:
     sweep** (``core.dp.sweep``) cached under ``(graph_digest, family,
     objective)`` — no budget in the key — and every ``solve`` first checks
     for one, so any budget on a swept graph is a frontier lookup,
-    bit-identical to the per-budget DP.  ``min_feasible_budget`` is exact
+    bit-identical to the per-budget DP.  When a later query outgrows a
+    cached *capped* surface, the surface is **lazily extended**
+    (``Sweep.extend``: only the new budget band is materialized; the cap
+    only ever grows) instead of rebuilt.  ``min_feasible_budget`` is exact
     (one scalar pass, no binary search).  Custom lower-set families bypass
     the cache (their identity isn't captured by the method name).
     """
@@ -246,21 +249,34 @@ class Planner:
         objective: str,
         cap: Optional[float],
         raise_overflow: bool = False,
+        prior: Optional[dp_mod.Sweep] = None,
     ) -> Optional[dp_mod.Sweep]:
-        """Build + cache a sweep; on ``sweep_max_states`` overflow either
-        re-raise (``raise_overflow``) or return None (the caller falls back
-        to per-budget solves)."""
-        fam = self._family_for(gp, method)
+        """Build (or lazily extend) + cache a sweep; on ``sweep_max_states``
+        overflow either re-raise (``raise_overflow``) or return None (the
+        caller falls back to per-budget solves).
+
+        ``prior`` is an already-cached *capped* sweep in canonical
+        coordinates: instead of rebuilding, its surface is grown to ``cap``
+        via ``Sweep.extend`` (cap only ever grows; the cache key is
+        budget-free, so the extended surface simply replaces the entry).
+        """
+        to_pos, from_pos = canonical_maps(gp)
         try:
-            sw = dp_mod.sweep(gp, fam, objective,
-                              max_states=self.sweep_max_states, cap=cap)
+            if prior is not None and prior.cap is not None:
+                # canonical → graph coordinates, extend, and back
+                sw = prior.remap(from_pos).extend(
+                    gp, cap=cap, max_states=self.sweep_max_states
+                )
+            else:
+                fam = self._family_for(gp, method)
+                sw = dp_mod.sweep(gp, fam, objective,
+                                  max_states=self.sweep_max_states, cap=cap)
         except dp_mod.SweepOverflow as e:
             if raise_overflow:
                 raise
             _LOG.info("budget sweep overflow for %r (%s); "
                       "falling back to per-budget DP", gp, e)
             return None
-        to_pos, _ = canonical_maps(gp)
         sw = sw.to_canonical(to_pos)
         key = (graph_digest(gp), method, objective)
         if self.cache is not None:
@@ -316,7 +332,7 @@ class Planner:
         sw = self._cached_sweep(gp, method, objective, count_miss=True)
         if sw is None or sw.cap is not None:
             sw = self._build_sweep(gp, method, objective, cap=None,
-                                   raise_overflow=True)
+                                   raise_overflow=True, prior=sw)
         return sw.frontier()
 
     def solve_grid(
@@ -343,7 +359,10 @@ class Planner:
             b_max = max(budgets)
             sw = self._cached_sweep(gp, method, objective, count_miss=True)
             if sw is None or not sw.covers(b_max):
-                sw = self._build_sweep(gp, method, objective, cap=b_max)
+                # lazy refinement: an existing capped surface grows to the
+                # new largest budget instead of being rebuilt
+                sw = self._build_sweep(gp, method, objective, cap=b_max,
+                                       prior=sw)
             if sw is not None:
                 out = [self._extract(sw, gp, b) for b in budgets]
                 if all(r is not None for r in out):

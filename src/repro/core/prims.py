@@ -1,0 +1,80 @@
+"""Single source of truth for primitive classification tables.
+
+The jaxpr extractor (``core.jaxpr_graph``) and the measured cost model
+(``core.cost_model``) both need to answer "what kind of work is this node?"
+— heavy vs light for the paper's 10/1 cost model, compute- vs memory-bound
+for calibration, call-like vs leaf for recursion.  These tables used to be
+duplicated across the two modules; they live here once, and both import
+them (the old module attributes remain as aliases for compatibility).
+"""
+
+from __future__ import annotations
+
+#: Primitives whose cost dominates a graph under the paper's 10/1 model:
+#: the dot/conv family plus the call-like wrappers that may contain them.
+HEAVY_PRIMS = frozenset({
+    "dot_general",
+    "conv_general_dilated",
+    "ragged_dot",
+    "scan",
+    "while",
+    "pjit",
+    "closed_call",
+    "custom_vjp_call",
+    "custom_jvp_call",
+    "remat",
+    "checkpoint",
+})
+
+#: The dot/conv leaf primitives themselves (heavy without looking inside).
+MATMUL_PRIMS = frozenset({"dot_general", "conv_general_dilated", "ragged_dot"})
+
+#: Layout/view primitives that move no FLOPs worth modelling.
+ELEMENTWISE_FREE = frozenset({
+    "broadcast_in_dim",
+    "reshape",
+    "squeeze",
+    "transpose",
+    "convert_element_type",
+    "slice",
+    "dynamic_slice",
+    "concatenate",
+})
+
+#: Call-like primitives whose cost lives in an inner jaxpr; FLOP/byte
+#: accounting recurses into these (scan multiplies by trip count).
+HIGHER_ORDER_PRIMS = frozenset({
+    "pjit",
+    "closed_call",
+    "custom_vjp_call",
+    "custom_jvp_call",
+    "remat",
+    "remat2",
+    "checkpoint",
+    "scan",
+    "while",
+    "cond",
+})
+
+#: ``eqn.params`` keys under which an inner (closed) jaxpr may hide.
+INNER_JAXPR_KEYS = (
+    "jaxpr",
+    "call_jaxpr",
+    "cond_jaxpr",
+    "body_jaxpr",
+    "branches",
+)
+
+#: Node kinds priced as compute-bound matmul-class work by the measured
+#: cost model (``time`` field = FLOPs).
+MATMUL_KINDS = frozenset({
+    "dot_general",
+    "conv_general_dilated",
+    "ragged_dot",
+    "unit",  # launch.plan.chain_graph interior nodes (FLOPs in `time`)
+    "matmul",
+    "conv",
+})
+
+#: Node kinds priced at the attention kernel's achieved rate.
+ATTENTION_KINDS = frozenset({"attention", "flash_attention", "custom_vjp_call"})

@@ -1,88 +1,24 @@
-"""Lower a recomputation plan into ``jax.checkpoint`` machinery.
+"""Deprecated shim — the checkpoint lowerings now live in ``core.lowering``.
 
-Two production lowerings of the canonical strategy (§3):
+* ``apply_with_policy`` / ``plan_policy`` → ``core.lowering.policy``
+  (the ``"policy"`` backend: one ``jax.checkpoint`` whose
+  ``save_only_these_names`` policy is the plan's cache set U_k);
+* ``segment_groups`` / ``even_groups`` → ``core.lowering.segment``
+  (the ``"segment"`` backend's layer-chain projection, used by the
+  scan-over-layers production models).
 
-* ``apply_with_policy`` — tag every block output with
-  ``jax.ad_checkpoint.checkpoint_name`` and run the whole forward under one
-  ``jax.checkpoint`` whose policy is ``save_only_these_names(U_k)``: XLA then
-  materializes exactly the paper's cache set ∂(L₁) ∪ … ∪ ∂(L_k) and
-  rematerializes everything else during the backward pass.  This is the
-  jit/pjit-composable twin of ``core.executor.planned_value_and_grad``.
-
-* ``segment_groups`` — map a plan for a *layer-chain* model onto grouped
-  scan remat: layers are partitioned into the plan's V_i groups; each group
-  becomes one ``jax.checkpoint``-wrapped inner scan step.  For chains the
-  lower-set lattice is exactly the set of layer prefixes, so the DP plan is
-  optimal, not heuristic (used by models.transformer for the production
-  models).
+New code should go through ``repro.plan_function`` or the registry in
+``core.lowering.base``.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from .lowering.policy import apply_with_policy, plan_policy
+from .lowering.segment import even_groups, segment_groups
 
-import jax
-import jax.numpy as jnp
-from jax.ad_checkpoint import checkpoint_name
-from jax.ad_checkpoint import checkpoint_policies as _cp
-
-from .graph import Graph
-from .schedule import ExecutionPlan
-
-
-def plan_policy(plan: ExecutionPlan, names: Sequence[str]):
-    """``save_only_these_names`` over the plan's cache set U_k.
-
-    ``names[v]`` is the checkpoint-name of node v (block name).
-    """
-    keep = tuple(sorted(names[v] for v in plan.cached))
-    return _cp.save_only_these_names(*keep)
-
-
-def apply_with_policy(bg, params: Dict[str, Any], inputs: Dict[str, Any], plan: ExecutionPlan) -> Any:
-    """Run a BlockGraph forward with the plan lowered to a checkpoint policy.
-
-    Differentiating this function recomputes exactly the non-cached nodes —
-    the canonical strategy as a single first-class jit citizen.
-    """
-    names = [b.name for b in bg.blocks]
-    policy = plan_policy(plan, names)
-
-    def fwd(p: Dict[str, Any], x: Dict[str, Any]):
-        values: Dict[str, Any] = dict(x)
-        for b in bg.blocks:
-            out = b.apply(p[b.name], *[values[i] for i in b.inputs])
-            values[b.name] = checkpoint_name(out, b.name)
-        outs = tuple(values[o] for o in bg.outputs)
-        return outs[0] if len(outs) == 1 else outs
-
-    return jax.checkpoint(fwd, policy=policy)(params, inputs)
-
-
-def segment_groups(plan: ExecutionPlan, num_layers: int, nodes_per_layer: int = 1) -> List[int]:
-    """Layer-group sizes [g₁, …, g_k] induced by the plan on a layer chain.
-
-    For the scan-over-layers production models the graph is a chain of
-    ``num_layers`` macro-nodes; the plan's segments V_i are contiguous layer
-    runs.  Returns the run lengths, which models.transformer uses to build a
-    per-group ``jax.checkpoint`` inner scan (segment remat ≙ canonical
-    strategy on the chain graph).
-    """
-    sizes = []
-    for seg in plan.segments:
-        n_nodes = len(seg.nodes)
-        if n_nodes % nodes_per_layer:
-            raise ValueError(
-                f"segment {seg.index} has {n_nodes} nodes, not a multiple of "
-                f"{nodes_per_layer} per layer — plan does not align to layers"
-            )
-        sizes.append(n_nodes // nodes_per_layer)
-    if sum(sizes) != num_layers:
-        raise ValueError(f"plan covers {sum(sizes)} layers, model has {num_layers}")
-    return sizes
-
-
-def even_groups(num_layers: int, num_segments: int) -> List[int]:
-    """Chen-style √n fallback grouping (equal-size contiguous segments)."""
-    base, extra = divmod(num_layers, num_segments)
-    return [base + (1 if i < extra else 0) for i in range(num_segments)]
+__all__ = [
+    "plan_policy",
+    "apply_with_policy",
+    "segment_groups",
+    "even_groups",
+]

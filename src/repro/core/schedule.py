@@ -1,12 +1,17 @@
 """Canonical strategy (§3) as an executable plan.
 
-``ExecutionPlan`` is the bridge between the DP output (a lower-set sequence)
-and the two execution backends:
+``ExecutionPlan`` is the pivot of the unified pipeline: the DP output (a
+lower-set sequence) lowered into segments/cache-set form, which every
+registered backend in ``core.lowering`` executes —
 
-* ``core.executor``  — segment-by-segment custom-VJP interpreter (paper-
-  faithful semantics, used to validate gradients bit-for-bit);
-* ``core.remat``     — ``jax.checkpoint``/``save_only_these_names`` lowering
-  (production path that composes with jit/pjit sharding).
+* ``"interpreter"`` — segment-by-segment VJP interpreter (paper-faithful
+  semantics; validates gradients and audits live bytes);
+* ``"policy"`` / ``"jaxpr"`` — one ``jax.checkpoint`` whose
+  ``save_only_these_names`` policy is the plan's cache set U_k (production
+  paths, composing with jit/pjit sharding, for BlockGraphs and arbitrary
+  traced functions respectively);
+* ``"segment"`` — per-segment ``jax.checkpoint``, projecting onto grouped
+  scan remat for the layer-chain production models.
 """
 
 from __future__ import annotations

@@ -1,5 +1,12 @@
 """Apply the paper's planner to the production models.
 
+One instance of the unified pipeline (carrier → Planner → lowering): the
+carrier here is the unit-granularity *chain graph* of the scan-over-units
+LM, the Planner is the shared process-default one (plan cache + budget
+sweep + lazy cap extension), and the lowering is the scan-chain projection
+of the ``"segment"`` backend (``segments_from_result`` →
+``models.transformer`` ``segment_sizes``).
+
 The scan-over-units LM is, at unit granularity, a *chain* — and on a chain
 the lower-set lattice is exactly the set of prefixes, so the DP solution is
 the true optimum (DESIGN.md §3).  Each unit is modelled as two nodes:
@@ -148,6 +155,10 @@ def segments_from_result(
     res: DPResult, n_units: int
 ) -> Tuple[Tuple[int, ...], Tuple[bool, ...]]:
     """Lower-set sequence on the 2-node chain → (group sizes, remat flags).
+
+    This is the scan-chain projection of the ``"segment"`` lowering backend
+    (``core.lowering.segment.segment_groups``), specialized to the
+    interior/boundary 2-node unit encoding of :func:`chain_graph`.
 
     On the chain, ∂(L) = {max(L)}: a lower set ending at a unit's *interior*
     node caches that interior — the unit runs unwrapped (vanilla residuals,

@@ -64,6 +64,10 @@ def segment_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     the smallest feasible gradient-accumulation factor (§5.1's minimal-budget
     protocol turned inside out for a fixed per-device HBM).
 
+    The whole call is one pass of the unified pipeline (chain carrier →
+    shared Planner → scan-chain segment lowering); restarts and re-meshes
+    re-plan through the content-addressed plan cache.
+
     Returns (SegmentPlan, DPResult)."""
     if cfg.remat_method == "none":
         return None, None

@@ -1,9 +1,10 @@
 """Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
 
 Runs the full production stack end to end on whatever devices the host has:
-config → DP remat plan (the paper's technique) → sharded train step →
-fault-tolerant loop (checkpoint/restart, NaN guard, straggler hooks) over
-the synthetic pipeline.  On a real TPU pod the same script runs under
+config → DP remat plan (the unified pipeline: chain carrier → Planner →
+segment lowering) → sharded train step → fault-tolerant loop
+(checkpoint/restart, NaN guard, straggler hooks) over the synthetic
+pipeline.  On a real TPU pod the same script runs under
 ``jax.distributed.initialize()`` with the production mesh; here the mesh is
 host-sized.
 """

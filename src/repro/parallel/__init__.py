@@ -1,0 +1,1 @@
+"""repro.parallel — mesh/axis-type compatibility shims and sharding rules."""

@@ -52,9 +52,10 @@ class Engine:
     ):
         # Serving processes are usually co-located with (or restarted from)
         # training jobs; attaching the same on-disk plan cache means any
-        # planning this process does (e.g. prefill remat segmentation via
-        # launch.plan) is a content-addressed lookup, and plans solved here
-        # are visible to the trainers.
+        # planning this process does (prefill remat segmentation via
+        # launch.plan, or ad-hoc repro.plan_function calls) is a
+        # content-addressed lookup, and plans solved here are visible to
+        # the trainers — one pipeline, one store.
         if plan_cache_dir:
             from repro.core.plan_cache import set_default_cache_dir
 

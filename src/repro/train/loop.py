@@ -23,6 +23,9 @@ Responsibilities (each one individually testable — see tests/test_train_loop.p
 * **plan cache** — ``plan_cache_dir`` attaches the on-disk recomputation-plan
   store (core.plan_cache): crash-restarts and elastic re-meshes recover their
   DP remat segmentation as a content-addressed lookup instead of a re-solve.
+  Planning itself goes through the unified pipeline (``core.lowering``):
+  the launchers hand this loop a loss whose remat segmentation is the
+  ``"segment"`` lowering of a Planner ExecutionPlan on the unit chain.
 """
 
 from __future__ import annotations

@@ -1,0 +1,229 @@
+"""Backend equivalence: every registered lowering of a plan computes the
+same function.
+
+The paper's core guarantee — "any canonical strategy … never alters the
+network output" — asserted at the bit level across the whole lowering
+registry: on random small nets, the interpreter, the checkpoint-policy
+lowering, the per-segment lowering, and the jaxpr-level lowering must all
+return loss and gradients **bit-identical** to vanilla
+``jax.value_and_grad``.
+
+The nets are built from ``lax`` primitives: bit-identity is a statement
+about replaying the same compilation units, and ``jnp`` wrappers (e.g.
+``jnp.tanh``) run as separate jit units in eager mode, which can shift a
+recomputed value by an ulp.  The loss wrapper is shared by both sides, so
+it does not break the comparison.
+
+The interpreter additionally audits the memory claim: its live-byte trace
+must stay within the plan's analytic peak (eq. 2) and within the
+no-liveness event simulation (``core.liveness``).
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from repro.core import PlanCache, Planner, simulate
+from repro.core.blockgraph import Block, BlockGraph
+from repro.core.jaxpr_graph import trace
+from repro.core.lowering import (
+    available_backends,
+    get_lowering,
+    plan_function,
+    vanilla_value_and_grad,
+)
+from repro.core.lowering.carriers import BlockGraphCarrier, TracedCarrier
+
+DN = (((1,), (0,)), ((), ()))  # 2-D matmul dimension_numbers
+D = 8
+
+
+def _leaves(t):
+    return jax.tree_util.tree_leaves(t)
+
+
+def _assert_bits(got, ref, what=""):
+    for a, b in zip(_leaves(got), _leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# Random small nets (lax primitives, chain + random skip connections)
+# ---------------------------------------------------------------------------
+
+
+def _lin_init(rng, *in_shapes):
+    return {"w": jax.random.normal(rng, (D, D)) * 0.3}
+
+
+def _lin(p, *xs):
+    h = xs[0]
+    for x in xs[1:]:
+        h = lax.add(h, x)  # skip merge
+    return lax.tanh(lax.dot_general(h, p["w"], DN))
+
+
+def _rand_blockgraph(seed: int, n_blocks: int) -> BlockGraph:
+    r = random.Random(seed)
+    blocks = [Block("b0", _lin, ("x",), _lin_init)]
+    for i in range(1, n_blocks):
+        ins = [f"b{i-1}"]
+        if i >= 2 and r.random() < 0.5:
+            ins.append(f"b{r.randrange(i - 1)}")  # skip connection
+        blocks.append(Block(f"b{i}", _lin, tuple(ins), _lin_init))
+    return BlockGraph(blocks, ["x"], [f"b{n_blocks-1}"])
+
+
+def _rand_traced(seed: int, depth: int):
+    r = random.Random(seed)
+    skip_at = r.randrange(depth) if depth > 2 and r.random() < 0.7 else None
+
+    def fn(params, x):
+        h = x
+        skip = x
+        for i, w in enumerate(params):
+            h = lax.tanh(lax.dot_general(h, w, DN))
+            if i == skip_at:
+                skip = h
+        if skip_at is not None:
+            h = lax.add(h, skip)
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(seed)
+    params = [
+        jax.random.normal(jax.random.fold_in(key, i), (D, D)) * 0.3
+        for i in range(depth)
+    ]
+    x = jax.random.normal(jax.random.fold_in(key, 999), (4, D))
+    return fn, (params, x)
+
+
+# ---------------------------------------------------------------------------
+# Property: all backends == vanilla, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 7))
+def test_blockgraph_backends_bit_identical(seed, n_blocks):
+    bg = _rand_blockgraph(seed, n_blocks)
+    params = bg.init(jax.random.PRNGKey(seed), {"x": (4, D)})
+    inputs = {"x": jax.random.normal(jax.random.PRNGKey(seed + 1), (4, D))}
+    loss_fn = lambda out: jnp.sum(out * out)
+    ref = vanilla_value_and_grad(bg, loss_fn)(params, inputs)
+
+    planner = Planner(cache=PlanCache())
+    g = bg.to_graph(params, inputs)
+    budget = planner.min_feasible_budget(g, "approx_dp") * 1.2  # forces remat
+    for backend in ("interpreter", "policy", "segment"):
+        pf = plan_function(bg, budget, backend=backend, loss_fn=loss_fn,
+                           planner=planner)
+        loss, grads = pf(params, inputs)
+        _assert_bits(loss, ref[0], f"{backend}: loss")
+        _assert_bits(grads, ref[1], f"{backend}: grads")
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 9))
+def test_traced_backends_bit_identical(seed, depth):
+    fn, args = _rand_traced(seed, depth)
+    ref = jax.value_and_grad(fn)(*args)
+    planner = Planner(cache=PlanCache())
+    g = trace(fn, *args).graph
+    budget = planner.min_feasible_budget(g, "approx_dp") * 1.2
+    for backend in ("jaxpr", "interpreter"):
+        pf = plan_function(fn, budget, backend=backend, planner=planner)
+        loss, grads = pf(*args)
+        _assert_bits(loss, ref[0], f"{backend}: loss")
+        _assert_bits(grads, ref[1], f"{backend}: grads")
+
+
+# ---------------------------------------------------------------------------
+# Interpreter live-byte audit vs the plan's analytic peak + core.liveness
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 8))
+def test_interpreter_live_trace_within_plan_peak(seed, depth):
+    fn, args = _rand_traced(seed, depth)
+    pf = plan_function(fn, backend="interpreter", track_live=True,
+                       planner=Planner(cache=PlanCache()))
+    _, _, live = pf(*args)  # budget=None: exact minimal feasible budget
+    lowered = pf.lowered_for(*args)
+    peak_live = max(b for _, b in live)
+    assert peak_live <= lowered.plan.peak_memory
+    # audit against the event-level liveness simulator: the measured trace
+    # counts forward intermediates only, so it is bounded by the
+    # no-liveness simulation (which also carries gradient buffers)
+    g = lowered.carrier.to_graph()
+    seq = lowered.report.result.sequence
+    assert peak_live <= simulate(g, seq, liveness=False).peak_memory
+
+
+def test_blockgraph_interpreter_live_trace_within_plan_peak():
+    bg = _rand_blockgraph(7, 6)
+    params = bg.init(jax.random.PRNGKey(7), {"x": (4, D)})
+    inputs = {"x": jax.random.normal(jax.random.PRNGKey(8), (4, D))}
+    loss_fn = lambda out: jnp.sum(out * out)
+    pf = plan_function(bg, backend="interpreter", loss_fn=loss_fn,
+                       track_live=True, planner=Planner(cache=PlanCache()))
+    _, _, live = pf(params, inputs)
+    lowered = pf.lowered_for(params, inputs)
+    peak_live = max(b for _, b in live)
+    assert peak_live <= lowered.plan.peak_memory
+
+
+# ---------------------------------------------------------------------------
+# Registry behavior
+# ---------------------------------------------------------------------------
+
+
+def test_registry_and_auto_dispatch():
+    assert set(available_backends()) >= {
+        "interpreter", "policy", "segment", "jaxpr"
+    }
+    fn, args = _rand_traced(3, 4)
+    carrier = TracedCarrier.trace(fn, args)
+    assert available_backends(carrier) == ["interpreter", "jaxpr"]
+    assert carrier.default_backend == "jaxpr"
+
+    bg = _rand_blockgraph(3, 4)
+    params = bg.init(jax.random.PRNGKey(0), {"x": (4, D)})
+    inputs = {"x": jnp.ones((4, D))}
+    bc = BlockGraphCarrier(bg, lambda o: jnp.sum(o), params, inputs)
+    assert available_backends(bc) == ["interpreter", "policy", "segment"]
+    assert bc.default_backend == "policy"
+
+    with pytest.raises(ValueError, match="unknown lowering backend"):
+        get_lowering("nope")
+    # a backend that does not support the carrier is rejected
+    pf = plan_function(fn, backend="policy")
+    with pytest.raises(ValueError, match="does not support"):
+        pf.lowered_for(*args)
+
+
+def test_track_live_rejected_on_xla_backends():
+    fn, args = _rand_traced(5, 4)
+    pf = plan_function(fn, backend="jaxpr", track_live=True)
+    with pytest.raises(ValueError, match="interpreter-only"):
+        pf.lowered_for(*args)
+
+
+def test_shims_reexport_the_moved_entry_points():
+    """core.executor / core.remat stay importable (deprecation shims)."""
+    from repro.core import executor, remat
+    from repro.core.lowering import interpreter, policy, segment
+
+    assert executor.planned_value_and_grad is interpreter.planned_value_and_grad
+    assert executor.vanilla_value_and_grad is interpreter.vanilla_value_and_grad
+    assert remat.apply_with_policy is policy.apply_with_policy
+    assert remat.plan_policy is policy.plan_policy
+    assert remat.segment_groups is segment.segment_groups
+    assert remat.even_groups is segment.even_groups

@@ -1,0 +1,171 @@
+"""Acceptance for the ``repro.plan_function`` front door (ISSUE 3).
+
+A plain (non-BlockGraph) JAX MLP under a **halved byte budget** must:
+
+* train with loss and gradients **bit-identical** to vanilla
+  ``jax.value_and_grad`` (while actually recomputing — overhead > 0);
+* keep measured live intermediate bytes ≤ the plan's ``peak_memory``;
+* plan-cache-hit on the second call (no re-solve).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+import repro
+from repro.core import PlanCache, Planner
+from repro.core.jaxpr_graph import trace
+from repro.core.liveness import vanilla_peak
+
+DN = (((1,), (0,)), ((), ()))
+
+
+def _mlp():
+    def fn(params, x):
+        h = x
+        for w in params:
+            h = lax.tanh(lax.dot_general(h, w, DN))
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [
+        jax.random.normal(jax.random.fold_in(key, i), (16, 16)) * 0.3
+        for i in range(10)
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    return fn, params, x
+
+
+@pytest.fixture
+def setup():
+    fn, params, x = _mlp()
+    g = trace(fn, params, x).graph
+    budget = vanilla_peak(g, liveness=False) / 2  # the halved byte budget
+    return fn, params, x, g, budget
+
+
+def _bits(a, b):
+    return all(
+        np.array_equal(np.asarray(u), np.asarray(v))
+        for u, v in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b))
+    )
+
+
+def test_halved_budget_bit_identical_to_vanilla(setup):
+    fn, params, x, g, budget = setup
+    ref_loss, ref_grads = jax.value_and_grad(fn)(params, x)
+
+    planned = repro.plan_function(fn, budget, planner=Planner(cache=PlanCache()))
+    loss, grads = planned(params, x)
+    lowered = planned.lowered_for(params, x)
+    assert lowered.backend == "jaxpr"  # the trace-anything production path
+    assert lowered.plan.peak_memory <= budget
+    assert lowered.plan.overhead > 0  # the budget actually forces recompute
+    assert _bits(loss, ref_loss)
+    assert _bits(grads, ref_grads)
+
+
+def test_training_steps_match_vanilla(setup):
+    """A few SGD steps through the planned function track vanilla exactly."""
+    fn, params, x, g, budget = setup
+    planned = repro.plan_function(fn, budget, planner=Planner(cache=PlanCache()))
+    p1 = p2 = params
+    for _ in range(3):
+        _, g1 = planned(p1, x)
+        _, g2 = jax.value_and_grad(fn)(p2, x)
+        p1 = [w - 0.05 * gw for w, gw in zip(p1, g1)]
+        p2 = [w - 0.05 * gw for w, gw in zip(p2, g2)]
+    assert _bits(p1, p2)
+    l1, _ = planned(p1, x)
+    l2, _ = jax.value_and_grad(fn)(p2, x)
+    assert _bits(l1, l2)
+
+
+def test_measured_live_bytes_within_plan_peak(setup):
+    fn, params, x, g, budget = setup
+    audited = repro.plan_function(fn, budget, backend="interpreter",
+                                  track_live=True,
+                                  planner=Planner(cache=PlanCache()))
+    loss, grads, live = audited(params, x)
+    lowered = audited.lowered_for(params, x)
+    assert live
+    assert max(b for _, b in live) <= lowered.plan.peak_memory
+    ref = jax.value_and_grad(fn)(params, x)
+    assert _bits((loss, grads), ref)
+
+
+def test_second_call_is_plan_cache_hit(setup):
+    fn, params, x, g, budget = setup
+    planner = Planner(cache=PlanCache())
+
+    first = repro.plan_function(fn, budget, planner=planner)
+    _ = first(params, x)
+    stats_cold = planner.cache.stats()
+
+    second = repro.plan_function(fn, budget, planner=planner)  # fresh front door
+    _ = second(params, x)
+    stats_warm = planner.cache.stats()
+    assert stats_warm["hits"] > stats_cold["hits"]
+    assert stats_warm["misses"] == stats_cold["misses"]  # no re-solve
+    assert second.lowered_for(params, x).plan == first.lowered_for(params, x).plan
+
+    # within one PlannedFunction, the lowering is memoized per signature
+    assert second.lowered_for(params, x) is second.lowered_for(params, x)
+
+
+def test_jit_composable(setup):
+    """The lowered twin is a plain JAX function: jax.jit composes."""
+    fn, params, x, g, budget = setup
+    planned = repro.plan_function(fn, budget, planner=Planner(cache=PlanCache()))
+    run = planned.lowered_for(params, x).run
+    ref = jax.jit(jax.value_and_grad(fn))(params, x)
+    got = jax.jit(run)(params, x)
+    assert _bits(got, ref)
+
+
+def test_budget_none_uses_exact_min_feasible(setup):
+    fn, params, x, g, budget = setup
+    planner = Planner(cache=PlanCache())
+    planned = repro.plan_function(fn, planner=planner)
+    lowered = planned.lowered_for(params, x)
+    mfb = planner.min_feasible_budget(planner.prepare(g), "approx_dp")
+    assert lowered.report.budget == mfb
+    assert lowered.plan.peak_memory <= mfb
+    assert _bits(planned(params, x), jax.value_and_grad(fn)(params, x))
+
+
+def test_infeasible_budget_raises_with_hint(setup):
+    fn, params, x, g, budget = setup
+    planned = repro.plan_function(fn, 1.0, planner=Planner(cache=PlanCache()))
+    with pytest.raises(ValueError, match="minimal feasible budget"):
+        planned(params, x)
+
+
+def test_argnums_tuple(setup):
+    fn, params, x, g, budget = setup
+    planned = repro.plan_function(fn, budget, argnums=(0, 1),
+                                  planner=Planner(cache=PlanCache()))
+    loss, (gp, gx) = planned(params, x)
+    ref_loss, (rp, rx) = jax.value_and_grad(fn, argnums=(0, 1))(params, x)
+    assert _bits((loss, gp, gx), (ref_loss, rp, rx))
+
+
+def test_non_scalar_output_rejected():
+    planned = repro.plan_function(lambda x: x * 2.0)
+    with pytest.raises(TypeError, match="scalar-output"):
+        planned(jnp.ones((3,)))
+
+
+def test_changed_structure_retraces():
+    fn, params, x = _mlp()
+    planner = Planner(cache=PlanCache())
+    planned = repro.plan_function(fn, planner=planner)
+    _ = planned(params, x)
+    # deeper net = different structure → a second lowering, not an error
+    more = params + [jnp.eye(16)]
+    l2, g2 = planned(more, x)
+    assert _bits((l2, g2), jax.value_and_grad(fn)(more, x))
+    assert len(planned._memo) == 2

@@ -108,6 +108,69 @@ def test_capped_sweep_matches_below_cap(seed, n, span):
 
 
 @settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.booleans())
+def test_extend_bit_identical_to_fresh_sweep(seed, n, exact_family):
+    """Lazy cap extension: growing a capped surface with ``Sweep.extend``
+    is bit-identical to building a fresh sweep at the larger cap — at every
+    budget (incl. ulp-adjacent), on the frontier, and on the exact minimal
+    feasible budget — and the full extension matches the uncapped sweep."""
+    import math
+
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    fam = all_lower_sets(g) if exact_family else pruned_lower_sets(g)
+    for objective in ("time_centric", "memory_centric"):
+        full = sweep(g, fam, objective)
+        caps = sorted({b for b, _ in full.frontier()})
+        if len(caps) < 2:
+            continue
+        prior = sweep(g, fam, objective, cap=caps[0])
+        ext = prior.extend(g, cap=caps[-1])
+        fresh = sweep(g, fam, objective, cap=caps[-1])
+        assert ext.cap == fresh.cap
+        probes = set()
+        for b in caps:
+            probes |= {b, math.nextafter(b, 0.0), math.nextafter(b, math.inf)}
+        for B in sorted(p for p in probes if p <= caps[-1]):
+            assert ext.extract(B) == fresh.extract(B)
+        assert ext.frontier() == fresh.frontier()
+        assert ext.min_feasible_budget() == fresh.min_feasible_budget()
+        # extend to the full (uncapped) surface
+        ext_full = prior.extend(g)
+        assert ext_full.cap is None
+        for B in sorted(probes) + [caps[-1] * 3.0]:
+            assert ext_full.extract(B) == full.extract(B)
+        # extending to a smaller/equal cap is a no-op (cap only grows)
+        assert prior.extend(g, cap=caps[0]) is prior
+        assert full.extend(g, cap=caps[0]) is full
+
+
+def test_planner_extends_cached_sweep_instead_of_rebuilding(rng):
+    """A grid whose max budget outgrows the cached capped sweep extends it:
+    the cache entry is replaced (key is budget-free) and the answers stay
+    bit-identical to per-budget solves."""
+    g = random_dag(rng, 6)
+    c = PlanCache()
+    p = Planner(cache=c)
+    fam = all_lower_sets(g)
+    mfb = p.min_feasible_budget(g, "exact_dp")
+    small = p.solve_grid(g, [mfb, mfb * 1.2], "exact_dp")
+    sw_small = p._cached_sweep(p.prepare(g), "exact_dp", "time_centric")
+    assert sw_small is not None and sw_small.cap is not None
+    budgets = [mfb * (1.0 + 3.0 * i / 7) for i in range(8)]
+    grid = p.solve_grid(g, budgets, "exact_dp")
+    sw_big = p._cached_sweep(p.prepare(g), "exact_dp", "time_centric")
+    assert sw_big.cap is not None and sw_big.cap >= max(budgets)
+    for got, ref in zip(grid, [solve(g, B, fam) for B in budgets]):
+        assert got.feasible == ref.feasible
+        assert got.sequence == ref.sequence
+        assert got.overhead == ref.overhead
+    # frontier() grows the same surface to the full (uncapped) one
+    crit = p.frontier(g, "exact_dp")
+    assert crit == sweep(g, fam).frontier()
+
+
+@settings(max_examples=20, deadline=None)
 @given(st.integers(0, 10_000), st.integers(2, 6))
 def test_sweep_serialization_roundtrip(seed, n):
     """encode → JSON → decode preserves the whole extraction surface, through

@@ -19,6 +19,9 @@ Beyond the paper, this also benchmarks the budget-sweep engine
 ``--smoke`` runs a trimmed network set and *asserts* the regression
 guards (exit code 1 on violation) — wired into CI so DP-speed or
 bit-identity regressions fail the build instead of landing silently.
+Every run also writes ``BENCH_dp_runtime.json`` (sweep-vs-loop state
+counts, plan-cache cold/warm timings) — CI uploads it per commit so the
+perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -144,13 +147,14 @@ def check_sweep(rows: Dict[str, Dict]) -> list:
     return failures
 
 
-def check_plan_function() -> list:
-    """Front-door regression guard (returned as a list of failures).
+def check_plan_function():
+    """Front-door regression guard → (failures, machine-readable record).
 
     ``repro.plan_function`` must (a) produce gradients bit-identical to
     vanilla ``jax.value_and_grad`` under a halved byte budget, and (b)
     cache-hit on the second call — a fresh planned function over the same
-    fn/shapes re-solves nothing.
+    fn/shapes re-solves nothing.  The record carries the cold-vs-warm
+    planning wall times (the plan-cache hit timing tracked across PRs).
     """
     import jax
     import jax.numpy as jnp
@@ -178,10 +182,17 @@ def check_plan_function() -> list:
 
     failures = []
     planner = Planner(cache=PlanCache())
-    out1 = plan_function(fn, budget, planner=planner)(params, x)
+    pf1 = plan_function(fn, budget, planner=planner)
+    t0 = time.perf_counter()
+    lowered1 = pf1.lowered_for(params, x)
+    t_plan_cold = time.perf_counter() - t0
+    out1 = lowered1.run(params, x)
     misses_cold = planner.cache.stats()["misses"]
     pf2 = plan_function(fn, budget, planner=planner)
-    out2 = pf2(params, x)
+    t0 = time.perf_counter()
+    lowered2 = pf2.lowered_for(params, x)
+    t_plan_warm = time.perf_counter() - t0
+    out2 = lowered2.run(params, x)
     stats = planner.cache.stats()
     if stats["hits"] < 1:
         failures.append("plan_function: second call did not hit the plan cache")
@@ -204,9 +215,16 @@ def check_plan_function() -> list:
             break
     print(f"\n== plan_function front door ==\n"
           f"cache: {stats['hits']} hits / {stats['misses']} misses after "
-          f"two planned calls; gradients bit-identical: "
+          f"two planned calls; plan {t_plan_cold*1e3:.1f} ms cold / "
+          f"{t_plan_warm*1e3:.1f} ms warm; gradients bit-identical: "
           f"{not any('bit-identical' in f for f in failures)}")
-    return failures
+    record = {
+        "plan_cold_s": t_plan_cold,
+        "plan_warm_s": t_plan_warm,
+        "cache_hits": stats["hits"],
+        "cache_misses": stats["misses"],
+    }
+    return failures, record
 
 
 def paper_rows(nets) -> Dict[str, Dict]:
@@ -257,7 +275,8 @@ def paper_rows(nets) -> Dict[str, Dict]:
     return out
 
 
-def main(smoke: bool = False) -> Dict[str, Dict]:
+def main(smoke: bool = False,
+         out_json: str = "BENCH_dp_runtime.json") -> Dict[str, Dict]:
     nets = SMOKE_NETS if smoke else tuple(NETWORKS)
     # the grid loop runs 8 full per-budget DPs per network; keep the sweep
     # comparison to the small/medium nets by default (the big three already
@@ -266,7 +285,24 @@ def main(smoke: bool = False) -> Dict[str, Dict]:
         "vgg19", "unet", "resnet50", "googlenet")
     out = {"paper": paper_rows(nets), "sweep": sweep_rows(sweep_nets)}
     failures = check_sweep(out["sweep"])
-    failures += check_plan_function()
+    pf_failures, pf_record = check_plan_function()
+    failures += pf_failures
+    out["plan_function"] = pf_record
+    if out_json:
+        # machine-readable perf trajectory (sweep-vs-loop state counts,
+        # plan-cache hit timings) — CI uploads this per commit
+        import json
+
+        payload = {
+            "smoke": smoke,
+            "failures": failures,
+            "paper": out["paper"],
+            "sweep": out["sweep"],
+            "plan_function": pf_record,
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"\nwrote {out_json}")
     if failures:
         print("\nREGRESSIONS:")
         for f in failures:
@@ -285,4 +321,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small network set + hard assertions (CI mode)")
-    main(**vars(ap.parse_args()))
+    ap.add_argument("--out-json", default="BENCH_dp_runtime.json",
+                    help="machine-readable results path ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out_json=args.out_json)

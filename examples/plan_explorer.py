@@ -113,25 +113,63 @@ def _demo_factory():
     return fn, (params, x)
 
 
-def traced_graph(spec: str):
-    """``module:factory`` (or ``demo``) → paper graph via the front door."""
+def _bg_demo_factory():
+    """Built-in BlockGraph demo: a 6-block tanh·matmul chain plus loss.
+
+    With ``--backend jaxpr`` the BlockGraph is traced *whole* and planned
+    at equation granularity (finer than blocks when XLA fusion allows) —
+    the ISSUE-4 satellite path.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.blockgraph import Block, BlockGraph
+
+    dn = (((1,), (0,)), ((), ()))
+
+    def mk(name, src):
+        return Block(
+            name=name,
+            apply=lambda p, h: lax.tanh(lax.dot_general(h, p["w"], dn)),
+            inputs=(src,),
+            init=lambda rng, shp: {
+                "w": jax.random.normal(rng, (shp[-1], shp[-1])) * 0.2
+            },
+        )
+
+    bg = BlockGraph([mk(f"b{i}", "x" if i == 0 else f"b{i-1}")
+                     for i in range(6)], ["x"], ["b5"])
+    params = bg.init(jax.random.PRNGKey(0), {"x": (16, 64)})
+    inputs = {"x": jax.random.normal(jax.random.PRNGKey(1), (16, 64))}
+    loss = lambda out: jnp.sum(out * out)
+    return bg, (params, inputs), loss
+
+
+def traced_graph(spec: str, backend: str = "auto"):
+    """``module:factory`` / ``demo`` / ``bg-demo`` → paper graph via the
+    front door, planned with the chosen lowering ``backend``."""
+    loss_fn = None
     if spec == "demo":
         fn, args = _demo_factory()
+    elif spec == "bg-demo":
+        fn, args, loss_fn = _bg_demo_factory()
     else:
         import importlib
 
         mod_name, _, attr = spec.partition(":")
         if not attr:
             raise SystemExit(
-                f"--traced wants 'module:factory' or 'demo', got {spec!r}"
+                f"--traced wants 'module:factory', 'demo' or 'bg-demo', "
+                f"got {spec!r}"
             )
         fn, args = getattr(importlib.import_module(mod_name), attr)()
     import repro
 
-    planned = repro.plan_function(fn)  # budget=None: min_feasible_budget
+    planned = repro.plan_function(fn, backend=backend, loss_fn=loss_fn)
     lowered = planned.lowered_for(*args)
     g = lowered.carrier.to_graph()
-    print(f"traced {spec}: {g.n} equations, backend {lowered.backend!r}, "
+    print(f"traced {spec}: {g.n} nodes, backend {lowered.backend!r}, "
           f"plan at min_feasible_budget: {len(lowered.plan.segments)} "
           f"segments, overhead {lowered.plan.overhead:.0f} T-units")
     return g
@@ -143,8 +181,12 @@ def main():
                     help="one of the paper's nets (benchmarks.networks)")
     ap.add_argument("--arch", default=None, help="assigned architecture id")
     ap.add_argument("--traced", default=None,
-                    help="'demo' or 'module:factory' returning "
-                         "(fn, example_args) — explore any JAX function")
+                    help="'demo', 'bg-demo' (BlockGraph at equation "
+                         "granularity with --backend jaxpr) or "
+                         "'module:factory' returning (fn, example_args)")
+    ap.add_argument("--backend", default="auto",
+                    help="lowering backend for --traced (auto | jaxpr | "
+                         "policy | segment | interpreter)")
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk plan cache (re-runs become lookups)")
     args = ap.parse_args()
@@ -155,7 +197,7 @@ def main():
         set_default_cache_dir(args.cache_dir)
 
     if args.traced:
-        g = traced_graph(args.traced)
+        g = traced_graph(args.traced, backend=args.backend)
     elif args.arch:
         from repro.configs import SHAPES, get_config
         from repro.launch.plan import chain_graph, plan_inputs

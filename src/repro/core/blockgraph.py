@@ -41,6 +41,12 @@ class Block:
     inputs: names of producer blocks or graph inputs.
     heavy: paper cost model — True → T_v = 10, else 1.
     flops: optional analytic FLOPs for the "flops" cost model.
+    out_sharding: optional sharding of the block's output — a
+      ``PartitionSpec``, or a tuple of logical axis names resolved under
+      the active ``parallel.sharding`` rules.  With a mesh, ``to_graph``
+      budgets this block at per-device bytes and the checkpoint lowerings
+      pin the output with ``with_sharding_constraint`` (same semantics as
+      the traced carrier's propagated shardings).
     """
 
     name: str
@@ -49,6 +55,21 @@ class Block:
     init: Optional[Callable[..., Any]] = None
     heavy: bool = True
     flops: Optional[float] = None
+    out_sharding: Optional[Any] = None
+
+
+def block_spec(block: Block, shape: Tuple[int, ...], axis_sizes):
+    """A Block's ``out_sharding`` annotation → concrete PartitionSpec."""
+    from jax.sharding import PartitionSpec
+
+    from repro.parallel.sharding import resolve_spec
+
+    sh = block.out_sharding
+    if sh is None:
+        return PartitionSpec()
+    if isinstance(sh, PartitionSpec):
+        return sh
+    return resolve_spec(tuple(sh), axis_sizes, shape=shape)
 
 
 class BlockGraph:
@@ -116,8 +137,19 @@ class BlockGraph:
         params: Dict[str, Any],
         inputs: Dict[str, Any],
         cost_model: str = "paper",
+        mesh: Any = None,
     ) -> Graph:
-        """Export the paper's G=(V,E) with traced M_v and the chosen T_v."""
+        """Export the paper's G=(V,E) with traced M_v and the chosen T_v.
+
+        With ``mesh`` (a Mesh or ``{axis: size}`` dict), blocks annotated
+        with ``out_sharding`` are budgeted at **per-device** bytes through
+        the shared accounting in ``repro.parallel.sharding``.
+        """
+        axis_sizes = None
+        if mesh is not None:
+            from repro.parallel.sharding import axis_sizes_of, sharded_aval_bytes
+
+            axis_sizes = axis_sizes_of(mesh)
         values: Dict[str, Any] = {
             k: jax.ShapeDtypeStruct(v.shape, v.dtype) if hasattr(v, "shape") else v
             for k, v in inputs.items()
@@ -130,7 +162,16 @@ class BlockGraph:
                 b.apply, params[b.name], *[values[i] for i in b.inputs]
             )
             leaves = jax.tree_util.tree_leaves(out)
-            mem = float(sum(aval_bytes(l) for l in leaves))
+            if axis_sizes is not None and b.out_sharding is not None:
+                mem = float(sum(
+                    sharded_aval_bytes(
+                        l, block_spec(b, tuple(l.shape), axis_sizes),
+                        axis_sizes,
+                    )
+                    for l in leaves
+                ))
+            else:
+                mem = float(sum(aval_bytes(l) for l in leaves))
             if cost_model == "paper":
                 t = 10.0 if b.heavy else 1.0
             elif cost_model == "flops":

@@ -22,6 +22,15 @@ hardware-true rather than FLOP-proportional.  Profiles are content-addressed
 on disk (backend + JAX version) via the same atomic-JSON machinery as the
 plan cache, so a process profiles at most once per backend, ever.
 
+Sharded graphs price **per shard**: a carrier traced under a mesh
+(``core.jaxpr_graph`` with ``mesh=``) emits per-shard FLOPs in ``time`` for
+compute-bound kinds (a matmul/attention output split k ways costs each
+device 1/k of the global work) and per-device bytes in ``memory`` for
+everything else — so ``node_seconds`` below yields per-device seconds with
+no sharding-specific branch here, and the DP trades one accelerator's time
+against one accelerator's memory, exactly the paper's single-device budget
+semantics lifted onto a mesh.
+
 Calibration deliberately changes ``T_v`` and therefore the graph digest
 (``core.graph.graph_digest``): plans cached under a FLOP cost model and
 plans cached under a measured profile never alias, and re-profiling on new

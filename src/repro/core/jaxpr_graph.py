@@ -15,7 +15,14 @@ T_v = 1 for all other types of node."):
   (matmul 2·M·N·K, conv 2·spatial·Cin·Cout·k², elementwise = #elems), then
   quantized for the DP's integer t-axis by the caller.
 
-``M_v`` is always the byte size of the equation's outputs.
+``M_v`` is always the byte size of the equation's outputs — **per device**
+when a mesh + input shardings are supplied (the paper's budget B is the
+memory of one accelerator, §3): shardings are propagated through the jaxpr
+(``repro.parallel.sharding.propagate_eqn_specs``, conservative replicated
+fallback) and each node's bytes are the ceil-divided shard size.  Under the
+``"flops"`` cost model the same shard count divides ``T_v`` (per-shard
+FLOPs for sharded matmuls/attention), so the measured cost model
+(``core.cost_model``) prices sharded graphs in per-device seconds.
 """
 
 from __future__ import annotations
@@ -171,27 +178,74 @@ class JaxprGraph:
     graph: Graph
     eqns: List[Any]  # node idx → jaxpr eqn
     jaxpr: Any
+    #: per-equation output PartitionSpecs when traced under a mesh (aligned
+    #: with ``eqns``; None for an unsharded trace)
+    eqn_specs: Optional[List[Tuple]] = None
 
-    def node_name(self, idx: int) -> str:
-        return self.graph.nodes[idx].name
 
+def from_jaxpr(
+    closed_jaxpr,
+    cost_model: str = "paper",
+    mesh: Any = None,
+    in_shardings: Optional[Sequence[Any]] = None,
+) -> JaxprGraph:
+    """Build the paper's G=(V,E) from a ClosedJaxpr.
 
-def from_jaxpr(closed_jaxpr, cost_model: str = "paper") -> JaxprGraph:
-    """Build the paper's G=(V,E) from a ClosedJaxpr."""
+    With ``mesh`` (a ``jax.sharding.Mesh`` or a plain ``{axis: size}``
+    dict — no devices needed for planning), ``in_shardings`` is a sequence
+    of PartitionSpec/NamedSharding/None aligned with ``jaxpr.invars``;
+    node ``M_v`` becomes **per-device** bytes and the ``"flops"`` cost
+    model emits per-shard FLOPs.
+    """
     jaxpr = closed_jaxpr.jaxpr
     producer: Dict[Any, int] = {}  # jaxpr Var -> node idx
     nodes: List[Node] = []
     eqns: List[Any] = []
     edges: List[Tuple[int, int]] = []
 
-    for eqn in jaxpr.eqns:
-        mem = sum(aval_bytes(ov.aval) for ov in eqn.outvars if hasattr(ov, "aval"))
+    eqn_specs = None
+    axis_sizes: Dict[str, int] = {}
+    if mesh is not None:
+        from repro.parallel import sharding as _sh
+
+        axis_sizes = _sh.axis_sizes_of(mesh)
+        if in_shardings is None:
+            in_shardings = [None] * len(jaxpr.invars)
+        eqn_specs = _sh.propagate_eqn_specs(
+            closed_jaxpr, [_sh.normalize_spec(s) for s in in_shardings],
+            axis_sizes,
+        )
+
+    for eidx, eqn in enumerate(jaxpr.eqns):
+        if eqn_specs is not None:
+            from repro.parallel import sharding as _sh
+
+            specs = eqn_specs[eidx]
+            mem = 0
+            shards = 1
+            for ov, sp in zip(eqn.outvars, specs):
+                if not hasattr(ov, "aval"):
+                    continue
+                mem += _sh.sharded_aval_bytes(ov.aval, sp, axis_sizes)
+                if hasattr(ov.aval, "shape"):
+                    shards = max(
+                        shards,
+                        _sh.num_shards(ov.aval.shape, sp, axis_sizes),
+                    )
+        else:
+            shards = 1
+            mem = sum(
+                aval_bytes(ov.aval) for ov in eqn.outvars if hasattr(ov, "aval")
+            )
         if mem <= 0:
             mem = 1
         if cost_model == "paper":
             t = 10.0 if eqn_is_heavy(eqn) else 1.0
         elif cost_model == "flops":
-            t = eqn_flops_for(eqn)
+            # per-shard FLOPs: an output split k ways costs each device 1/k
+            # of the global work (contracting dims are never sharded by the
+            # conservative propagation, so no reduction terms appear)
+            t = max(eqn_flops_for(eqn) / shards, 1.0)
         else:
             raise ValueError(f"unknown cost_model {cost_model!r}")
         idx = len(nodes)
@@ -214,10 +268,20 @@ def from_jaxpr(closed_jaxpr, cost_model: str = "paper") -> JaxprGraph:
         for ov in eqn.outvars:
             producer[ov] = idx
 
-    return JaxprGraph(graph=Graph(nodes, edges), eqns=eqns, jaxpr=closed_jaxpr)
+    return JaxprGraph(
+        graph=Graph(nodes, edges), eqns=eqns, jaxpr=closed_jaxpr,
+        eqn_specs=eqn_specs,
+    )
 
 
-def trace(fn: Callable, *example_args, cost_model: str = "paper") -> JaxprGraph:
+def trace(
+    fn: Callable,
+    *example_args,
+    cost_model: str = "paper",
+    mesh: Any = None,
+    in_shardings: Optional[Sequence[Any]] = None,
+) -> JaxprGraph:
     """Trace ``fn`` on example arguments (arrays or ShapeDtypeStructs)."""
     closed = jax.make_jaxpr(fn)(*example_args)
-    return from_jaxpr(closed, cost_model=cost_model)
+    return from_jaxpr(closed, cost_model=cost_model, mesh=mesh,
+                      in_shardings=in_shardings)

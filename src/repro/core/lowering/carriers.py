@@ -33,7 +33,9 @@ class BlockGraphCarrier:
     """A ``BlockGraph`` bound to concrete params/inputs and a loss.
 
     The lowered callables take ``(params, inputs)`` — fresh values of the
-    same shapes — and return ``(loss, param_grads)``.
+    same shapes — and return ``(loss, param_grads)``.  With ``mesh`` (a
+    ``Mesh`` or a plain ``{axis: size}`` dict) blocks carrying an
+    ``out_sharding`` annotation are budgeted at per-device bytes.
     """
 
     bg: Any  # core.blockgraph.BlockGraph (kept untyped to avoid a cycle)
@@ -41,12 +43,13 @@ class BlockGraphCarrier:
     params: Any
     inputs: Dict[str, Any]
     cost_model: str = "paper"
+    mesh: Any = None
 
     default_backend = "policy"
 
     def to_graph(self) -> Graph:
         return self.bg.to_graph(self.params, self.inputs,
-                                cost_model=self.cost_model)
+                                cost_model=self.cost_model, mesh=self.mesh)
 
     def node_names(self) -> List[str]:
         return [b.name for b in self.bg.blocks]
@@ -61,6 +64,48 @@ def is_drop_var(v) -> bool:
     return type(v).__name__ == "DropVar"
 
 
+def _flat_arg_specs(args: Sequence[Any], in_shardings) -> Tuple:
+    """Flatten a per-positional-arg sharding description to per-leaf specs.
+
+    ``in_shardings`` is None (all replicated) or a sequence aligned with the
+    positional args; each entry is None, a single PartitionSpec /
+    NamedSharding applied to every leaf of that argument, or a pytree of
+    specs matching the argument's structure exactly.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def is_spec(x):
+        return x is None or isinstance(x, (PartitionSpec, NamedSharding))
+
+    def norm(s):
+        from repro.parallel.sharding import normalize_spec
+
+        return normalize_spec(s)
+
+    if in_shardings is None:
+        n = sum(len(_tree_flatten(a)[0]) for a in args)
+        return (PartitionSpec(),) * n
+    if len(in_shardings) != len(args):
+        raise ValueError(
+            f"in_shardings has {len(in_shardings)} entries for "
+            f"{len(args)} positional arguments"
+        )
+    out: List[Any] = []
+    for a, sh in zip(args, in_shardings):
+        leaves, tree = _tree_flatten(a)
+        if is_spec(sh):
+            out.extend([norm(sh)] * len(leaves))
+            continue
+        sh_leaves, sh_tree = jax.tree_util.tree_flatten(sh, is_leaf=is_spec)
+        if sh_tree != tree:
+            raise ValueError(
+                "in_shardings entry does not match the argument's pytree "
+                f"structure ({sh_tree} != {tree})"
+            )
+        out.extend(norm(s) for s in sh_leaves)
+    return tuple(out)
+
+
 @dataclasses.dataclass
 class TracedCarrier:
     """Any JAX callable, traced on example arguments.
@@ -68,6 +113,12 @@ class TracedCarrier:
     ``fn`` must return a scalar (``jax.value_and_grad`` semantics); the
     lowered callables take the same positional arguments (same pytree
     structure and avals) and return ``(value, grads)`` w.r.t. ``argnums``.
+
+    With ``mesh`` + ``in_shardings`` the trace is **sharding-aware**: node
+    ``M_v`` is per-device bytes (shardings propagated through the jaxpr,
+    conservative replicated fallback), the budget the planner enforces is
+    per-device, and the lowered twin re-applies the caller's shardings so
+    it stays pjit-composable.
     """
 
     fn: Callable[..., jax.Array]
@@ -78,6 +129,8 @@ class TracedCarrier:
     flat_avals: Tuple[jax.ShapeDtypeStruct, ...]
     arg_slices: Tuple[Tuple[int, int], ...]  # flat-leaf span per position arg
     jg: JaxprGraph
+    mesh: Any = None  # jax.sharding.Mesh | {axis: size} dict | None
+    in_specs: Optional[Tuple] = None  # flat per-leaf PartitionSpecs
 
     default_backend = "jaxpr"
 
@@ -88,6 +141,8 @@ class TracedCarrier:
         args: Sequence[Any],
         argnums: Union[int, Tuple[int, ...]] = 0,
         cost_model: str = "paper",
+        mesh: Any = None,
+        in_shardings: Optional[Sequence[Any]] = None,
     ) -> "TracedCarrier":
         flat, in_tree = _tree_flatten(tuple(args))
         # flat-leaf span of each positional argument (interpreter backward)
@@ -109,6 +164,9 @@ class TracedCarrier:
                 "(jax.value_and_grad semantics); got "
                 f"{len(outvars)} outputs"
             )
+        in_specs = None
+        if mesh is not None:
+            in_specs = _flat_arg_specs(args, in_shardings)
         return cls(
             fn=fn,
             argnums=argnums,
@@ -120,7 +178,10 @@ class TracedCarrier:
                 for v in closed.jaxpr.invars
             ),
             arg_slices=tuple(slices),
-            jg=from_jaxpr(closed, cost_model=cost_model),
+            jg=from_jaxpr(closed, cost_model=cost_model, mesh=mesh,
+                          in_shardings=in_specs),
+            mesh=mesh,
+            in_specs=in_specs,
         )
 
     def to_graph(self) -> Graph:
@@ -138,6 +199,23 @@ class TracedCarrier:
                 f"({tree} != {self.in_tree})"
             )
         return flat
+
+    def constrain(self, flat: Sequence[Any]) -> List[Any]:
+        """Pin flat args to the caller's shardings (identity when untraced
+        without a concrete Mesh — a plain axis-size dict carries no devices,
+        so it informs the *accounting* but cannot constrain execution)."""
+        from jax.sharding import Mesh, NamedSharding
+
+        if self.mesh is None or self.in_specs is None or not isinstance(
+            self.mesh, Mesh
+        ):
+            return list(flat)
+        return [
+            jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, sp)
+            )
+            for x, sp in zip(flat, self.in_specs)
+        ]
 
 
 def abstract_signature(args: Sequence[Any]) -> Tuple:

@@ -59,6 +59,8 @@ class PlannedFunction:
         loss_fn: Optional[Callable[..., Any]],
         planner: Optional[Any],
         track_live: bool,
+        mesh: Any = None,
+        in_shardings: Any = None,
     ):
         self.fn = fn
         self.budget = budget
@@ -70,6 +72,8 @@ class PlannedFunction:
         self.loss_fn = loss_fn
         self.planner = planner
         self.track_live = track_live
+        self.mesh = mesh
+        self.in_shardings = in_shardings
         self._memo: Dict[Tuple, LoweredPlan] = {}
 
     # ------------------------------------------------------------------ plan
@@ -96,12 +100,29 @@ class PlannedFunction:
                 else x,
                 t,
             )
+            if self.backend == "jaxpr":
+                # equation granularity for BlockGraphs: trace ``bg.apply``
+                # whole (plus the loss) and plan it like any JAX function —
+                # finer than blocks where XLA fusion allows
+                bg, lf = fn, self.loss_fn
+
+                def bg_loss(params, inputs):
+                    out = bg.apply(params, inputs)
+                    return lf(*out) if isinstance(out, tuple) else lf(out)
+
+                return TracedCarrier.trace(
+                    bg_loss, (abstract(args[0]), abstract(args[1])),
+                    argnums=0, cost_model=self.cost_model,
+                    mesh=self.mesh, in_shardings=self.in_shardings,
+                )
             return BlockGraphCarrier(
                 bg=fn, loss_fn=self.loss_fn, params=abstract(args[0]),
                 inputs=abstract(args[1]), cost_model=self.cost_model,
+                mesh=self.mesh,
             )
         return TracedCarrier.trace(
-            fn, args, argnums=self.argnums, cost_model=self.cost_model
+            fn, args, argnums=self.argnums, cost_model=self.cost_model,
+            mesh=self.mesh, in_shardings=self.in_shardings,
         )
 
     def lowered_for(self, *args) -> LoweredPlan:
@@ -150,6 +171,8 @@ def plan_function(
     loss_fn: Optional[Callable[..., Any]] = None,
     planner: Optional[Any] = None,
     track_live: bool = False,
+    mesh: Any = None,
+    in_shardings: Any = None,
 ) -> PlannedFunction:
     """Plan ``fn``'s recomputation under ``budget`` bytes; return its
     value_and_grad twin.
@@ -159,10 +182,24 @@ def plan_function(
     fn:
         Any scalar-output JAX callable — traced on first call via
         ``core.jaxpr_graph`` — or a ``core.blockgraph.BlockGraph`` (then
-        ``loss_fn`` is required and calls take ``(params, inputs)``).
+        ``loss_fn`` is required and calls take ``(params, inputs)``;
+        ``backend="jaxpr"`` traces ``bg.apply`` whole and plans at
+        equation granularity).
     budget:
-        Memory budget in bytes for eq. (2)'s peak.  ``None`` reproduces the
-        paper's §5.1 protocol: the exact minimal feasible budget.
+        Memory budget in bytes for eq. (2)'s peak — **per-device activation
+        bytes** when ``mesh`` is given (the paper's B is one accelerator's
+        memory).  ``None`` reproduces the paper's §5.1 protocol: the exact
+        minimal feasible budget.
+    mesh / in_shardings:
+        Sharding-aware planning: ``mesh`` is a ``jax.sharding.Mesh`` (or a
+        plain ``{axis: size}`` dict when only the accounting is needed);
+        ``in_shardings`` aligns with the positional args — each entry is
+        None, one PartitionSpec/NamedSharding for every leaf of that arg,
+        or a matching pytree of specs.  Shardings are propagated through
+        the trace (conservative replicated fallback), node ``M_v`` becomes
+        per-device bytes (distinct shardings therefore hash to distinct
+        plan-cache digests), and the lowered twin re-applies the caller's
+        shardings so it stays pjit-composable.
     backend:
         ``"auto"`` (the carrier's production path: ``"jaxpr"`` for traced
         functions, ``"policy"`` for BlockGraphs), or any registered
@@ -187,6 +224,7 @@ def plan_function(
         fn=fn, budget=budget, backend=backend, method=method,
         objective=objective, cost_model=cost_model, argnums=argnums,
         loss_fn=loss_fn, planner=planner, track_live=track_live,
+        mesh=mesh, in_shardings=in_shardings,
     )
 
 

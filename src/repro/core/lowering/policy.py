@@ -50,19 +50,25 @@ def plan_policy(plan: ExecutionPlan, names: Sequence[str]):
 
 
 def apply_with_policy(bg, params: Dict[str, Any], inputs: Dict[str, Any],
-                      plan: ExecutionPlan) -> Any:
+                      plan: ExecutionPlan, mesh=None) -> Any:
     """Run a BlockGraph forward with the plan lowered to a checkpoint policy.
 
     Differentiating this function recomputes exactly the non-cached nodes —
-    the canonical strategy as a single first-class jit citizen.
+    the canonical strategy as a single first-class jit citizen.  With
+    ``mesh``, annotated block outputs keep their shardings (see
+    ``segment.constrain_block_output``).
     """
+    from .segment import constrain_block_output
+
     names = [b.name for b in bg.blocks]
     policy = plan_policy(plan, names)
 
     def fwd(p: Dict[str, Any], x: Dict[str, Any]):
         values: Dict[str, Any] = dict(x)
         for b in bg.blocks:
-            out = b.apply(p[b.name], *[values[i] for i in b.inputs])
+            out = constrain_block_output(
+                b.apply(p[b.name], *[values[i] for i in b.inputs]), b, mesh
+            )
             values[b.name] = checkpoint_name(out, b.name)
         outs = tuple(values[o] for o in bg.outputs)
         return outs[0] if len(outs) == 1 else outs
@@ -117,7 +123,11 @@ def traced_value_and_grad(carrier: TracedCarrier, plan: ExecutionPlan):
     """``jax.value_and_grad`` twin of the traced fn under the plan.
 
     The result composes with ``jax.jit``/``pjit`` like any JAX function;
-    gradients are w.r.t. ``carrier.argnums``.
+    gradients are w.r.t. ``carrier.argnums``.  A sharding-aware carrier
+    (traced with ``mesh=``) pins its arguments to the caller's shardings
+    (``with_sharding_constraint``) before evaluation — the planned twin
+    partitions exactly like the vanilla pjit'd function, and the constraint
+    transposes to itself so gradients come back in the input layout.
     """
     names = carrier.node_names()
     policy = plan_policy(plan, names)
@@ -128,7 +138,7 @@ def traced_value_and_grad(carrier: TracedCarrier, plan: ExecutionPlan):
     )
 
     def scalar_fn(*args):
-        return ckpt_flat(*carrier.flatten_args(args))
+        return ckpt_flat(*carrier.constrain(carrier.flatten_args(args)))
 
     return jax.value_and_grad(scalar_fn, argnums=carrier.argnums)
 
@@ -150,8 +160,8 @@ class PolicyLowering(Lowering):
         if track_live:
             reject_track_live(self.name)
         return blockgraph_value_and_grad(
-            lambda p, x, _bg=carrier.bg, _plan=plan:
-                apply_with_policy(_bg, p, x, _plan),
+            lambda p, x, _bg=carrier.bg, _plan=plan, _m=carrier.mesh:
+                apply_with_policy(_bg, p, x, _plan, mesh=_m),
             carrier.loss_fn,
         )
 

@@ -25,14 +25,38 @@ from .base import (
 from .carriers import BlockGraphCarrier
 
 
+def constrain_block_output(out, block, mesh):
+    """Pin an annotated block output to its sharding (no-op without a
+    concrete Mesh — abstract ``{axis: size}`` meshes only drive accounting)."""
+    from jax.sharding import Mesh, NamedSharding
+
+    if mesh is None or block.out_sharding is None or not isinstance(mesh, Mesh):
+        return out
+    from ..blockgraph import block_spec
+    from repro.parallel.sharding import axis_sizes_of
+
+    sizes = axis_sizes_of(mesh)
+
+    def pin(x):
+        if not hasattr(x, "shape"):
+            return x
+        spec = block_spec(block, tuple(x.shape), sizes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(pin, out)
+
+
 def apply_segmented(bg, params: Dict[str, Any], inputs: Dict[str, Any],
-                    plan: ExecutionPlan, checkpoint_policy=None) -> Any:
+                    plan: ExecutionPlan, checkpoint_policy=None,
+                    mesh=None) -> Any:
     """Execute a BlockGraph under the plan: per-segment ``jax.checkpoint``.
 
     Each segment V_i runs inside ``jax.checkpoint``: its residuals are its
     *inputs* — exactly the cached boundary values ∂(L_{i-1}) ∪ earlier
     caches it consumes — and its interior is recomputed during backward,
-    which is precisely §3's canonical strategy.
+    which is precisely §3's canonical strategy.  With ``mesh``, blocks
+    annotated with ``out_sharding`` keep the caller's shardings on both the
+    cached boundaries and the recomputed interiors (pjit-composability).
     """
     name_of = {i: b.name for i, b in enumerate(bg.blocks)}
     values: Dict[str, Any] = dict(inputs)
@@ -56,8 +80,11 @@ def apply_segmented(bg, params: Dict[str, Any], inputs: Dict[str, Any],
         def seg_fn(seg_params, *ext_vals, _blocks=seg_blocks, _ext=tuple(ext_names), _out=tuple(out_names)):
             local: Dict[str, Any] = dict(zip(_ext, ext_vals))
             for b in _blocks:
-                local[b.name] = b.apply(
-                    seg_params[b.name], *[local[i] for i in b.inputs]
+                local[b.name] = constrain_block_output(
+                    b.apply(
+                        seg_params[b.name], *[local[i] for i in b.inputs]
+                    ),
+                    b, mesh,
                 )
             return tuple(local[o] for o in _out)
 
@@ -130,8 +157,8 @@ class SegmentLowering(Lowering):
         if track_live:
             reject_track_live(self.name)
         return blockgraph_value_and_grad(
-            lambda p, x, _bg=carrier.bg, _plan=plan:
-                apply_segmented(_bg, p, x, _plan),
+            lambda p, x, _bg=carrier.bg, _plan=plan, _m=carrier.mesh:
+                apply_segmented(_bg, p, x, _plan, mesh=_m),
             carrier.loss_fn,
         )
 

@@ -16,6 +16,12 @@ Per cell this script:
      parsed from the post-SPMD HLO into a JSON blob for
      benchmarks/roofline.py and EXPERIMENTS.md §Dry-run.
 
+Budget math: the per-device activation budget and chain-node byte sizes in
+each record come from the shared sharding-aware accounting
+(``launch.plan.plan_inputs`` → ``repro.parallel.sharding``) under the same
+rules table the step compiled with — the dry-run carries no byte arithmetic
+of its own.
+
 Usage:
   python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k --mesh single
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
@@ -186,6 +192,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             rec["plan_feasible"] = bool(plan_res.feasible)
             rec["plan_overhead_T"] = plan_res.overhead if plan_res.feasible else None
             rec["plan_peak_M"] = plan_res.peak_memory if plan_res.feasible else None
+            # per-device budget bookkeeping, straight from the shared
+            # sharding-aware accounting (launch.plan.plan_inputs →
+            # repro.parallel.sharding) — no separate byte math here
+            from repro.launch.plan import plan_inputs
+            from repro.launch.steps import _dp_shards, _model_shards, _seq_shards
+            from repro.parallel.sharding import get_rules
+
+            pi = plan_inputs(
+                cfg, shape, _dp_shards(mesh), _seq_shards(mesh, shape),
+                _model_shards(mesh), n_micro=sp.n_micro, rules=get_rules(),
+            )
+            rec["budget_per_device"] = pi.budget
+            rec["bytes_interior_per_device"] = pi.bytes_interior
+            rec["bytes_boundary_per_device"] = pi.bytes_boundary
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*example)
         t_lower = time.perf_counter() - t0
         compiled = lowered.compile()

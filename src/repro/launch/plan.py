@@ -12,15 +12,25 @@ the lower-set lattice is exactly the set of prefixes, so the DP solution is
 the true optimum (DESIGN.md §3).  Each unit is modelled as two nodes:
 
   interior  (M_v = unit's interior activation bytes, T_v = unit FLOPs)
-  boundary  (M_v = bytes of the unit output h = (B_loc, S_loc, d),  T_v ≈ 0)
+  boundary  (M_v = bytes of the unit output h,        T_v ≈ 0)
 
 so eq. (2)'s ``2M(V_i)`` sees the real working set while the cached
 boundary ∂(L_i) costs only the h tensor — the same accounting XLA applies to
 the per-segment ``jax.checkpoint`` this plan lowers to (models.transformer
 ``segment_sizes``).
 
+**Byte accounting is sharding-derived, not hand-rolled**: every chain-node
+size comes from the shared per-device accounting in
+``repro.parallel.sharding`` — each unit tensor is named by its logical axes
+(:func:`unit_activation_inventory`), resolved to a PartitionSpec under the
+active rules table, and ceil-divided into its per-device shard
+(``resolve_spec`` + ``local_bytes``).  The same rules table drives the
+model's GSPMD layout, so the bytes the DP budgets and the bytes the
+compiled step materializes cannot drift apart.
+
 Budget: per-device HBM minus params+optimizer+workspace, i.e. the activation
-budget the paper's B represents (§3 "budget semantics on TPU").
+budget the paper's B represents (§3 "budget semantics on TPU" — B is the
+memory of ONE accelerator).
 """
 
 from __future__ import annotations
@@ -28,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import Graph
@@ -37,6 +47,13 @@ from repro.core.graph import Node
 from repro.core.planner import get_default_planner
 from repro.launch.mesh import HBM_BYTES
 from repro.models.transformer import unit_pattern
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    Rules,
+    local_bytes,
+    local_shape,
+    resolve_spec,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,37 +61,96 @@ class PlanInputs:
     n_units: int
     bytes_boundary: float  # unit output h, per device
     bytes_interior: float  # unit interior activations, per device
-    flops_unit: float
-    budget: float
+    flops_unit: float  # per-shard forward FLOPs of one unit
+    budget: float  # per-device activation budget (the paper's B)
 
 
-def activation_expansion(cfg: ModelConfig, model_shards: int = 1) -> float:
-    """Interior-activation bytes of one unit, in units of the h tensor.
+def _chain_rules(rules: Optional[Rules]) -> Rules:
+    """The rules table for chain accounting, plus the derived ``seq_chain``
+    entry: the residual stream between units is sharded over whatever the
+    sequence-parallel axes are — ``seq_sp`` (data, long-context) first,
+    then ``seq_act`` (Megatron SP over the model axis)."""
+    r = dict(DEFAULT_RULES if rules is None else rules)
 
-    Tensors whose live axis is TP-sharded (ffn hidden, q/k/v heads, expert
-    rows) are divided by ``model_shards`` — the planner budgets *per-device*
-    bytes, matching the sharded step it lowers to.
+    def axes(name) -> Tuple:
+        t = r.get(name)
+        if t is None:
+            return ()
+        return t if isinstance(t, tuple) else (t,)
+
+    r["seq_chain"] = (axes("seq_sp") + axes("seq_act")) or None
+    return r
+
+
+def unit_activation_inventory(
+    cfg: ModelConfig, b: int, s: int, tokens_local: Optional[int] = None
+) -> List[Tuple[str, int, Tuple[int, ...], Tuple[Optional[str], ...]]]:
+    """Live activation tensors of one unit: (name, count, shape, logical).
+
+    Shapes are *global* per-microbatch; the logical axis names are resolved
+    against the sharding rules table to produce per-device bytes — the
+    single source of truth replacing the old hand-rolled
+    ``activation_expansion`` table.  Sequence dims are GSPMD-padded
+    (``pad_dims`` below); head/expert counts keep the strict divisibility
+    guard (indivisible → replicated, like ``drop_indivisible``).
     """
     d = cfg.d_model
-    replicated = 6.0  # ln outs, attn/ssm out, residual adds (batch-sharded only)
-    sharded = 0.0
-    if cfg.d_ff > 0:
-        sharded += 3.0 * cfg.d_ff / d  # gate/up/act
-    heads_dim = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim / d  # q,k,v
-    if cfg.n_kv_heads % model_shards == 0 and cfg.n_heads % model_shards == 0:
-        sharded += heads_dim
-    else:
-        replicated += heads_dim  # divisibility guard replicates these
-    if cfg.moe is not None:
-        e_term = cfg.moe.capacity_factor * cfg.moe.top_k * 3.0 * cfg.moe.d_ff_expert / d
-        if cfg.moe.num_experts % model_shards == 0:
-            sharded += e_term
-        else:
-            replicated += e_term
-    if cfg.ssm is not None:
-        sharded += 2.0 * cfg.ssm.expand  # z / x branches (ffn-sharded)
     kinds, _ = unit_pattern(cfg)
-    return (replicated + sharded / max(model_shards, 1)) * len(kinds)
+    nk = len(kinds)
+    inv: List[Tuple[str, int, Tuple[int, ...], Tuple[Optional[str], ...]]] = []
+    # gathered full-sequence attention tensors (k/v/context) — replicated
+    # over the model axis for the unit's attention working set
+    inv.append(("attn_gather", 2, (b, s, d), ("batch", "seq_sp", None)))
+    # residual stream per sub-layer: 2 ln outs, mixer out, mlp out, 2 adds
+    inv.append(("residual", 6 * nk, (b, s, d), ("batch", "seq_chain", None)))
+    inv.append(
+        ("q", nk, (b, s, cfg.n_heads, cfg.head_dim),
+         ("batch", "seq_sp", "heads", None))
+    )
+    inv.append(
+        ("kv", 2 * nk, (b, s, cfg.n_kv_heads, cfg.head_dim),
+         ("batch", "seq_sp", "kv_heads", None))
+    )
+    if cfg.d_ff > 0:
+        inv.append(
+            ("ffn", 3 * nk, (b, s, cfg.d_ff), ("batch", "seq_sp", "ffn"))
+        )
+    if cfg.moe is not None:
+        ntok = tokens_local if tokens_local is not None else b * s
+        cap = max(
+            1,
+            -(-int(cfg.moe.capacity_factor * cfg.moe.top_k * ntok)
+              // cfg.moe.num_experts),
+        )
+        inv.append(
+            ("moe_capacity", 3 * nk,
+             (cfg.moe.num_experts, cap, cfg.moe.d_ff_expert),
+             ("experts", "expert_cap", None))
+        )
+    if cfg.ssm is not None:
+        inv.append(
+            ("ssm_branches", 2 * nk, (b, s, int(cfg.ssm.expand * d)),
+             ("batch", "seq_sp", "ffn"))
+        )
+    return inv
+
+
+def _per_device_bytes(
+    shape: Tuple[int, ...],
+    logical: Tuple[Optional[str], ...],
+    axis_sizes: Dict[str, int],
+    rules: Rules,
+    act_bytes: int,
+) -> int:
+    """One tensor through the shared accounting: logical → spec → shard
+    bytes.  Sequence dims are GSPMD-padded (ceil shards); head/expert
+    count dims keep the strict divisibility guard (→ replicated)."""
+    pad = tuple(
+        i for i, nm in enumerate(logical) if nm and nm.startswith("seq")
+    )
+    spec = resolve_spec(logical, axis_sizes, shape=shape, rules=rules,
+                        pad_dims=pad)
+    return local_bytes(shape, spec, axis_sizes, act_bytes)
 
 
 def unit_flops(cfg: ModelConfig, tokens: int) -> float:
@@ -124,19 +200,45 @@ def plan_inputs(
     n_micro: int = 1,
     hbm_bytes: float = HBM_BYTES,
     act_bytes: int = 2,  # bf16
+    rules: Optional[Rules] = None,
 ) -> PlanInputs:
+    """Chain-graph inputs with every byte size derived from the shared
+    sharding-aware accounting (``repro.parallel.sharding``).
+
+    ``dp_shards``/``seq_shards`` both occupy the mesh "data" axis (which of
+    the two actually shards is decided by the rules table + divisibility:
+    batch takes it when it divides, otherwise ``seq_sp`` does — exactly the
+    launchers' layout logic).  ``rules=None`` uses ``DEFAULT_RULES`` so
+    direct calls are deterministic; the launchers pass their active table.
+    """
     _, n_units = unit_pattern(cfg)
-    b_loc = max(1, shape.global_batch // max(dp_shards, 1) // max(n_micro, 1))
-    s_loc = shape.seq_len // max(seq_shards, 1)
-    h_full = b_loc * s_loc * cfg.d_model * act_bytes
-    # boundary caches are sequence-parallel (models shard(h, batch, seq_act))
-    h_boundary = h_full / max(model_shards, 1)
-    # interior: ~2h of gathered full-sequence tensors (attention k/v/ctx) plus
-    # the rest either feature-sharded (activation_expansion already divides
-    # those by tp) or sequence-shardable under SP — halve the replicated part
-    # as the conservative middle ground between the two GSPMD layouts.
-    interior = h_full * (2.0 + activation_expansion(cfg, model_shards) / 2.0)
-    flops = unit_flops(cfg, b_loc * s_loc)
+    r = _chain_rules(rules)
+    axis_sizes = {
+        "pod": 1,
+        "data": max(dp_shards, 1) * max(seq_shards, 1),
+        "model": max(model_shards, 1),
+    }
+    b_g = max(1, shape.global_batch // max(n_micro, 1))
+    s = shape.seq_len
+    d = cfg.d_model
+
+    # local token count (drives FLOPs and MoE capacity rows)
+    tok_spec = resolve_spec(("batch", "seq_sp"), axis_sizes, shape=(b_g, s),
+                            rules=r, pad_dims=(1,))
+    tl = local_shape((b_g, s), tok_spec, axis_sizes)
+    tokens_local = tl[0] * tl[1]
+
+    interior = sum(
+        count * _per_device_bytes(shp, logical, axis_sizes, r, act_bytes)
+        for _, count, shp, logical in unit_activation_inventory(
+            cfg, b_g, s, tokens_local=tokens_local
+        )
+    )
+    h_boundary = _per_device_bytes(
+        (b_g, s, d), ("batch", "seq_chain", None), axis_sizes, r, act_bytes
+    )
+    # per-shard forward FLOPs (TP splits every unit matmul model_shards ways)
+    flops = unit_flops(cfg, tokens_local) / max(model_shards, 1)
     fsdp = dp_shards if needs_fsdp(cfg, model_shards, hbm_bytes) else 1
     static = static_bytes(cfg, model_shards, fsdp)
     if n_micro > 1:
@@ -240,6 +342,7 @@ def plan_unit_segments(
     budget: Optional[float] = None,
     objective: str = "time_centric",
     measured_costs: Optional[bool] = None,
+    rules: Optional[Rules] = None,
 ) -> Tuple[SegmentPlan, DPResult]:
     """One-call front door used by the launchers and the dry-run.
 
@@ -247,7 +350,8 @@ def plan_unit_segments(
     dry-run matrix, microbatch escalation retries, and job restarts hit the
     plan cache instead of re-running the exact DP.
     """
-    pi = plan_inputs(cfg, shape, dp_shards, seq_shards, model_shards, n_micro)
+    pi = plan_inputs(cfg, shape, dp_shards, seq_shards, model_shards, n_micro,
+                     rules=rules)
     g = _dp_chain_graph(pi, measured_costs)
     B = budget if budget is not None else pi.budget
     res = get_default_planner().solve(g, B, "exact_dp", objective)
@@ -259,6 +363,13 @@ def plan_unit_segments(
     return SegmentPlan(sizes, remat, n_micro), res
 
 
+#: modeled per-extra-microbatch fixed cost, as a fraction of the whole
+#: step's forward time (weight re-gathers under FSDP, scan constants,
+#: pipeline fill) — escalating one more factor must buy at least this much
+#: recompute overhead back
+MICRO_STEP_TAX = 0.05
+
+
 def plan_with_microbatching(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -267,31 +378,44 @@ def plan_with_microbatching(
     model_shards: int = 16,
     objective: str = "time_centric",
     max_micro: int = 16,
+    rules: Optional[Rules] = None,
 ) -> Tuple[SegmentPlan, DPResult]:
-    """§5.1 protocol, production edition: find the smallest gradient-
-    accumulation factor for which the general recomputation problem has a
-    solution, then take the DP-optimal canonical strategy at that factor.
+    """Pick ``(n_micro, plan)`` jointly by modeled step time.
 
-    Each escalation step is a frontier lookup: the planner's budget sweep
-    for the candidate chain graph yields the *exact* minimal feasible
-    budget, so infeasible factors are rejected by one comparison instead of
-    a full budgeted DP — and the final ``plan_unit_segments`` solve reuses
-    the same cached sweep.
+    Beyond §5.1's "smallest feasible factor": each candidate factor's
+    (budget → overhead) Pareto staircase comes from a cached budget sweep
+    capped at that factor's per-device budget (``Planner.solve_grid`` — one
+    DP pass, reused verbatim by the final ``plan_unit_segments`` solve), so
+    the modeled step time
+
+        t(k) ≈ fwd_total · (3 + overhead_k(B_k)/T(V_k) + (k-1) · tax)
+
+    trades recompute overhead (read off the staircase at the factor's
+    budget) against the fixed per-microbatch cost ``MICRO_STEP_TAX``.  The
+    best feasible factor wins; ties break toward fewer microbatches.
+    Infeasible-everywhere falls back to the largest factor (old behavior).
     """
     b_loc = max(1, shape.global_batch // max(dp_shards, 1))
     planner = get_default_planner()
+    best: Optional[Tuple[float, int]] = None  # (modeled time, n_micro)
     n_micro = 1
     while n_micro <= min(max_micro, b_loc):
         pi = plan_inputs(cfg, shape, dp_shards, seq_shards, model_shards,
-                         n_micro)
+                         n_micro, rules=rules)
         g = _dp_chain_graph(pi)
-        if planner.min_feasible_budget(g, "exact_dp") <= pi.budget:
-            return plan_unit_segments(
-                cfg, shape, dp_shards, seq_shards, model_shards, n_micro,
-                objective=objective,
-            )
+        res = planner.solve_grid(g, [pi.budget], "exact_dp", objective)[0]
+        if res.feasible:
+            oh_frac = res.overhead / g.total_time
+            t_model = 3.0 + oh_frac + (n_micro - 1) * MICRO_STEP_TAX
+            if best is None or t_model < best[0]:
+                best = (t_model, n_micro)
+            # sound early exit: a larger factor k' ≥ 2k pays ≥ k·tax extra
+            # and can save at most this factor's whole overhead
+            if oh_frac <= n_micro * MICRO_STEP_TAX:
+                break
         n_micro *= 2
+    chosen = best[1] if best is not None else min(max_micro, b_loc)
     return plan_unit_segments(
-        cfg, shape, dp_shards, seq_shards, model_shards,
-        min(max_micro, b_loc), objective=objective,
+        cfg, shape, dp_shards, seq_shards, model_shards, chosen,
+        objective=objective, rules=rules,
     )

@@ -71,14 +71,18 @@ def segment_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     Returns (SegmentPlan, DPResult)."""
     if cfg.remat_method == "none":
         return None, None
+    from repro.parallel.sharding import get_rules
+
     obj = objective or cfg.remat_objective
     ms = model_shards_override or _model_shards(mesh)
     dp = _dp_shards(mesh)
     if model_shards_override == 1:  # dp_only: "model" joins the batch axes
         dp *= _model_shards(mesh)
+    # the active rules table prices the chain bytes: whatever layout the
+    # hillclimb knob selected is exactly what the DP budgets against
     return plan_with_microbatching(
         cfg, shape, dp, _seq_shards(mesh, shape),
-        model_shards=ms, objective=obj,
+        model_shards=ms, objective=obj, rules=get_rules(),
     )
 
 

@@ -102,26 +102,37 @@ def _mesh_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
         return ()
 
 
-def resolve(
+def resolve_spec(
     logical: Sequence[Optional[str]],
-    mesh: Optional[Mesh] = None,
+    axis_sizes: Dict[str, int],
     shape: Optional[Sequence[int]] = None,
+    rules: Optional[Rules] = None,
+    pad_dims: Sequence[int] = (),
 ) -> P:
-    """Logical names → PartitionSpec under the active rules + mesh axes.
+    """Logical names → PartitionSpec under ``rules`` and abstract axis sizes.
+
+    The mesh-free core of :func:`resolve`, shared with the planners'
+    byte accounting (``launch.plan`` budgets per-device bytes through this
+    exact function, so the sharding the model compiles to and the sharding
+    the DP budgets against cannot drift apart).
 
     With ``shape``, divisibility is checked inline so an axis rejected on one
     dim (e.g. "model" on 40 experts) stays available for a later dim (e.g.
     the expert-capacity fallback) instead of being consumed and dropped.
+    Dims listed in ``pad_dims`` skip the divisibility check — GSPMD pads
+    those (sequence dims at odd lengths), and ``local_shape``'s ceil
+    division accounts the padded shard.
     """
-    axes = set(_mesh_axes(mesh))
-    sizes = _axis_sizes(mesh if mesh is not None else get_abstract_mesh())
+    rules = _ACTIVE_RULES if rules is None else rules
+    axes = set(axis_sizes)
+    pad = set(pad_dims)
     used: set = set()
     spec = []
     for i, name in enumerate(logical):
         if name is None:
             spec.append(None)
             continue
-        target = _ACTIVE_RULES.get(name)
+        target = rules.get(name)
         if target is None:
             spec.append(None)
             continue
@@ -133,14 +144,28 @@ def resolve(
         for a in target:
             if a not in axes or a in used:
                 continue
-            if dim is not None and dim % (prod * sizes.get(a, 1)) != 0:
+            if (dim is not None and i not in pad
+                    and dim % (prod * axis_sizes.get(a, 1)) != 0):
                 continue  # this axis would not divide — leave it available
             eff.append(a)
-            prod *= sizes.get(a, 1)
+            prod *= axis_sizes.get(a, 1)
         used.update(eff)
         eff = tuple(eff)
         spec.append(eff if len(eff) > 1 else (eff[0] if eff else None))
     return P(*spec)
+
+
+def resolve(
+    logical: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Logical names → PartitionSpec under the active rules + mesh axes."""
+    src = mesh if mesh is not None else get_abstract_mesh()
+    sizes = _axis_sizes(src)
+    for a in _mesh_axes(mesh):
+        sizes.setdefault(a, 1)
+    return resolve_spec(logical, sizes, shape=shape)
 
 
 def _axis_sizes(mesh) -> Dict[str, int]:
@@ -288,6 +313,241 @@ def fsdp_extend(spec: P, shape: Tuple[int, ...], axis_sizes: Dict[str, int],
         return spec
     entries[best] = fsdp_axis
     return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Per-device byte accounting (the paper's budget B is ONE accelerator's
+# memory, §3): everything that budgets bytes — the traced carriers
+# (core.jaxpr_graph), BlockGraph annotations, and the launchers' chain
+# graphs (launch.plan) — prices tensors through these helpers, so there is
+# exactly one definition of "per-device bytes" in the system.
+# ---------------------------------------------------------------------------
+
+
+def axis_sizes_of(mesh) -> Dict[str, int]:
+    """Axis-name → size for a Mesh/AbstractMesh, or a dict passed through.
+
+    Accepting a plain ``{"data": 8, "model": 2}`` dict lets the byte
+    accounting (and with it the whole planning pipeline) run without any
+    real devices — only the lowerings need a concrete ``Mesh``.
+    """
+    if mesh is None:
+        return {}
+    if isinstance(mesh, dict):
+        return {str(k): int(v) for k, v in mesh.items()}
+    return _axis_sizes(mesh)
+
+
+def _entry_shards(entry, axis_sizes: Dict[str, int]) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    k = 1
+    for a in axes:
+        k *= max(1, int(axis_sizes.get(a, 1)))
+    return k
+
+
+def local_shape(
+    shape: Sequence[int], spec, axis_sizes: Dict[str, int]
+) -> Tuple[int, ...]:
+    """Per-device shard shape of a global ``shape`` under ``spec``.
+
+    GSPMD semantics: each sharded dim is ceil-divided by the product of its
+    mesh axis sizes (padding counts — padded shards still occupy HBM).
+    """
+    entries = tuple(spec) if spec is not None else ()
+    entries = entries + (None,) * (len(shape) - len(entries))
+    return tuple(
+        -(-int(d) // _entry_shards(e, axis_sizes))
+        for d, e in zip(shape, entries)
+    )
+
+
+def num_shards(shape: Sequence[int], spec, axis_sizes: Dict[str, int]) -> int:
+    """Effective #devices a tensor is split across: global/local elems."""
+    loc = local_shape(shape, spec, axis_sizes)
+    g = l = 1
+    for d, ld in zip(shape, loc):
+        g *= max(1, int(d))
+        l *= max(1, int(ld))
+    return max(1, g // max(1, l))
+
+
+def local_bytes(
+    shape: Sequence[int], spec, axis_sizes: Dict[str, int], itemsize: int
+) -> int:
+    """Per-device bytes of one tensor (ceil-divided shard × itemsize)."""
+    n = 1
+    for d in local_shape(shape, spec, axis_sizes):
+        n *= max(1, int(d))
+    return n * int(itemsize)
+
+
+def normalize_spec(sharding) -> P:
+    """NamedSharding | PartitionSpec | None → a plain PartitionSpec."""
+    if sharding is None:
+        return P()
+    if isinstance(sharding, NamedSharding):
+        return sharding.spec
+    if isinstance(sharding, P):
+        return sharding
+    raise TypeError(
+        f"expected PartitionSpec/NamedSharding/None, got {type(sharding).__name__}"
+    )
+
+
+def sharded_aval_bytes(aval, spec, axis_sizes: Dict[str, int]) -> int:
+    """Per-device byte size of one aval under ``spec`` (replicated: global)."""
+    import numpy as _np
+
+    if not hasattr(aval, "shape") or not hasattr(aval, "dtype"):
+        return 1
+    return local_bytes(
+        aval.shape, spec, axis_sizes, _np.dtype(aval.dtype).itemsize
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conservative sharding propagation over a jaxpr.
+#
+# The traced carrier needs a per-equation output sharding to emit per-device
+# M_v.  Full GSPMD propagation lives inside XLA; here we follow the specs
+# through the primitives whose propagation is unambiguous (elementwise /
+# same-shape, transpose, broadcast, reductions, dot_general) and fall back
+# to **replicated** everywhere else.  Replicated is the conservative
+# direction for a memory planner: per-device bytes are over-, never
+# under-estimated, so a plan that fits the modeled budget fits the machine.
+# ---------------------------------------------------------------------------
+
+_REDUCE_PRIMS = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "reduce_and", "reduce_or", "argmax", "argmin",
+})
+
+
+def _spec_entries(spec: Optional[P], ndim: int) -> Tuple:
+    entries = tuple(spec) if spec is not None else ()
+    return entries + (None,) * (ndim - len(entries))
+
+
+def propagate_eqn_specs(
+    closed_jaxpr, in_specs: Sequence[P], axis_sizes: Dict[str, int]
+):
+    """Per-equation output PartitionSpecs for a ClosedJaxpr.
+
+    ``in_specs`` aligns with ``jaxpr.invars``.  Returns a list (one entry
+    per equation) of tuples of PartitionSpecs aligned with the equation's
+    outvars.  Unknown primitives propagate replicated (see module note).
+    """
+    from jax.extend import core as _jcore
+
+    jaxpr = closed_jaxpr.jaxpr
+    env: Dict[Any, P] = {}
+    for v in jaxpr.constvars:
+        env[v] = P()
+    for v, s in zip(jaxpr.invars, in_specs):
+        env[v] = normalize_spec(s)
+
+    def spec_of(var) -> P:
+        # Literals (e.g. the divisor of jnp.mean) are unhashable on older
+        # JAX and always replicated — never probe the env with one
+        if isinstance(var, _jcore.Literal):
+            return P()
+        return env.get(var, P())
+
+    out: list = []
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        specs = None
+        try:
+            if name == "dot_general":
+                specs = (_dot_general_spec(eqn, spec_of),)
+            elif name == "transpose":
+                perm = eqn.params["permutation"]
+                ent = _spec_entries(spec_of(eqn.invars[0]),
+                                    len(eqn.invars[0].aval.shape))
+                specs = (P(*[ent[p] for p in perm]),)
+            elif name == "broadcast_in_dim":
+                specs = (_broadcast_spec(eqn, spec_of),)
+            elif name in _REDUCE_PRIMS:
+                axes = set(eqn.params.get("axes", ()))
+                iv = eqn.invars[0]
+                ent = _spec_entries(spec_of(iv), len(iv.aval.shape))
+                specs = (P(*[e for i, e in enumerate(ent) if i not in axes]),)
+        except Exception:
+            specs = None
+        if specs is None:
+            specs = tuple(_same_shape_spec(ov, eqn, spec_of)
+                          for ov in eqn.outvars)
+        for ov, s in zip(eqn.outvars, specs):
+            if type(ov).__name__ != "DropVar":
+                env[ov] = s
+        out.append(specs)
+    return out
+
+
+def _same_shape_spec(ov, eqn, spec_of) -> P:
+    """Shape-preserving passthrough: adopt the most-sharded operand whose
+    shape equals the output's; replicated otherwise."""
+    shape = getattr(getattr(ov, "aval", None), "shape", None)
+    if shape is None:
+        return P()
+    best, best_k = P(), 1
+    for iv in eqn.invars:
+        if getattr(getattr(iv, "aval", None), "shape", None) != shape:
+            continue
+        s = spec_of(iv)
+        # rank operands by how many ways they split the tensor
+        k = num_shards(shape, s, {a: 2 for a in _spec_axes(s)})
+        if k > best_k:
+            best, best_k = s, k
+    return best
+
+
+def _spec_axes(spec: P):
+    axes = []
+    for e in tuple(spec):
+        if e is None:
+            continue
+        axes.extend(e if isinstance(e, tuple) else (e,))
+    return axes
+
+
+def _dot_general_spec(eqn, spec_of) -> P:
+    """Output spec of dot_general: (batch…, lhs-free…, rhs-free…) dims keep
+    their operand's sharding; contracted dims disappear."""
+    lhs, rhs = eqn.invars[0], eqn.invars[1]
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    l_ent = _spec_entries(spec_of(lhs), len(lhs.aval.shape))
+    r_ent = _spec_entries(spec_of(rhs), len(rhs.aval.shape))
+    out = [l_ent[i] for i in lb]
+    out += [l_ent[i] for i in range(len(l_ent)) if i not in set(lc) | set(lb)]
+    out += [r_ent[i] for i in range(len(r_ent)) if i not in set(rc) | set(rb)]
+    # one mesh axis must not shard two output dims (lhs/rhs may both carry it)
+    seen: set = set()
+    clean = []
+    for e in out:
+        axes = e if isinstance(e, tuple) else ((e,) if e is not None else ())
+        if any(a in seen for a in axes):
+            clean.append(None)
+            continue
+        seen.update(axes)
+        clean.append(e)
+    return P(*clean)
+
+
+def _broadcast_spec(eqn, spec_of) -> P:
+    iv = eqn.invars[0]
+    bdims = eqn.params["broadcast_dimensions"]
+    in_shape = iv.aval.shape
+    ent = _spec_entries(spec_of(iv), len(in_shape))
+    out_shape = eqn.outvars[0].aval.shape
+    out = [None] * len(out_shape)
+    for i, j in enumerate(bdims):
+        if in_shape[i] == out_shape[j]:
+            out[j] = ent[i]
+    return P(*out)
 
 
 def named_sharding_tree(params, mesh: Mesh, fsdp: bool = False,

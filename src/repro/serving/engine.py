@@ -49,6 +49,8 @@ class Engine:
         rng_seed: int = 0,
         frames: Optional[jax.Array] = None,
         plan_cache_dir: Optional[str] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        step_shardings: Any = None,
     ):
         # Serving processes are usually co-located with (or restarted from)
         # training jobs; attaching the same on-disk plan cache means any
@@ -77,12 +79,38 @@ class Engine:
         self.pending: List[Request] = []
         self.next_uid = 0
         self.completed: List[Request] = []
+        self.mesh = mesh
 
-        @jax.jit
+        # Sharded decode: with a mesh + ``step_shardings`` (a 4-tuple of
+        # shardings for (params, tokens, caches, positions)) the jitted step
+        # is pinned to the production layout — the same per-device budget
+        # semantics the training side plans under.
+        kw = {}
+        if mesh is not None and step_shardings is not None:
+            kw["in_shardings"] = step_shardings
+
         def _step(params, tokens, caches, positions):
             return model.decode_step(params, tokens, caches, positions)
 
-        self._step = _step
+        self._step = jax.jit(_step, **kw)
+
+    # ------------------------------------------------------------- planning
+
+    def plan_scoring(self, loss_fn, budget: float, in_shardings: Any = None,
+                     **kw):
+        """A planned value_and_grad over ``(params, batch)`` sharing this
+        engine's mesh and plan cache.
+
+        Serving processes co-located with trainers use this for scoring /
+        distillation / on-policy gradient steps under the serving node's
+        *leftover* per-device memory: the returned twin is
+        ``repro.plan_function(loss_fn, budget, mesh=self.mesh, ...)`` — one
+        pipeline, one store, per-device budget semantics.
+        """
+        from repro.core.lowering import plan_function
+
+        return plan_function(loss_fn, budget, mesh=self.mesh,
+                             in_shardings=in_shardings, **kw)
 
     # ------------------------------------------------------------ admission
 

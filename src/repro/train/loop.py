@@ -25,7 +25,13 @@ Responsibilities (each one individually testable — see tests/test_train_loop.p
   DP remat segmentation as a content-addressed lookup instead of a re-solve.
   Planning itself goes through the unified pipeline (``core.lowering``):
   the launchers hand this loop a loss whose remat segmentation is the
-  ``"segment"`` lowering of a Planner ExecutionPlan on the unit chain.
+  ``"segment"`` lowering of a Planner ExecutionPlan on the unit chain;
+* **sharded planned steps** — ``plan_budget`` routes the loss through
+  ``repro.plan_function(loss_fn, budget, mesh=..., in_shardings=...)``: the
+  Trainer's mesh and input shardings flow into the traced carrier, the DP
+  budgets **per-device** activation bytes, and the planned twin keeps the
+  caller's shardings (pjit-composable).  ``in_shardings`` is then the
+  2-tuple ``(param_shardings, batch_shardings)`` matching the loss args.
 """
 
 from __future__ import annotations
@@ -60,6 +66,15 @@ class TrainConfig:
     # re-meshed job re-plans its remat segmentation from the store instead of
     # re-running the DP.  None keeps the cache in-memory only.
     plan_cache_dir: Optional[str] = None
+    # Per-device activation-byte budget for the DP recomputation plan: when
+    # set, the step's value_and_grad is ``repro.plan_function(loss_fn,
+    # plan_budget, mesh=..., in_shardings=...)`` — the Trainer's mesh and
+    # input shardings flow into the traced carrier, so the plan budgets
+    # per-device bytes of the *sharded* step.  None keeps vanilla
+    # jax.value_and_grad (losses whose remat the launchers already planned
+    # via segment_sizes stay on that path).
+    plan_budget: Optional[float] = None
+    plan_backend: str = "auto"
     optimizer: adamw.AdamWConfig = dataclasses.field(
         default_factory=adamw.AdamWConfig
     )
@@ -78,6 +93,7 @@ class Trainer:
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.mesh = mesh
+        self.in_shardings = in_shardings
         if cfg.plan_cache_dir:
             from repro.core.plan_cache import set_default_cache_dir
 
@@ -104,12 +120,32 @@ class Trainer:
 
     # ------------------------------------------------------------- step fn
 
+    def _value_and_grad(self):
+        """The step's value_and_grad: vanilla, or the planned twin.
+
+        With ``cfg.plan_budget`` the loss goes through the one planning
+        pipeline (``repro.plan_function``): trace → per-device budget →
+        plan cache → checkpoint lowering, sharding-aware via the Trainer's
+        mesh + input shardings.  Re-jitting after ``remesh`` re-plans under
+        the new mesh (different per-device bytes → different digest).
+        """
+        if self.cfg.plan_budget is None:
+            return jax.value_and_grad(self.loss_fn)
+        from repro.core.lowering import plan_function
+
+        return plan_function(
+            self.loss_fn, self.cfg.plan_budget,
+            backend=self.cfg.plan_backend, mesh=self.mesh,
+            in_shardings=self.in_shardings,
+        )
+
     def _build_step(self, donate: bool):
         ocfg = self.cfg.optimizer
         compress = self.cfg.compress_grads
+        value_and_grad = self._value_and_grad()
 
         def step_fn(params, opt_state, err_fb, batch):
-            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+            loss, grads = value_and_grad(params, batch)
             if compress:
                 grads, err_fb = quantize_roundtrip_with_feedback(grads, err_fb)
             new_params, new_opt, metrics = adamw.update(

@@ -169,3 +169,38 @@ def test_changed_structure_retraces():
     l2, g2 = planned(more, x)
     assert _bits((l2, g2), jax.value_and_grad(fn)(more, x))
     assert len(planned._memo) == 2
+
+
+def test_blockgraph_jaxpr_backend_equation_granularity():
+    """Satellite (ISSUE 4): backend="jaxpr" for BlockGraph carriers traces
+    ``bg.apply`` whole and plans at equation granularity — more nodes than
+    blocks, grads bit-identical to vanilla over the same BlockGraph."""
+    from jax import lax as _lax
+
+    from repro.core.blockgraph import Block, BlockGraph
+
+    def mk(name, src):
+        return Block(
+            name=name,
+            apply=lambda p, h: _lax.tanh(_lax.dot_general(h, p["w"], DN)),
+            inputs=(src,),
+            init=lambda rng, shp: {
+                "w": jax.random.normal(rng, (shp[-1], shp[-1])) * 0.3
+            },
+        )
+
+    bg = BlockGraph([mk(f"b{i}", "x" if i == 0 else f"b{i-1}")
+                     for i in range(6)], ["x"], ["b5"])
+    params = bg.init(jax.random.PRNGKey(0), {"x": (4, 16)})
+    inputs = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 16))}
+    loss = lambda out: jnp.sum(out * out)
+
+    pf = repro.plan_function(bg, None, backend="jaxpr", loss_fn=loss,
+                             planner=Planner(cache=PlanCache()))
+    lowered = pf.lowered_for(params, inputs)
+    assert lowered.backend == "jaxpr"
+    assert lowered.carrier.to_graph().n > len(bg.blocks)
+
+    ref = jax.value_and_grad(lambda p: loss(bg.apply(p, inputs)))(params)
+    got = pf(params, inputs)
+    assert _bits(got, ref)

@@ -119,3 +119,42 @@ def test_remesh_rejits(small_model):
     tr.remesh(mesh)
     out = tr.run(iter(data))
     assert out["step"] == 2  # already at total; re-jit path exercised
+
+
+def test_planned_step_matches_vanilla():
+    """cfg.plan_budget routes the step through plan_function: same losses
+    and parameters as the vanilla value_and_grad step, bit for bit, while
+    actually planning under a halved activation budget."""
+    from jax import lax
+
+    from repro.core.jaxpr_graph import trace
+    from repro.core.liveness import vanilla_peak
+
+    dn = (((1,), (0,)), ((), ()))
+
+    def loss_fn(params, batch):
+        h = batch["x"]
+        for w in params:
+            h = lax.tanh(lax.dot_general(h, w, dn))
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [
+        jax.random.normal(jax.random.fold_in(key, i), (16, 16)) * 0.3
+        for i in range(6)
+    ]
+    batch = {"x": np.asarray(jax.random.normal(jax.random.PRNGKey(1), (8, 16)))}
+    budget = vanilla_peak(
+        trace(loss_fn, params, batch).graph, liveness=False
+    ) / 2
+
+    def run(tc):
+        tr = Trainer(loss_fn, params, tc)
+        out = tr.run(iter([batch] * 4))
+        return out, tr.params
+
+    out_vanilla, p_vanilla = run(_tc(total_steps=4))
+    out_planned, p_planned = run(_tc(total_steps=4, plan_budget=budget))
+    assert out_vanilla["losses"] == out_planned["losses"]
+    for a, b in zip(p_vanilla, p_planned):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

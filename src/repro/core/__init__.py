@@ -33,6 +33,7 @@ from .cost_model import (
 )
 from .dfs import exhaustive_search
 from .dp import (
+    MEMORY_FUNCTIONAL,
     DPResult,
     Sweep,
     SweepOverflow,
@@ -43,6 +44,7 @@ from .dp import (
     min_feasible_budget_exact,
     overhead,
     peak_memory,
+    peak_memory_live,
     quantize_times,
     solve,
     sweep,
@@ -56,7 +58,7 @@ from .graph import (
     from_cost_lists,
     graph_digest,
 )
-from .liveness import SimResult, simulate, vanilla_peak
+from .liveness import SimResult, simulate, transition_excess, vanilla_peak
 from .lower_sets import all_lower_sets, count_lower_sets, pruned_lower_sets
 from .lowering import (
     Lowering,
@@ -102,6 +104,8 @@ __all__ = [
     "approx_dp",
     "overhead",
     "peak_memory",
+    "peak_memory_live",
+    "MEMORY_FUNCTIONAL",
     "cached_sets",
     "quantize_times",
     "exhaustive_search",
@@ -110,6 +114,7 @@ __all__ = [
     "chen_sqrt_n",
     "SimResult",
     "simulate",
+    "transition_excess",
     "vanilla_peak",
     "ExecutionPlan",
     "Segment",

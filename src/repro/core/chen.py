@@ -21,7 +21,7 @@ from __future__ import annotations
 import math
 from typing import List, Optional, Set, Tuple
 
-from .dp import DPResult, INF, overhead, peak_memory
+from .dp import DPResult, INF, overhead, peak_memory_live
 from .graph import Graph, NodeSet
 
 
@@ -105,9 +105,12 @@ def chen_sqrt_n(
 
     With no budget given, targets k = ⌈√(#C+1)⌉ segments of roughly equal
     T-cost (the √n rule).  With a budget, greedily packs candidates until
-    the eq.-(2) peak of the running segmentation would exceed it (Chen's
+    the analytic peak of the running segmentation would exceed it (Chen's
     Algorithm 3 "Memory Planning with Budget" adapted to the paper's cost
-    model), then verifies feasibility.
+    model), then verifies feasibility.  Peaks and feasibility use the same
+    liveness-tight functional as the DP (``dp.peak_memory_live``), so a
+    Chen segmentation and a DP plan scored at the same budget are
+    comparable like for like.
     """
     cands = candidate_split_points(g)
     full = frozenset(range(g.n))
@@ -119,8 +122,8 @@ def chen_sqrt_n(
         return DPResult(
             sequence=seq,
             overhead=overhead(g, seq),
-            peak_memory=peak_memory(g, seq),
-            feasible=(budget is None or peak_memory(g, seq) <= budget),
+            peak_memory=peak_memory_live(g, seq),
+            feasible=(budget is None or peak_memory_live(g, seq) <= budget),
         )
 
     prefixes = [g.ancestors_of(c) for c in cands]
@@ -144,12 +147,12 @@ def chen_sqrt_n(
         return DPResult(
             sequence=seq,
             overhead=overhead(g, seq),
-            peak_memory=peak_memory(g, seq),
+            peak_memory=peak_memory_live(g, seq),
             feasible=True,
         )
 
     # Budgeted variant: greedy packing — extend current segment until adding
-    # the next candidate would push the eq.-(2) term for the segment over B.
+    # the next candidate would push the analytic peak for the segment over B.
     seq: List[NodeSet] = []
     for L in prefixes + [full]:
         if seq and len(L) <= len(seq[-1]):
@@ -157,13 +160,13 @@ def chen_sqrt_n(
         trial = _dedup(seq + ([full] if L != full else [L]))
         if L != full:
             trial = _dedup(seq + [L, full])
-        if peak_memory(g, trial) <= budget:
+        if peak_memory_live(g, trial) <= budget:
             # keep the coarser segmentation (skip this cut) if still feasible
             continue
         if L != full:
             seq.append(L)
     seq = _dedup(seq + [full])
-    pk = peak_memory(g, seq)
+    pk = peak_memory_live(g, seq)
     return DPResult(
         sequence=seq,
         overhead=overhead(g, seq),

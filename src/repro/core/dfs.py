@@ -9,8 +9,9 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
-from .dp import DPResult, INF, peak_memory
+from .dp import DPResult, INF, peak_memory_live, to_mask
 from .graph import EMPTY, Graph, NodeSet
+from .liveness import transition_excess
 from .lower_sets import all_lower_sets
 
 
@@ -38,9 +39,7 @@ def exhaustive_search(
     info = {}
     for L in fam_sorted:
         b = g.boundary(L)
-        dplus_out = g.delta_plus(L) - L
-        dmd_out = g.delta_minus(g.delta_plus(L)) - L
-        info[L] = (b, g.M(dplus_out) + g.M(dmd_out))
+        info[L] = (b, to_mask(L), to_mask(b))
 
     def better(t: float) -> bool:
         return t < best_t if objective == "time_centric" else t > best_t
@@ -53,12 +52,15 @@ def exhaustive_search(
                 best_t = t
                 best_seq = list(seq)
             return
+        mask_L = to_mask(L)
         for Lp in fam_sorted:
             if len(Lp) <= len(L) or not (L < Lp):
                 continue
-            b, m_after = info[Lp]
+            b, mask_Lp, bd_mask = info[Lp]
             Vp = Lp - L
-            Mi = m + 2.0 * g.M(Vp) + m_after  # eq. (2) with M(U_{i-1}) = m
+            # 𝓜⁽ⁱ⁾ with M(U_{i-1}) = m, same functional (and same memoized
+            # floats) as the DP it oracles
+            Mi = m + transition_excess(g, mask_L, mask_Lp, bd_mask)
             if Mi > budget:
                 continue
             t2 = t + g.T(Vp - b)
@@ -74,7 +76,7 @@ def exhaustive_search(
     return DPResult(
         sequence=best_seq,
         overhead=best_t,
-        peak_memory=peak_memory(g, best_seq),
+        peak_memory=peak_memory_live(g, best_seq),
         feasible=True,
         states_visited=states,
     )

@@ -19,9 +19,9 @@ Entry points:
 * ``exact_dp(graph, budget, ...)``  — family = 𝓛_G        (§4.2)
 * ``approx_dp(graph, budget, ...)`` — family = 𝓛_G^Pruned (§4.3)
 * ``sweep(graph, family, objective)`` — the **budget-free sweep solver**:
-  one DP pass with the running peak of eq. 2's 𝓜⁽ⁱ⁾ carried as a third
-  frontier coordinate ``(t, m, peak)`` instead of the per-budget filter
-  ``𝓜⁽ⁱ⁾ > B``.  The resulting :class:`Sweep` answers *every* budget:
+  one DP pass with the running peak of the memory functional's 𝓜⁽ⁱ⁾
+  carried as a third frontier coordinate ``(t, m, peak)`` instead of the
+  per-budget filter ``𝓜⁽ⁱ⁾ > B``.  The resulting :class:`Sweep` answers *every* budget:
   ``Sweep.extract(B)`` reproduces ``solve(graph, B, family, objective)``
   bit-identically (same lower-set sequence, same overhead), and the minimal
   peak at the terminal state is the *exact* minimal feasible budget — no
@@ -41,6 +41,25 @@ minimizes ``(m, pos)``).
 The DP requires integer ``T_v`` (the ``t`` axis of the table).  The paper
 uses ``T_v ∈ {1, 10}``; for FLOP-derived costs use
 ``quantize_times(graph, levels)`` first.
+
+**Memory functional.**  The paper's eq. 2 charges every transition its full
+segment footprint ``m + 2·M(V') + M(δ⁺(L')\\L') + M(δ⁻(δ⁺(L'))\\L')``; the
+interpreter's measured live-byte traces consistently undershoot it because
+buffers die at their last use *inside* a segment.  The DP here therefore
+prices transitions with the **liveness-tight** functional
+``𝓜⁽ⁱ⁾ = m + liveness.transition_excess(L, L')`` — the exact per-transition
+decomposition of ``liveness.simulate(..., liveness=True)`` — so
+``peak_memory`` of a result is exactly the last-use-liveness execution
+peak of its schedule, and budgets are honest in both directions: on
+segment-structured graphs (chains, the benchmark CNNs) the tighter charge
+admits more strategies per budget, while on gradient-dense graphs it can
+sit *above* eq. 2, which under-counts gradient buffers held for earlier
+segments (see ``transition_excess``).  Eq. 2 stays
+available for the Appendix C ablation: the strategy evaluator
+:func:`peak_memory` and the ``functional="eq2"`` knob on :func:`solve` /
+:func:`feasible` / :func:`min_feasible_budget_exact` (benchmarks only — the
+sweep and the plan cache speak the liveness functional, versioned by
+:data:`MEMORY_FUNCTIONAL`).
 """
 
 from __future__ import annotations
@@ -49,40 +68,25 @@ import dataclasses
 from bisect import bisect_left, bisect_right
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
-from .graph import EMPTY, Graph, NodeSet
+from .graph import EMPTY, Graph, NodeSet, from_mask, mask_iter, to_mask
+from .liveness import transition_excess
 from .lower_sets import all_lower_sets, pruned_lower_sets
 
+# Version tag of the DP's memory functional, content-addressed into every
+# plan-cache key (core.plan_cache) so plans solved under an older functional
+# (e.g. the pre-liveness eq. 2) invalidate by construction.
+MEMORY_FUNCTIONAL = "live-v1"
 
-# ---------------------------------------------------------------------------
-# Bitmask helpers
-# ---------------------------------------------------------------------------
-
-
-def to_mask(s: NodeSet) -> int:
-    m = 0
-    for v in s:
-        m |= 1 << v
-    return m
+_FUNCTIONALS = ("liveness", "eq2")
 
 
-def from_mask(m: int) -> NodeSet:
-    out = []
-    v = 0
-    while m:
-        if m & 1:
-            out.append(v)
-        m >>= 1
-        v += 1
-    return frozenset(out)
+def _check_functional(functional: str) -> None:
+    if functional not in _FUNCTIONALS:
+        raise ValueError(f"unknown memory functional {functional!r}")
 
 
-def mask_iter(m: int):
-    v = 0
-    while m:
-        if m & 1:
-            yield v
-        m >>= 1
-        v += 1
+# Bitmask helpers live in core.graph (shared with core.liveness);
+# re-exported here for the existing callers.
 
 
 # ---------------------------------------------------------------------------
@@ -97,9 +101,10 @@ class DPResult:
     Attributes:
       sequence: the increasing lower-set sequence {L₁ ≺ … ≺ L_k = V}.
       overhead: T(V \\ U_k) — total recomputation overhead (eq. 1).
-      peak_memory: max_i 𝓜⁽ⁱ⁾ under the paper's model (eq. 2), *without*
-        liveness analysis (the paper applies liveness post-hoc; see
-        core.liveness for that refinement).
+      peak_memory: max_i 𝓜⁽ⁱ⁾ under the planner's liveness-tight
+        functional (:func:`peak_memory_live` — equals the last-use-liveness
+        execution peak of the schedule; ``functional="eq2"`` solves report
+        the paper's eq. 2 instead, see :func:`peak_memory`).
       feasible: False if no sequence satisfies the budget ("Impossible").
       states_visited: DP work counter (for the §5.1 runtime comparison).
     """
@@ -175,15 +180,24 @@ def solve(
     budget: float,
     family: Sequence[NodeSet],
     objective: str = "time_centric",
+    functional: str = "liveness",
 ) -> DPResult:
     """Algorithm 1 (Appendix A) over an arbitrary lower-set family.
 
     objective:
       * "time_centric"   — minimize overhead (line 15: min)   §4.2/§4.3
       * "memory_centric" — maximize overhead (line 15: max)   §4.4
+
+    functional:
+      * "liveness" — 𝓜⁽ⁱ⁾ priced by ``liveness.transition_excess`` (the
+        framework default; see the module docstring);
+      * "eq2"      — the paper's original eq. 2 charge (Appendix C
+        ablation / benchmarks only).
     """
     if objective not in ("time_centric", "memory_centric"):
         raise ValueError(f"unknown objective {objective!r}")
+    _check_functional(functional)
+    live = functional == "liveness"
 
     infos = _prepare(g, family)
     # ascending order of set size (line 3)
@@ -234,17 +248,20 @@ def solve(
                 continue  # L ⊄ L'
             # Pair terms.
             Vp_mask = info_Lp.mask & ~mask_L  # V' = L' \ L
-            M_Vp = info_Lp.M - info_L.M
             # T(V' \ ∂(L')) = T(V') - T(V' ∩ ∂(L'))
             inter = Vp_mask & info_Lp.boundary_mask
             t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
             # M(∂(L') \ L)
             m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
-            m_fixed = 2.0 * M_Vp + info_Lp.m_after
+            m_fixed = (
+                transition_excess(g, mask_L, info_Lp.mask, info_Lp.boundary_mask)
+                if live
+                else 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            )
             row = table[j]
             for t, (m, _parent) in pruned_items:
                 states += 1
-                Mi = m + m_fixed  # eq. (2): M(U_{i-1}) + 2M(V') + (iii) + (iv)
+                Mi = m + m_fixed  # 𝓜⁽ⁱ⁾: M(U_{i-1}) + the transition charge
                 if Mi > budget:
                     continue
                 t2 = t + t_step
@@ -272,7 +289,7 @@ def solve(
     seq_ids.reverse()
     sequence = [from_mask(infos[i].mask) for i, _t in seq_ids if infos[i].mask != 0]
 
-    peak = peak_memory(g, sequence)
+    peak = (peak_memory_live if live else peak_memory)(g, sequence)
     return DPResult(
         sequence=sequence,
         overhead=t_star,
@@ -283,7 +300,8 @@ def solve(
 
 
 def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
-             infos: Optional[List[_LowerSetInfo]] = None) -> bool:
+             infos: Optional[List[_LowerSetInfo]] = None,
+             functional: str = "liveness") -> bool:
     """Fast feasibility oracle for the budget binary search (§5.1).
 
     For feasibility the t axis is irrelevant and smaller cache mass m is
@@ -292,6 +310,8 @@ def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
     """
     import bisect
 
+    _check_functional(functional)
+    live = functional == "liveness"
     infos = infos if infos is not None else _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)
     sizes = [infos[i].size for i in order]
@@ -313,7 +333,12 @@ def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
             info_Lp = infos[j]
             if mask_L & ~info_Lp.mask:
                 continue
-            Mi = m + 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            m_fixed = (
+                transition_excess(g, mask_L, info_Lp.mask, info_Lp.boundary_mask)
+                if live
+                else 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            )
+            Mi = m + m_fixed
             if Mi > budget:
                 continue
             m2 = m + _mask_M(g, info_Lp.boundary_mask & ~mask_L)
@@ -445,12 +470,15 @@ class SweepOverflow(RuntimeError):
     """
 
 
-def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet]) -> float:
+def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
+                              functional: str = "liveness") -> float:
     """Exact minimal feasible budget in one forward pass (no search).
 
-    min over canonical strategies of max_i 𝓜⁽ⁱ⁾ (eq. 2) — replaces the
-    §5.1 binary search and its per-probe feasibility DPs, and unlike the
-    search's tolerance the result is itself exactly feasible.
+    min over canonical strategies of max_i 𝓜⁽ⁱ⁾ (the liveness-tight
+    functional; ``functional="eq2"`` prices by the paper's eq. 2 for the
+    ablation benchmarks) — replaces the §5.1 binary search and its
+    per-probe feasibility DPs, and unlike the search's tolerance the result
+    is itself exactly feasible.
 
     This is the t-less projection of :func:`sweep`: per lower set a Pareto
     frontier over ``(m, peak)`` only.  Every arithmetic expression — the
@@ -460,8 +488,12 @@ def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet]) -> float:
     DP's own float feasibility threshold: ``solve(g, B)`` is feasible at
     ``B = result`` and infeasible one ulp below (a re-associated closed
     form, e.g. ``2·M(L') + m_after − 2·M(L)``, can land an ulp off and
-    return a budget the DP rejects).
+    return a budget the DP rejects; the liveness functional sidesteps this
+    by having all four entry points read the same memoized
+    ``transition_excess`` value per pair).
     """
+    _check_functional(functional)
+    live = functional == "liveness"
     infos = _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)
     sizes = [infos[i].size for i in order]
@@ -495,11 +527,15 @@ def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet]) -> float:
             if mask_L & ~info_Lp.mask:
                 continue  # L ⊄ L'
             m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
-            m_fixed = 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            m_fixed = (
+                transition_excess(g, mask_L, info_Lp.mask, info_Lp.boundary_mask)
+                if live
+                else 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            )
             tm = fr_m[j]
             tp = fr_p[j]
             for m, peak in zip(src_m, src_p):
-                Mi = m + m_fixed  # eq. (2), same floats as solve()
+                Mi = m + m_fixed  # 𝓜⁽ⁱ⁾, same floats as solve()
                 peak2 = Mi if Mi > peak else peak
                 m2 = m + m_step
                 idx = bisect_right(tm, m2) - 1
@@ -614,7 +650,7 @@ class Sweep:
         return DPResult(
             sequence=sequence,
             overhead=t_star,
-            peak_memory=peak_memory(g, sequence),
+            peak_memory=peak_memory_live(g, sequence),
             feasible=True,
             states_visited=self.states_visited,
         )
@@ -749,9 +785,10 @@ def sweep(g: Graph, family: Sequence[NodeSet],
           prior: Optional[Sweep] = None) -> Sweep:
     """One budget-free DP pass carrying ``(t, m, peak)`` frontiers.
 
-    Identical transition structure to :func:`solve`, with eq. 2's 𝓜⁽ⁱ⁾
-    folded into each chain's running ``peak`` instead of compared against a
-    budget.  The source-side Pareto pruning mirrors :func:`_pareto` /
+    Identical transition structure to :func:`solve` (liveness functional —
+    the cached-surface contract is versioned by :data:`MEMORY_FUNCTIONAL`),
+    with 𝓜⁽ⁱ⁾ folded into each chain's running ``peak`` instead of
+    compared against a budget.  The source-side Pareto pruning mirrors :func:`_pareto` /
     :func:`_pareto_mc` with the peak coordinate added, so for every budget
     the set of expanded transitions is a superset of the per-budget DP's —
     and the per-cell ``(m, pos)`` tie-break makes ``extract`` land on the
@@ -890,7 +927,9 @@ def sweep(g: Graph, family: Sequence[NodeSet],
             inter = Vp_mask & info_Lp.boundary_mask
             t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
             m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
-            m_fixed = 2.0 * (info_Lp.M - info_L.M) + info_Lp.m_after
+            m_fixed = transition_excess(
+                g, mask_L, info_Lp.mask, info_Lp.boundary_mask
+            )
             target = cells[j]
             for t, kms, kpeaks in expansions:
                 if kpeaks[0] <= skip_cap and kms[-1] + m_fixed <= skip_cap:
@@ -929,7 +968,7 @@ def sweep(g: Graph, family: Sequence[NodeSet],
                 for k in range(end):
                     m = kms[k]
                     peak = kpeaks[k]
-                    Mi = m + m_fixed  # eq. (2), same floats as solve()
+                    Mi = m + m_fixed  # 𝓜⁽ⁱ⁾, same floats as solve()
                     if Mi > peak:
                         peak = Mi
                     if peak > budget_cap:
@@ -1033,7 +1072,9 @@ def overhead(g: Graph, sequence: Sequence[NodeSet]) -> float:
 
 
 def peak_memory(g: Graph, sequence: Sequence[NodeSet]) -> float:
-    """Eq. (2): max_i 𝓜⁽ⁱ⁾ (no liveness analysis — paper's analytic model)."""
+    """Eq. (2): max_i 𝓜⁽ⁱ⁾ (the paper's original segment-footprint model,
+    kept for the Appendix C ablation — the DP itself prices transitions
+    with :func:`peak_memory_live`)."""
     Us = cached_sets(g, sequence)
     peak = 0.0
     prev: NodeSet = EMPTY
@@ -1045,6 +1086,31 @@ def peak_memory(g: Graph, sequence: Sequence[NodeSet]) -> float:
         Mi = g.M(U_prev) + 2.0 * g.M(Vi) + g.M(dplus_out) + g.M(dmd_out)
         peak = max(peak, Mi)
         prev = L
+    return peak
+
+
+def peak_memory_live(g: Graph, sequence: Sequence[NodeSet]) -> float:
+    """Liveness-tight analytic peak: max_i (M(U_{i-1}) + transition excess).
+
+    The strategy evaluator of the DP's memory functional
+    (``liveness.transition_excess`` per transition, cache mass left-folded
+    exactly as the DP's ``m + m_step``) — for any valid schedule it equals
+    ``liveness.simulate(g, sequence, liveness=True).peak_memory`` (the
+    property test in tests/test_liveness.py pins this), and it is the value
+    every feasible ``DPResult.peak_memory`` reports, so
+    ``result.peak_memory ≤ budget`` holds exactly.
+    """
+    prev_mask = 0
+    m = 0.0
+    peak = 0.0
+    for L in sequence:
+        mask_Lp = to_mask(L)
+        bd_mask = to_mask(g.boundary(L))
+        Mi = m + transition_excess(g, prev_mask, mask_Lp, bd_mask)
+        if Mi > peak:
+            peak = Mi
+        m = m + _mask_M(g, bd_mask & ~prev_mask)
+        prev_mask = mask_Lp
     return peak
 
 

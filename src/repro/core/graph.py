@@ -28,6 +28,37 @@ NodeSet = FrozenSet[int]
 EMPTY: NodeSet = frozenset()
 
 
+# Bitmask form of node sets (big-int; bit v = node v).  Single source of
+# truth for the DP (core.dp) and the liveness analytics (core.liveness).
+
+
+def to_mask(s: Iterable[int]) -> int:
+    m = 0
+    for v in s:
+        m |= 1 << v
+    return m
+
+
+def from_mask(m: int) -> NodeSet:
+    out = []
+    v = 0
+    while m:
+        if m & 1:
+            out.append(v)
+        m >>= 1
+        v += 1
+    return frozenset(out)
+
+
+def mask_iter(m: int):
+    v = 0
+    while m:
+        if m & 1:
+            yield v
+        m >>= 1
+        v += 1
+
+
 @dataclasses.dataclass(frozen=True)
 class Node:
     """A single intermediate value in the network.

@@ -10,6 +10,12 @@ The paper scores strategies three ways:
   are freed only at the canonical strategy's own segment-boundary rules
                                           → ``simulate(..., liveness=False)``
 
+Since PR 5 the liveness-analyzed execution also has an exact *analytic*
+form: :func:`transition_excess` (bottom of this module) decomposes the
+liveness=True simulation per DP transition, and ``core.dp`` prices 𝓜⁽ⁱ⁾
+with it — so the DP's budgets are last-use-liveness execution peaks, not
+eq. 2's looser footprint.
+
 The simulator expands the canonical strategy into a linear event list:
 
   forward  : for each segment i, compute f(v) for v ∈ V_i in topo order;
@@ -37,7 +43,7 @@ import dataclasses
 from collections import defaultdict
 from typing import Dict, List, Sequence, Set, Tuple
 
-from .graph import EMPTY, Graph, NodeSet
+from .graph import EMPTY, Graph, NodeSet, mask_iter
 
 Buffer = Tuple[str, int]  # ("f"|"g", node)
 
@@ -226,6 +232,134 @@ def simulate(
 ) -> SimResult:
     """Simulate the canonical strategy for a lower-set sequence."""
     return simulate_events(g, build_events(g, sequence), liveness)
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-transition form of the liveness=True simulation.
+#
+# The event simulation above decomposes exactly along the strategy's
+# transitions: while segment i's window runs (its forward pass, or its
+# backward recompute + VJP sweep), the buffers alive from *outside* the
+# window are precisely f(U_{i-1}) — every cached value of an earlier segment
+# is still awaiting its own VJP — plus window-entry gradients determined by
+# (L_{i-1}, L_i) alone.  So with last-use liveness,
+#
+#     simulated peak  =  max_i ( M(U_{i-1}) + excess(L_{i-1}, L_i) )
+#
+# where ``excess`` is a pure function of the transition pair — exactly the
+# shape Algorithm 1's transition relation needs (eq. 2's
+# ``𝓜⁽ⁱ⁾ = m + m_fixed`` with a tighter ``m_fixed``).  ``transition_excess``
+# computes it in closed form, without building event lists:
+#
+# Within the backward window of V' = L' \ L (topo order u_1 … u_s, VJP
+# events processed u_s … u_1), nothing dies during the recompute phase, and
+# the first VJP event dominates it, so only the VJP events matter.  Each
+# buffer contributes one interval on the t-axis (t = the index of VJP(u_t)):
+#
+#   f(u_i)            [i, s]   recomputed/cached value, read last by VJP(uᵢ)
+#   g(u_i)            [i, s]   if u_i ∈ ∂(L')   (gradient arrived at entry)
+#                     [i, max succ idx in V']   otherwise (first written by
+#                                               the VJP of its latest succ)
+#                     [i, i]   pred-less node with no succ in V' (self-seed)
+#   g(p), p ∈ L       [1, s]   if p ∈ ∂(L')∩L  (arrived at entry, survives)
+#                     [1, max succ idx in V']   if p ∈ δ⁻(V') ∩ L otherwise
+#                                               (written here, flows onward)
+#
+# The forward window of the same transition holds only a subset of f(V')
+# over the same baseline M(U_{i-1}) and is dominated by the backward
+# window's first VJP event (which holds all of f(V') plus gradients), so the
+# backward window alone decides the transition's peak.
+# ---------------------------------------------------------------------------
+
+
+def _topo_rank(g: Graph) -> List[int]:
+    rank = getattr(g, "_topo_rank", None)
+    if rank is None:
+        rank = [0] * g.n
+        for r, v in enumerate(g.topological_order()):
+            rank[v] = r
+        g._topo_rank = rank
+    return rank
+
+
+def transition_excess(g: Graph, mask_L: int, mask_Lp: int, bd_mask: int) -> float:
+    """Liveness-tight ``m_fixed`` of one DP transition ``L → L'`` (bitmasks).
+
+    The peak live bytes of the transition's execution window *beyond* the
+    carried cache mass ``M(U_{i-1})``, with every buffer freed at its last
+    use (``simulate(..., liveness=True)`` factored per transition — see the
+    derivation above).  ``bd_mask`` must be the bitmask of ``∂(L')``.
+
+    Always ≤ eq. 2's ``2·M(V') + M(δ⁺(L')\\L') + M(δ⁻(δ⁺(L'))\\L')`` on
+    chain-like transitions and usually far below it on multi-node segments;
+    on graphs whose gradients flow across many segments it can exceed
+    eq. 2's (under-counted) charge — eq. 2 ignores gradient buffers held
+    for earlier segments, this functional does not.
+
+    Results are memoized on ``g`` (graphs are immutable), so the DP entry
+    points (``solve`` / ``feasible`` / ``sweep`` /
+    ``min_feasible_budget_exact``) all see the *same float* for a pair —
+    the foundation of their bit-identity contract.
+    """
+    memo = getattr(g, "_live_excess", None)
+    if memo is None:
+        memo = g._live_excess = {}
+    key = (mask_L, mask_Lp)
+    hit = memo.get(key)
+    if hit is not None:
+        return hit
+
+    rank = _topo_rank(g)
+    vp_mask = mask_Lp & ~mask_L
+    nodes = sorted(mask_iter(vp_mask), key=rank.__getitem__)  # u_1 … u_s
+    s = len(nodes)
+    idx: Dict[int, int] = {u: i for i, u in enumerate(nodes, 1)}
+    mem = g.mem_v
+    pred = g.pred
+    succ = g.succ
+
+    # interval [lo, hi] → delta[lo] += M, delta[hi+1] -= M
+    delta = [0.0] * (s + 2)
+    maxq_L: Dict[int, int] = {}  # p ∈ δ⁻(V') ∩ L \ ∂(L') → max succ idx
+    for i, u in enumerate(nodes, 1):
+        mu = mem[u]
+        # f(u): alive from before the VJP sweep until VJP(u) = e_i
+        delta[i] += mu
+        delta[s + 1] -= mu
+        # g(u)
+        if (bd_mask >> u) & 1:
+            hi = s  # gradient arrived from later segments at window entry
+        else:
+            hi = 0
+            for w in succ[u]:
+                j = idx.get(w)  # non-boundary ⇒ every successor is in V'
+                if j is not None and j > hi:
+                    hi = j
+            if hi == 0 and not pred[u]:
+                hi = i  # VJP of a pred-less node writes g(u) itself
+        if hi:
+            delta[i] += mu
+            delta[hi + 1] -= mu
+        # gradients this window writes for earlier segments
+        for p in pred[u]:
+            if (mask_L >> p) & 1 and not ((bd_mask >> p) & 1):
+                maxq_L[p] = i  # i ascends, so the last write wins
+    for p, q in maxq_L.items():
+        delta[1] += mem[p]
+        delta[q + 1] -= mem[p]
+    for p in mask_iter(bd_mask & mask_L):
+        # entry gradients of earlier-segment boundary nodes: live all window
+        delta[1] += mem[p]
+        delta[s + 1] -= mem[p]
+
+    peak = 0.0
+    cur = 0.0
+    for t in range(1, s + 1):
+        cur += delta[t]
+        if cur > peak:
+            peak = cur
+    memo[key] = peak
+    return peak
 
 
 def vanilla_peak(g: Graph, liveness: bool = True) -> float:

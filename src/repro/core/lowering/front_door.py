@@ -186,10 +186,12 @@ def plan_function(
         ``backend="jaxpr"`` traces ``bg.apply`` whole and plans at
         equation granularity).
     budget:
-        Memory budget in bytes for eq. (2)'s peak — **per-device activation
-        bytes** when ``mesh`` is given (the paper's B is one accelerator's
-        memory).  ``None`` reproduces the paper's §5.1 protocol: the exact
-        minimal feasible budget.
+        Memory budget in bytes for the analytic peak (the liveness-tight
+        refinement of eq. 2: a strategy fits iff its last-use-liveness
+        execution peak does) — **per-device activation bytes** when
+        ``mesh`` is given (the paper's B is one accelerator's memory).
+        ``None`` reproduces the paper's §5.1 protocol: the exact minimal
+        feasible budget.
     mesh / in_shardings:
         Sharding-aware planning: ``mesh`` is a ``jax.sharding.Mesh`` (or a
         plain ``{axis: size}`` dict when only the accounting is needed);

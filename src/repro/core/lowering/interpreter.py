@@ -4,7 +4,10 @@ Interprets the canonical strategy step by step — forward caching only the
 boundary values ∂(L_i), backward recomputing each V_i from the caches — so
 tests can assert that a strategy's gradients match vanilla backpropagation,
 and so the per-step live set can be audited against ``core.liveness`` and
-the plan's analytic peak (eq. 2).
+the plan's analytic peak (the liveness-tight functional,
+``dp.peak_memory_live``; the audit counts forward intermediates only, a
+strict subset of the f+g buffers the functional charges, so measured live
+bytes ≤ ``plan.peak_memory`` holds per segment window).
 
 Two granularities, one semantics:
 

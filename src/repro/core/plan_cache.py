@@ -18,7 +18,11 @@ canonical content address so repeated planning is a hash lookup:
   costs + kinds.  Calibrated costs from the measured cost model
   (core.cost_model) flow into the digest automatically, so re-profiling on
   different hardware *invalidates* stale plans by construction — no epoch
-  counters needed.
+  counters needed; sharded planning flows in the same way (per-device
+  ``M_v`` is part of the digest), and the DP's memory-functional version
+  (``dp.MEMORY_FUNCTIONAL``) is hashed into every key, so plans solved
+  under an older functional (e.g. the pre-liveness eq. 2) can never be
+  served.  docs/plan_cache.md spells out the full invalidation matrix.
 * **values in canonical coordinates** — lower-set sequences are stored as
   canonical node positions and mapped back through the querying graph's
   canonical order, so a cached plan transfers between isomorphic labelings
@@ -48,10 +52,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.checkpointing.store import atomic_write_json, read_json
 
-from .dp import DPResult, Sweep, decode_sweep
+from .dp import MEMORY_FUNCTIONAL, DPResult, Sweep, decode_sweep
 from .graph import Graph, NodeSet, canonical_maps, graph_digest
 
-FORMAT_VERSION = 1
+# Bump whenever the stored shape changes; v2 = liveness-tight memory
+# functional (peaks/feasibility of stored plans and sweeps are priced by
+# dp.MEMORY_FUNCTIONAL, which is also hashed into every key, so entries
+# solved under eq. 2 — or any future functional — invalidate by
+# construction, exactly like a cost-model recalibration does through the
+# graph digest).
+FORMAT_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +82,7 @@ class PlanKey:
         payload = "|".join(
             (
                 f"v{FORMAT_VERSION}",
+                MEMORY_FUNCTIONAL,
                 self.graph_digest,
                 repr(float(self.budget)),
                 self.family,
@@ -97,8 +108,8 @@ class SweepKey:
 
     def content_hash(self) -> str:
         payload = "|".join(
-            (f"sweep-v{FORMAT_VERSION}", self.graph_digest, self.family,
-             self.objective)
+            (f"sweep-v{FORMAT_VERSION}", MEMORY_FUNCTIONAL,
+             self.graph_digest, self.family, self.objective)
         )
         return hashlib.sha256(payload.encode()).hexdigest()
 
@@ -313,6 +324,8 @@ class PlanCache:
                     self._mem_put(h, entry)
         if not isinstance(entry, dict) or "value" not in entry:
             return None
+        if entry.get("version") != FORMAT_VERSION:
+            return None  # e.g. a min-budget computed under an old functional
         try:
             return float(entry["value"])
         except (TypeError, ValueError):

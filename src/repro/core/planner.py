@@ -6,7 +6,9 @@ value B for which the solution … exists.  This value was determined using
 binary search."  The budget-sweep engine (``core.dp.sweep``) retires that
 search: ``min_feasible_budget`` reads the *exact* minimal budget off the
 sweep's terminal frontier, and ``plan`` is the one-call front door used by
-the framework.
+the framework.  Budgets are priced by the DP's liveness-tight memory
+functional (``dp.MEMORY_FUNCTIONAL``; see core/dp.py) — a strategy is
+feasible at B iff its last-use-liveness execution peak fits B.
 
 Plan compilation pipeline (beyond-paper): planning is memoized through
 ``core.plan_cache`` behind a canonical graph digest.  For the DP methods
@@ -308,7 +310,7 @@ class Planner:
         return DPResult(
             sequence=seq,
             overhead=t_star,
-            peak_memory=dp_mod.peak_memory(gp, seq),
+            peak_memory=dp_mod.peak_memory_live(gp, seq),
             feasible=True,
             states_visited=sw.states_visited,
         )
@@ -443,7 +445,10 @@ class Planner:
                         return b
         aux_key = None
         if self.cache is not None:
-            aux_key = f"{graph_digest(gp)}|{method}|exact"
+            # MEMORY_FUNCTIONAL in the key: min budgets computed under an
+            # older functional (eq. 2) must invalidate by construction
+            aux_key = (f"{graph_digest(gp)}|{method}|"
+                       f"{dp_mod.MEMORY_FUNCTIONAL}|exact")
             v = self.cache.get_aux("min_budget", aux_key)
             if v is not None:
                 return v
@@ -474,7 +479,7 @@ class Planner:
             res = DPResult(
                 sequence=[full],
                 overhead=0.0,
-                peak_memory=dp_mod.peak_memory(gp, [full]),
+                peak_memory=dp_mod.peak_memory_live(gp, [full]),
                 feasible=True,
             )
         elif method == "chen":

@@ -39,7 +39,7 @@ class ExecutionPlan:
     segments: Tuple[Segment, ...]
     cached: NodeSet  # U_k — everything ever cached
     overhead: float  # eq. (1)
-    peak_memory: float  # eq. (2)
+    peak_memory: float  # liveness-tight analytic peak (dp.peak_memory_live)
 
     @property
     def num_segments(self) -> int:
@@ -54,8 +54,14 @@ class ExecutionPlan:
 
 
 def make_plan(g: Graph, sequence: Sequence[NodeSet]) -> ExecutionPlan:
-    """Lower a validated lower-set sequence into an ExecutionPlan."""
-    from .dp import overhead as _overhead, peak_memory as _peak
+    """Lower a validated lower-set sequence into an ExecutionPlan.
+
+    ``peak_memory`` is the liveness-tight analytic peak — the budget the DP
+    admitted the sequence under, and an exact upper bound on the
+    interpreter's measured live bytes (equals the §2 event simulation with
+    last-use frees).
+    """
+    from .dp import overhead as _overhead, peak_memory_live as _peak
 
     g.check_increasing_sequence(sequence)
     order = g.topological_order()

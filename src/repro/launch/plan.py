@@ -14,10 +14,14 @@ the true optimum (DESIGN.md §3).  Each unit is modelled as two nodes:
   interior  (M_v = unit's interior activation bytes, T_v = unit FLOPs)
   boundary  (M_v = bytes of the unit output h,        T_v ≈ 0)
 
-so eq. (2)'s ``2M(V_i)`` sees the real working set while the cached
+so the DP's memory functional sees the real working set while the cached
 boundary ∂(L_i) costs only the h tensor — the same accounting XLA applies to
 the per-segment ``jax.checkpoint`` this plan lowers to (models.transformer
-``segment_sizes``).
+``segment_sizes``).  Since PR 5 the functional is liveness-tight
+(``dp.peak_memory_live``): within a segment's backward window buffers are
+charged only while they are actually live, so at a fixed per-device budget
+the escalation below can pick coarser segmentations (fewer microbatches /
+less recompute) than eq. (2)'s full-footprint charge admitted.
 
 **Byte accounting is sharding-derived, not hand-rolled**: every chain-node
 size comes from the shared per-device accounting in

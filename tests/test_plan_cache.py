@@ -121,7 +121,7 @@ def test_cached_plan_equals_fresh_solve(rng):
 
 
 def test_cache_transfers_between_isomorphic_labelings(rng):
-    from repro.core.dp import overhead, peak_memory
+    from repro.core.dp import overhead, peak_memory_live
 
     g = random_dag(rng, 6)
     perm = list(range(6))
@@ -137,7 +137,7 @@ def test_cache_transfers_between_isomorphic_labelings(rng):
     assert [frozenset(perm[v] for v in L) for L in r1.sequence] == r2.sequence
     g2.check_increasing_sequence(r2.sequence)
     assert overhead(g2, r2.sequence) == pytest.approx(r1.overhead)
-    assert peak_memory(g2, r2.sequence) <= B + 1e-9
+    assert peak_memory_live(g2, r2.sequence) <= B + 1e-9
 
 
 def test_on_disk_round_trip(tmp_path, rng):
@@ -224,6 +224,45 @@ def test_cost_change_invalidates_cache(rng):
     )
     p.solve(bumped, B, "exact_dp")
     assert c.stats()["hits"] == 0 and c.stats()["misses"] == 2
+
+
+def test_memory_functional_versions_the_cache_keys():
+    """The DP's memory-functional version is hashed into every plan/sweep
+    key, so entries solved under a different functional (e.g. the
+    pre-liveness eq. 2) can never be served — they content-address to
+    different files."""
+    import repro.core.plan_cache as pc
+
+    k = pc.PlanKey("digest", 1.0, "exact_dp", "time_centric")
+    sk = pc.SweepKey("digest", "exact_dp", "time_centric")
+    h, sh = k.content_hash(), sk.content_hash()
+    orig = pc.MEMORY_FUNCTIONAL
+    try:
+        pc.MEMORY_FUNCTIONAL = "eq2-v0"  # what an old build would hash
+        assert k.content_hash() != h
+        assert sk.content_hash() != sh
+    finally:
+        pc.MEMORY_FUNCTIONAL = orig
+
+
+def test_old_format_aux_entry_reads_as_miss(tmp_path):
+    """Aux scalars (min budgets) from an older FORMAT_VERSION are stale by
+    definition (different memory functional) and must read as misses."""
+    import hashlib
+    import json
+    import os
+
+    from repro.core.plan_cache import FORMAT_VERSION, PlanCache
+
+    c = PlanCache(cache_dir=str(tmp_path))
+    h = hashlib.sha256("aux|min_budget|k".encode()).hexdigest()
+    path = os.path.join(str(tmp_path), "plans", h[:2], h + ".json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"version": FORMAT_VERSION - 1, "value": 123.0}, f)
+    assert c.get_aux("min_budget", "k") is None
+    c.put_aux("min_budget", "k", 7.0)
+    assert c.get_aux("min_budget", "k") == 7.0
 
 
 def test_custom_family_bypasses_cache(rng):

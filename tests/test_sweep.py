@@ -2,8 +2,9 @@
 Pareto surface, bit-identical to the per-budget DP it subsumes.
 
 The property-based cross-check here is the oracle that pins the eq. 1 /
-eq. 2 bookkeeping inside the DP transitions: for random DAGs, both
-objectives, and budgets spanning infeasible → ample,
+memory-functional bookkeeping inside the DP transitions (eq. 2's peak is
+replaced by the liveness-tight ``transition_excess`` charge since PR 5):
+for random DAGs, both objectives, and budgets spanning infeasible → ample,
 
   * ``Sweep.solve(B)`` returns exactly ``dp.solve(g, B, family, objective)``
     (same lower-set sequence, same overhead, same feasibility);
@@ -25,7 +26,7 @@ from repro.core.dp import (
     decode_sweep,
     min_feasible_budget_exact,
     overhead,
-    peak_memory,
+    peak_memory_live,
     solve,
     sweep,
 )
@@ -62,10 +63,10 @@ def test_sweep_bit_identical_to_per_budget_solve(seed, n, topo, exact_family):
                 assert got.sequence == ref.sequence  # bit-identical plan
                 assert got.overhead == ref.overhead
                 assert got.peak_memory == ref.peak_memory
-                # eq. 1 / eq. 2 oracles on the returned strategy
+                # eq. 1 / liveness-functional oracles on the strategy
                 assert got.overhead == pytest.approx(overhead(g, got.sequence))
                 assert got.peak_memory == pytest.approx(
-                    peak_memory(g, got.sequence))
+                    peak_memory_live(g, got.sequence))
                 assert got.peak_memory <= B + 1e-9
 
 
@@ -335,6 +336,36 @@ def test_corrupt_sweep_entry_degrades_to_per_budget(tmp_path, rng):
     p2 = Planner(cache=PlanCache(cache_dir=store))
     res = p2.solve(g, mfb * 1.2, "exact_dp")  # no crash, correct plan
     assert res.sequence == ref.sequence
+
+
+def test_min_feasible_budget_is_min_simulated_live_peak(rng):
+    """End-to-end anchor for the liveness functional: the exact §5.1
+    minimum equals the min over ALL canonical strategies of the *simulated*
+    last-use-liveness execution peak (tiny graphs, exhaustive enumeration
+    of increasing sequences)."""
+    from repro.core.liveness import simulate
+
+    for _ in range(8):
+        g = random_dag(rng, rng.randint(2, 4))
+        fam = all_lower_sets(g)
+        steps = [L for L in fam if L]
+        full = frozenset(range(g.n))
+        best = [float("inf")]
+
+        def rec(cur, seq):
+            if cur == full:
+                pk = simulate(g, seq, liveness=True).peak_memory
+                if pk < best[0]:
+                    best[0] = pk
+                return
+            for L in steps:
+                if cur < L:
+                    seq.append(L)
+                    rec(L, seq)
+                    seq.pop()
+
+        rec(frozenset(), [])
+        assert min_feasible_budget_exact(g, fam) == best[0]
 
 
 # ------------------------------------------------------ satellite bugfixes

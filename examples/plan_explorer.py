@@ -41,20 +41,31 @@ def _gb(x: float) -> str:
     return f"{x:.0f} B"
 
 
-def frontier(g, n_points: int = 8):
-    """One sweep: exact min budget + the whole trade-off curve."""
+def frontier(g, n_points: int = 8, budget: float = None):
+    """One sweep: exact min budget + the whole trade-off curve.
+
+    ``budget`` anchors the explored range at a caller-chosen B instead of
+    the minimal feasible one; an infeasible B exits non-zero (code 2) and
+    prints the exact budget that would have worked.
+    """
     planner = get_default_planner()
     fam = planner.family(g, "approx_dp")  # memoized — shared with the solves
     B_min = planner.min_feasible_budget(g, "approx_dp")  # exact, no search
     van = vanilla_peak(g, liveness=True)
     print(f"#V={g.n}  #L^pruned={len(fam)}  vanilla peak={_gb(van)}  "
           f"min_feasible_budget={_gb(B_min)} (exact)")
+    if budget is not None and budget < B_min:
+        print(f"budget {_gb(budget)} is INFEASIBLE: no strategy fits — "
+              f"the exact minimal feasible budget is {_gb(B_min)} "
+              f"({B_min:.0f} bytes); re-run with at least that")
+        raise SystemExit(2)
     chen = chen_sqrt_n(g)
     chen_pk = simulate(g, chen.sequence, liveness=True).peak_memory
     print(f"Chen √n: peak {_gb(chen_pk)}, overhead "
           f"{100*chen.overhead/g.total_time:.0f}% of fwd\n")
 
-    budgets = [B_min * (1.0 + 3.0 * i / max(n_points - 1, 1))
+    B_lo = budget if budget is not None else B_min
+    budgets = [B_lo * (1.0 + 3.0 * i / max(n_points - 1, 1))
                for i in range(n_points)]
     results = planner.solve_grid(g, budgets, "approx_dp")  # one capped sweep
     rows = []
@@ -64,6 +75,11 @@ def frontier(g, n_points: int = 8):
         pk = simulate(g, res.sequence, liveness=True).peak_memory
         oh = 100 * res.overhead / g.total_time
         rows.append((pk, oh, res.num_segments))
+    if not rows:
+        print(f"no feasible plan in the explored range "
+              f"[{_gb(budgets[0])}, {_gb(budgets[-1])}] — the exact minimal "
+              f"feasible budget is {_gb(B_min)}")
+        raise SystemExit(2)
     print(f"{'peak':>12s} {'overhead%':>10s} {'segments':>9s}  frontier")
     max_oh = max(oh for _, oh, _ in rows) or 1
     for pk, oh, k in rows:
@@ -187,6 +203,10 @@ def main():
     ap.add_argument("--backend", default="auto",
                     help="lowering backend for --traced (auto | jaxpr | "
                          "policy | segment | interpreter)")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="anchor the explored budget range at B bytes; an "
+                         "infeasible B exits with code 2 and prints the "
+                         "exact minimal feasible budget")
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk plan cache (re-runs become lookups)")
     args = ap.parse_args()
@@ -213,7 +233,7 @@ def main():
         name = args.network or "unet"
         g = NETWORKS[name]()
         print(f"network {name}:")
-    frontier(g)
+    frontier(g, budget=args.budget)
 
 
 if __name__ == "__main__":

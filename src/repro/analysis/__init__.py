@@ -1,0 +1,70 @@
+"""repro.analysis — static soundness layer over carriers, plans, lowerings.
+
+Three cooperating checkers prove a plan sound *before* lowering (the
+ROADMAP's "honest against the compiler" direction):
+
+* :func:`check_graph` — effect/determinism analysis: classify every traced
+  equation (pure / prng / effectful / opaque / donated), propagate taint,
+  emit ``must_store`` pins the planner consumes as hard constraints
+  (``analysis.effects``);
+* :func:`check_plan` — plan verifier: topological validity, replay
+  soundness, event-simulated peak vs. budget, eq. (1) overhead, per-device
+  ``M_v`` — all re-derived independently of the DP
+  (``analysis.verifier``);
+* :func:`check_lowering` — lowering conformance: the lowered twin's
+  ``checkpoint_name`` save-set equals the plan's ``U_k``
+  (``analysis.conformance``).
+
+The ``plan_lint`` CLI (``python -m repro.analysis``) runs all three over
+benchmark networks and traced functions and emits a JSON report.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from .conformance import check_lowering
+from .effects import (
+    CLASSES,
+    EffectAnalysis,
+    EqnEffect,
+    analyze_effects,
+    classify_eqns,
+    pin_graph,
+)
+from .report import Finding, PlanVerificationError, Report
+from .verifier import check_graph_memory, check_plan
+
+__all__ = [
+    "Finding",
+    "PlanVerificationError",
+    "Report",
+    "CLASSES",
+    "EqnEffect",
+    "EffectAnalysis",
+    "classify_eqns",
+    "analyze_effects",
+    "pin_graph",
+    "check_graph",
+    "check_plan",
+    "check_graph_memory",
+    "check_lowering",
+]
+
+
+def check_graph(target: Any) -> Report:
+    """Effect-analysis report for a traced carrier or ``JaxprGraph``.
+
+    Accepts a ``TracedCarrier``, a ``JaxprGraph``, or a ``ClosedJaxpr``
+    (traced with ``jax.make_jaxpr``); pure graphs come back with an empty
+    report.  Use :func:`analyze_effects` directly when you also need the
+    pins / taint sets.
+    """
+    from ..core.jaxpr_graph import JaxprGraph, from_jaxpr
+
+    jg = target
+    if hasattr(target, "jg"):  # TracedCarrier
+        jg = target.jg
+    elif not isinstance(target, JaxprGraph):
+        jg = from_jaxpr(target)  # ClosedJaxpr
+    return analyze_effects(jg).report

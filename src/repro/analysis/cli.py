@@ -1,0 +1,228 @@
+"""``plan_lint`` — run the static checkers over networks and traced functions.
+
+    python -m repro.analysis --network unet
+    python -m repro.analysis --network unet --budget 2e9
+    python -m repro.analysis --smoke --json lint_report.json
+
+``--network`` lints one of the paper's seven benchmark graphs: plan at the
+given budget (default: the exact minimal feasible one) and run the plan
+verifier.  ``--traced module:factory`` (or the built-in ``quickstart``)
+lints a real JAX function end to end: effect analysis → pinned planning →
+plan verification → lowering conformance.  ``--smoke`` runs every
+benchmark network plus the quickstart traced function — the CI gate.
+
+Exit codes: 0 all clean, 1 lint errors, 2 infeasible budget (the exact
+minimal feasible budget is printed — re-run with at least that).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .report import Report
+
+EXIT_OK, EXIT_LINT, EXIT_INFEASIBLE = 0, 1, 2
+
+
+def _quickstart_factory() -> Tuple[Callable[..., Any], Tuple[Any, ...]]:
+    """The README's quickstart MLP — the traced smoke target."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    dn = (((1,), (0,)), ((), ()))
+
+    def mlp_loss(params: Any, x: Any) -> Any:
+        h = x
+        for w in params:
+            h = lax.tanh(lax.dot_general(h, w, dn))
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [
+        jax.random.normal(jax.random.fold_in(key, i), (16, 16)) * 0.3
+        for i in range(6)
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    return mlp_loss, (params, x)
+
+
+def _resolve_traced(spec: str) -> Tuple[Callable[..., Any], Tuple[Any, ...]]:
+    if spec == "quickstart":
+        return _quickstart_factory()
+    import importlib
+
+    mod_name, _, attr = spec.partition(":")
+    if not attr:
+        raise SystemExit(
+            f"--traced wants 'module:factory' or 'quickstart', got {spec!r}"
+        )
+    return getattr(importlib.import_module(mod_name), attr)()
+
+
+def lint_graph(
+    g: Any,
+    name: str,
+    budget: Optional[float],
+    method: str,
+) -> Tuple[List[Report], bool]:
+    """Plan ``g`` and verify; returns (reports, infeasible)."""
+    from ..core.planner import get_default_planner
+
+    planner = get_default_planner()
+    rep = planner.plan(g, budget, method=method)
+    if rep.plan is None:
+        needed = planner.min_feasible_budget(g, method)
+        r = Report(checker="plan")
+        r.add(
+            "error",
+            "infeasible-budget",
+            f"{name}: no feasible strategy under budget {budget:g}; the "
+            f"exact minimal feasible budget is {needed:g}",
+        )
+        return [r], True
+    from .verifier import check_plan
+
+    return [check_plan(g, rep.plan, budget=budget)], False
+
+
+def lint_traced(
+    fn: Callable[..., Any],
+    args: Sequence[Any],
+    budget: Optional[float],
+    method: str,
+) -> Tuple[List[Report], bool]:
+    """Full three-checker lint of a traced function."""
+    from ..core.lowering.carriers import TracedCarrier
+    from ..core.planner import get_default_planner
+    from .conformance import check_lowering
+    from .verifier import check_plan
+
+    carrier = TracedCarrier.trace(fn, tuple(args), analyze_effects=True)
+    ea = carrier.effects
+    g = carrier.to_graph()
+    planner = get_default_planner()
+    rep = planner.plan(g, budget, method=method)
+    if rep.plan is None:
+        needed = planner.min_feasible_budget(g, method)
+        r = Report(checker="plan")
+        r.add(
+            "error",
+            "infeasible-budget",
+            f"no feasible strategy under budget {budget:g}; the exact "
+            f"minimal feasible budget is {needed:g}",
+        )
+        return [ea.report, r], True
+    return [
+        ea.report,
+        check_plan(g, rep.plan, budget=budget, effects=ea, jg=carrier.jg),
+        check_lowering(carrier, rep.plan),
+    ], False
+
+
+def _run_target(
+    name: str,
+    run: Callable[[], Tuple[List[Report], bool]],
+    results: List[Dict[str, Any]],
+) -> Tuple[bool, bool]:
+    """Execute one lint target; returns (had_errors, infeasible)."""
+    t0 = time.perf_counter()
+    reports, infeasible = run()
+    dt = time.perf_counter() - t0
+    ok = all(r.ok for r in reports)
+    n_warn = sum(len(r.warnings()) for r in reports)
+    print(f"{name:>16s}  {'OK' if ok else 'FAIL'}  "
+          f"({len(reports)} checker(s), {n_warn} warning(s), {dt:.2f}s)")
+    for r in reports:
+        for f in r.findings:
+            if f.severity != "info":
+                where = f" @node {f.node}" if f.node is not None else ""
+                print(f"    {f.severity}: [{r.checker}] {f.code}{where}: "
+                      f"{f.message}")
+    results.append({
+        "target": name,
+        "ok": ok,
+        "seconds": dt,
+        "reports": [r.to_dict() for r in reports],
+    })
+    return (not ok), infeasible
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="plan_lint: static soundness checks over plans",
+    )
+    ap.add_argument("--network", default=None,
+                    help="one benchmark network (benchmarks.networks)")
+    ap.add_argument("--traced", default=None,
+                    help="'quickstart' or 'module:factory' returning "
+                         "(fn, example_args)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="lint every benchmark network plus the quickstart "
+                         "traced function")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="byte budget (default: exact minimal feasible)")
+    ap.add_argument("--method", default="approx_dp",
+                    choices=("approx_dp", "exact_dp"))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the merged findings as a JSON artifact")
+    args = ap.parse_args(argv)
+
+    if not (args.network or args.traced or args.smoke):
+        ap.error("pick one of --network / --traced / --smoke")
+
+    targets: List[Tuple[str, Callable[[], Tuple[List[Report], bool]]]] = []
+    if args.network or args.smoke:
+        try:
+            from benchmarks.networks import NETWORKS
+        except ImportError as e:
+            raise SystemExit(
+                "benchmarks.networks not importable — run from the repo "
+                f"root with PYTHONPATH=src:. ({e})"
+            ) from e
+        names = [args.network] if args.network else sorted(NETWORKS)
+        for name in names:
+            if name not in NETWORKS:
+                raise SystemExit(
+                    f"unknown network {name!r}; pick from {sorted(NETWORKS)}"
+                )
+            targets.append((
+                name,
+                lambda name=name: lint_graph(
+                    NETWORKS[name](), name, args.budget, args.method
+                ),
+            ))
+    if args.traced or args.smoke:
+        spec = args.traced or "quickstart"
+        fn, ex_args = _resolve_traced(spec)
+        targets.append((
+            spec,
+            lambda: lint_traced(fn, ex_args, args.budget, args.method),
+        ))
+
+    results: List[Dict[str, Any]] = []
+    any_errors = False
+    any_infeasible = False
+    for name, run in targets:
+        had_errors, infeasible = _run_target(name, run, results)
+        any_errors |= had_errors
+        any_infeasible |= infeasible
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"ok": not any_errors, "targets": results}, fh,
+                      indent=2)
+        print(f"report written to {args.json}")
+
+    if any_infeasible:
+        return EXIT_INFEASIBLE
+    return EXIT_LINT if any_errors else EXIT_OK
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

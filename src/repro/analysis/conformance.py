@@ -1,0 +1,221 @@
+"""Lowering conformance: does the lowered twin save exactly ``U_k``?
+
+The ``"jaxpr"`` backend lowers a plan by tagging every equation's (inexact)
+outputs with ``checkpoint_name`` and running the forward under one
+``jax.checkpoint`` whose policy is ``save_only_these_names(U_k)``.  This
+checker traces the *lowered* twin's own jaxpr and statically recovers the
+set of residuals it will really save, two independent ways:
+
+* **structurally** — every ``name`` equation in the differentiated trace is
+  a tag; a tag that reappears *inside* the ``remat2`` equation is
+  rematerialized, so a cached tag found there is a hard conformance error
+  (the twin recomputes what the plan claims to save).  The converse is
+  deliberately **not** an error: a tag absent from the remat body is either
+  saved *or* dead for the backward (DCE), and the trace cannot tell those
+  apart;
+* **by policy** — the plan's ``save_only_these_names`` predicate applied to
+  each tag directly must admit exactly the cached storable tags;
+* **by reference** — when a deployed callable is passed in, its remat
+  body's tag set must equal that of a freshly lowered twin of the *same*
+  plan; a stale lowering (built from a different plan) rematerializes a
+  different set and is caught in both directions.
+
+Any drift between planner and lowering — a renamed node, a tag lost
+through a transform, a policy built from a stale plan — shows up here
+statically, before a single FLOP runs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Set, Tuple
+
+import jax
+
+from ..core.schedule import ExecutionPlan
+from .report import Report
+
+
+def _tag_names(jaxpr: Any, out: Set[str]) -> None:
+    """Collect ``checkpoint_name`` tags in ``jaxpr`` (recursively)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "name":
+            out.add(eqn.params["name"])
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else (val,)
+            for v in vals:
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _tag_names(inner, out)
+                elif hasattr(v, "eqns"):
+                    _tag_names(v, out)
+
+
+def _remat_eqns(jaxpr: Any) -> Any:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in ("remat2", "remat") and eqn.params.get(
+            "differentiated"
+        ):
+            yield eqn
+
+
+def _trace_tags(
+    carrier: Any, fn: Callable[..., Any], report: Report
+) -> Optional[Tuple[Set[str], Set[str]]]:
+    """Trace ``fn`` on the carrier's abstract signature.
+
+    Returns ``(all_tags, recomputed_tags)`` — every ``checkpoint_name`` in
+    the differentiated trace, and the subset appearing inside its ``remat``
+    bodies.  Adds an error finding and returns None if the trace fails or
+    contains no remat equation.
+    """
+    flat = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in carrier.flat_avals]
+    args = jax.tree_util.tree_unflatten(carrier.in_tree, flat)
+    try:
+        closed = jax.make_jaxpr(fn)(*args)
+    except Exception as e:  # trace failure is itself a finding
+        report.add(
+            "error",
+            "lowering-untraceable",
+            f"could not trace the lowered twin: {type(e).__name__}: {e}",
+        )
+        return None
+
+    jaxpr = closed.jaxpr
+    all_tags: Set[str] = set()
+    _tag_names(jaxpr, all_tags)
+    remats = list(_remat_eqns(jaxpr))
+    if not remats:
+        report.add(
+            "error",
+            "no-remat",
+            "the differentiated trace contains no remat equation — the plan "
+            "was not lowered through jax.checkpoint at all",
+        )
+        return None
+
+    recomputed: Set[str] = set()
+    for eqn in remats:
+        inner = eqn.params.get("jaxpr")
+        body = getattr(inner, "jaxpr", inner)
+        if body is not None and hasattr(body, "eqns"):
+            _tag_names(body, recomputed)
+    return all_tags, recomputed
+
+
+def check_lowering(
+    carrier: Any,
+    plan: ExecutionPlan,
+    lowered: Optional[Callable[..., Any]] = None,
+) -> Report:
+    """Statically verify the lowered twin's save-set against ``plan``.
+
+    ``carrier`` must be a traced carrier (``TracedCarrier``); for other
+    carriers the check is not applicable and the report says so.
+    ``lowered`` overrides the callable to inspect (default: the ``"jaxpr"``
+    backend's ``traced_value_and_grad(carrier, plan)``) — pass the actual
+    deployed callable to detect drift between it and the plan.
+    """
+    from ..core.lowering.carriers import TracedCarrier
+    from ..core.lowering.policy import plan_policy, traced_value_and_grad
+
+    report = Report(checker="lowering")
+    if not isinstance(carrier, TracedCarrier):
+        report.add(
+            "info",
+            "not-applicable",
+            f"conformance checking needs a traced carrier "
+            f"(got {type(carrier).__name__}); the interpreter backend "
+            "validates itself at runtime instead",
+        )
+        return report
+
+    names = carrier.node_names()
+    user_lowered = lowered is not None
+    if lowered is None:
+        lowered = traced_value_and_grad(carrier, plan)
+
+    traced = _trace_tags(carrier, lowered, report)
+    if traced is None:
+        return report
+    all_tags, recomputed = traced
+
+    # Expected save-set: cached nodes whose outputs the tagger can name.
+    from .effects import _storable
+
+    expected: Set[str] = set()
+    for v in sorted(plan.cached):
+        if _storable(carrier.jg.eqns[v]):
+            expected.add(names[v])
+        else:
+            report.add(
+                "warning",
+                "cached-untaggable",
+                f"{names[v]} is in the plan's cache set but its outputs are "
+                "not inexact-dtype — the policy lowering cannot save it, so "
+                "it will be rematerialized despite the plan",
+                node=v,
+            )
+
+    # The sound structural direction: a cached tag found inside the remat
+    # body is rematerialized by the twin — a direct plan violation.  (A tag
+    # *absent* from the body may be saved or simply dead for the backward;
+    # the reference comparison below disambiguates when it matters.)
+    remade = sorted(expected & recomputed)
+    if remade:
+        report.add(
+            "error",
+            "residual-not-saved",
+            f"plan caches {remade} but the lowered twin rematerializes "
+            "them inside its remat body — planner↔lowering drift",
+        )
+
+    if user_lowered:
+        # Reference comparison: lower the *same* plan freshly and demand the
+        # deployed callable rematerializes exactly the same tag set.  JAX's
+        # DCE is applied identically to both traces, so any difference means
+        # the callable was built from a different plan.
+        ref = _trace_tags(carrier, traced_value_and_grad(carrier, plan), report)
+        if ref is not None:
+            _, ref_recomputed = ref
+            if recomputed != ref_recomputed:
+                report.add(
+                    "error",
+                    "remat-set-mismatch",
+                    "the deployed callable rematerializes "
+                    f"{sorted(recomputed - ref_recomputed)} beyond and omits "
+                    f"{sorted(ref_recomputed - recomputed)} of what this "
+                    "plan's own lowering rematerializes — it was lowered "
+                    "from a different (stale?) plan",
+                )
+
+    # Independent cross-check: apply the plan's policy predicate directly.
+    try:
+        from jax._src.ad_checkpoint import name_p  # noqa: PLC2701
+
+        policy = plan_policy(plan, names)
+        saved_policy = {
+            t for t in all_tags if policy(name_p, name=t)
+        }
+        if saved_policy != (expected & all_tags):
+            report.add(
+                "error",
+                "policy-mismatch",
+                f"save_only_these_names admits {sorted(saved_policy)} but "
+                f"the plan expects {sorted(expected & all_tags)}",
+            )
+    except ImportError:  # pragma: no cover — private JAX surface moved
+        report.add(
+            "info",
+            "policy-check-skipped",
+            "jax._src.ad_checkpoint.name_p unavailable; structural check "
+            "only",
+        )
+
+    if report.ok and not report.findings:
+        report.add(
+            "info",
+            "conformant",
+            f"lowered twin saves exactly the plan's {len(expected)} "
+            "storable cached residuals",
+        )
+    return report

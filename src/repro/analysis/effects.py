@@ -1,0 +1,250 @@
+"""Effect/determinism analysis: which equations are safe to recompute?
+
+The paper's framework assumes every node is pure and replayable.  Real
+traced workloads are not: PRNG draws, side-effecting equations, opaque
+``custom_vjp`` calls and donation-aliased buffers all change meaning when
+re-executed during the backward pass.  This pass classifies every jaxpr
+equation into a small taint lattice
+
+    pure  <  donated  <  prng  <  opaque  <  effectful
+
+by walking the ``core.prims`` tables plus JAX's own effect metadata
+(recursing into higher-order equations — ``scan`` / ``while`` / ``cond`` /
+``pjit`` / ``custom_vjp`` bodies), then propagates taint forward through
+the graph to the first *storable* frontier (outputs the checkpoint-policy
+lowering can actually save, i.e. inexact dtypes) and emits ``must_store``
+pins there.  ``core.dp`` / ``core.planner`` consume the pins as hard
+constraints: pinned nodes are priced store-only and never recomputed, and
+the pin marker enters the graph digest so safe and unsafe plan-cache
+variants can never collide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, FrozenSet, List, Tuple
+
+from ..core.graph import Graph, Node
+from ..core.jaxpr_graph import JaxprGraph
+from ..core.prims import (
+    EFFECT_INNER_JAXPR_KEYS,
+    HIGHER_ORDER_PRIMS,
+    OPAQUE_PRIMS,
+    PRNG_PRIMS,
+)
+from .report import Report
+
+#: Taint lattice, least to greatest.  ``max()`` over a higher-order body
+#: bubbles the worst inner class up to the enclosing equation.
+CLASSES = ("pure", "donated", "prng", "opaque", "effectful")
+_RANK = {c: i for i, c in enumerate(CLASSES)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EqnEffect:
+    """Classification of one (top-level) jaxpr equation."""
+
+    index: int
+    primitive: str
+    klass: str  # one of CLASSES
+    reason: str
+    storable: bool  # every used output has an inexact dtype (taggable)
+
+    @property
+    def pure(self) -> bool:
+        return self.klass == "pure"
+
+
+def _is_drop(v: Any) -> bool:
+    return type(v).__name__ == "DropVar"
+
+
+def _storable(eqn: Any) -> bool:
+    """True iff the checkpoint-policy lowering can save this equation.
+
+    ``save_only_these_names`` keys on ``checkpoint_name`` tags, and the
+    tagger only wraps inexact-dtype outputs — integer / bool / PRNG-key
+    values pass through untagged and therefore cannot be residuals.
+    """
+    import jax.numpy as jnp
+
+    outs = [ov for ov in eqn.outvars if not _is_drop(ov)]
+    if not outs:
+        return False
+    for ov in outs:
+        aval = getattr(ov, "aval", None)
+        dtype = getattr(aval, "dtype", None)
+        if dtype is None or not jnp.issubdtype(dtype, jnp.inexact):
+            return False
+    return True
+
+
+def _inner_jaxprs(eqn: Any) -> Any:
+    for key in EFFECT_INNER_JAXPR_KEYS:
+        sub = eqn.params.get(key)
+        if sub is None:
+            continue
+        subs = sub if isinstance(sub, (list, tuple)) else [sub]
+        for s in subs:
+            if callable(s) and not hasattr(s, "jaxpr") and not hasattr(s, "eqns"):
+                continue  # thunks (e.g. fwd_jaxpr_thunk) — not traced yet
+            inner = s.jaxpr if hasattr(s, "jaxpr") else s
+            if hasattr(inner, "eqns"):
+                yield inner
+
+
+def _classify(eqn: Any) -> Tuple[str, str]:
+    """(class, reason) of one equation, recursing into inner jaxprs."""
+    name = eqn.primitive.name
+    if name in PRNG_PRIMS:
+        return "prng", f"PRNG primitive '{name}'"
+    if name in OPAQUE_PRIMS:
+        return "opaque", (
+            f"'{name}' has a user-defined VJP; replaying its forward is not "
+            "provably consistent with the residuals the custom rule expects"
+        )
+    effects = getattr(eqn, "effects", None)
+    if effects:
+        kinds = ", ".join(sorted(str(e) for e in effects))
+        return "effectful", f"'{name}' carries effects: {kinds}"
+    donated = eqn.params.get("donated_invars")
+    if donated is not None and any(donated):
+        return "donated", (
+            f"'{name}' donates operand buffers; recomputation would re-read "
+            "invalidated storage"
+        )
+    if name in HIGHER_ORDER_PRIMS:
+        worst = ("pure", "")
+        for inner in _inner_jaxprs(eqn):
+            for ieqn in inner.eqns:
+                k, r = _classify(ieqn)
+                if _RANK[k] > _RANK[worst[0]]:
+                    worst = (k, f"'{name}' body: {r}")
+        return worst
+    return "pure", ""
+
+
+def classify_eqns(jaxpr: Any) -> List[EqnEffect]:
+    """Per-equation classification of a (closed or open) jaxpr.
+
+    Index-aligned with ``JaxprGraph`` nodes — one entry per top-level
+    equation.
+    """
+    inner = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+    out = []
+    for idx, eqn in enumerate(inner.eqns):
+        klass, reason = _classify(eqn)
+        out.append(
+            EqnEffect(
+                index=idx,
+                primitive=eqn.primitive.name,
+                klass=klass,
+                reason=reason,
+                storable=_storable(eqn),
+            )
+        )
+    return out
+
+
+@dataclasses.dataclass
+class EffectAnalysis:
+    """Result of the effect pass over one traced graph.
+
+    ``tainted`` holds every non-pure equation index; ``pins`` the
+    ``must_store`` constraints — the storable forward frontier of the taint
+    (a tainted storable equation pins itself; unstorable taint flows to
+    successors until the policy lowering can save something).
+    """
+
+    effects: List[EqnEffect]
+    tainted: FrozenSet[int]
+    pins: FrozenSet[int]
+    report: Report
+
+    @property
+    def pure(self) -> bool:
+        return not self.tainted
+
+
+def analyze_effects(jg: JaxprGraph) -> EffectAnalysis:
+    """Classify ``jg``'s equations and derive ``must_store`` pins."""
+    g = jg.graph
+    effects = classify_eqns(jg.jaxpr)
+    report = Report(checker="effects")
+    tainted = frozenset(e.index for e in effects if not e.pure)
+
+    for e in effects:
+        if e.pure:
+            continue
+        report.add(
+            "warning",
+            f"{e.klass}-taint",
+            f"{g.nodes[e.index].name}: {e.reason}",
+            node=e.index,
+        )
+
+    # Forward taint propagation to the storable frontier.  A storable
+    # tainted node pins itself; an unstorable one (uint32 PRNG bits, key
+    # arrays, bool masks) cannot be a residual, so its taint flows to every
+    # successor until a storable node absorbs it.
+    pins: set = set()
+    seen: set = set()
+    queue = deque(sorted(tainted))
+    while queue:
+        v = queue.popleft()
+        if v in seen:
+            continue
+        seen.add(v)
+        if effects[v].storable:
+            pins.add(v)
+            continue
+        if not g.succ[v]:
+            report.add(
+                "warning",
+                "unstorable-taint-sink",
+                f"{g.nodes[v].name}: tainted, unstorable and without "
+                "successors — nothing downstream can be pinned for it",
+                node=v,
+            )
+            continue
+        for w in g.succ[v]:
+            queue.append(w)
+
+    for v in sorted(pins):
+        report.add(
+            "info",
+            "must-store-pin",
+            f"{g.nodes[v].name} pinned must_store (storable frontier of "
+            "tainted equations)",
+            node=v,
+        )
+    return EffectAnalysis(
+        effects=effects,
+        tainted=tainted,
+        pins=frozenset(pins),
+        report=report,
+    )
+
+
+def pin_graph(g: Graph, pins: FrozenSet[int]) -> Graph:
+    """New graph with ``must_store=True`` on ``pins`` (existing pins kept).
+
+    The pin marker enters WL colors and the canonical digest
+    (``core.graph``), so pinned and unpinned variants of the same topology
+    never share plan-cache entries.
+    """
+    if not pins and not g.store_pins_mask:
+        return g
+    nodes = [
+        Node(
+            nd.idx,
+            nd.name,
+            nd.time,
+            nd.memory,
+            nd.kind,
+            must_store=nd.must_store or (nd.idx in pins),
+        )
+        for nd in g.nodes
+    ]
+    return Graph(nodes, g.edges)

@@ -1,0 +1,255 @@
+"""Static plan verifier: re-derive schedule soundness from first principles.
+
+Given any :class:`~repro.core.schedule.ExecutionPlan`, re-check everything
+the plan claims **without** going through the DP that produced it — a
+verifier bug and a solver bug can't cancel:
+
+* topological validity — each ``L_i`` is a lower set, strictly increasing,
+  terminating at ``V``; segments partition ``V`` as ``L_i \\ L_{i-1}``;
+* cache-set consistency — ``cached`` equals the re-derived
+  ``∪_i (∂(L_i) ∪ (pins ∩ L_i))``, per-segment ``keep`` / ``recompute``
+  agree, and no ``must_store`` pin is ever scheduled for recomputation;
+* replay soundness — every segment's external inputs ``δ⁻(V_i) \\ V_i``
+  are cached *before* the segment replays (members of the effective cache
+  of ``L_{i-1}``);
+* analytic peak — recomputed via the **event-level simulator**
+  (``liveness.simulate``, independent of the DP's closed-form transition
+  pricing) and compared against ``plan.peak_memory`` and the budget;
+* overhead — eq. (1)'s ``T(V \\ U_k)`` re-summed directly;
+* per-device ``M_v`` — when the carrier was traced under a mesh, each
+  node's bytes re-derived from its equation's output avals and propagated
+  shardings.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, FrozenSet, Optional
+
+from ..core.graph import Graph
+from ..core.jaxpr_graph import JaxprGraph
+from ..core.schedule import ExecutionPlan
+from .report import Report
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .effects import EffectAnalysis
+
+_REL_TOL = 1e-9
+
+
+def _close(a: float, b: float) -> bool:
+    return abs(a - b) <= _REL_TOL * max(1.0, abs(a), abs(b))
+
+
+def check_plan(
+    g: Graph,
+    plan: ExecutionPlan,
+    budget: Optional[float] = None,
+    effects: Optional["EffectAnalysis"] = None,
+    jg: Optional[JaxprGraph] = None,
+) -> Report:
+    """Statically verify ``plan`` against ``g`` (see module docstring).
+
+    ``budget``: enforce ``peak ≤ budget`` when given.  ``effects``: the
+    graph's :class:`~repro.analysis.effects.EffectAnalysis` — every
+    *storable* tainted equation and every derived ``must_store`` pin must be
+    in the plan's cache set (unstorable taint — key plumbing, counter bits —
+    replays deterministically once its storable frontier is cached, so it is
+    not flagged).  ``jg``: the traced carrier's jaxpr graph, enabling the
+    per-device ``M_v`` consistency check.
+    """
+    from ..core import liveness
+
+    report = Report(checker="plan")
+    n = g.n
+    full = frozenset(range(n))
+
+    # ---- 1. sequence validity ------------------------------------------
+    seq = [s.lower_set for s in plan.segments]
+    if not seq:
+        report.add("error", "empty-plan", "plan has no segments")
+        return report
+    try:
+        g.check_increasing_sequence(seq)
+    except ValueError as e:
+        report.add("error", "invalid-sequence", str(e))
+        return report
+
+    pins = g.store_pins
+    prev: FrozenSet[int] = frozenset()
+    derived_cached: set = set()
+    for seg in plan.segments:
+        Vi = seg.lower_set - prev
+        if frozenset(seg.nodes) != Vi:
+            report.add(
+                "error",
+                "segment-partition",
+                f"segment {seg.index}: nodes {sorted(seg.nodes)} != "
+                f"L_{seg.index} \\ L_{seg.index - 1} = {sorted(Vi)}",
+            )
+        # ---- 2. per-segment cache decisions ----------------------------
+        b_eff = g.boundary(seg.lower_set) | (pins & seg.lower_set)
+        if seg.boundary != b_eff:
+            report.add(
+                "error",
+                "boundary-mismatch",
+                f"segment {seg.index}: declared boundary "
+                f"{sorted(seg.boundary)} != derived ∂(L)∪pins {sorted(b_eff)}",
+            )
+        if seg.keep != (b_eff & Vi):
+            report.add(
+                "error",
+                "keep-mismatch",
+                f"segment {seg.index}: keep {sorted(seg.keep)} != "
+                f"{sorted(b_eff & Vi)}",
+            )
+        derived_cached |= b_eff
+        prev = seg.lower_set
+
+    U_k = frozenset(derived_cached)
+    if plan.cached != U_k:
+        extra = sorted(plan.cached - U_k)
+        missing = sorted(U_k - plan.cached)
+        report.add(
+            "error",
+            "cache-set-mismatch",
+            f"plan.cached disagrees with the re-derived U_k "
+            f"(extra={extra}, missing={missing}); residuals saved by the "
+            "lowering would not match the schedule's replay assumptions",
+        )
+
+    # recompute sets + pins never recomputed
+    for seg in plan.segments:
+        Vi = frozenset(seg.nodes)
+        want = Vi - U_k
+        if seg.recompute != want:
+            report.add(
+                "error",
+                "recompute-mismatch",
+                f"segment {seg.index}: recompute {sorted(seg.recompute)} != "
+                f"V_i \\ U_k = {sorted(want)}",
+            )
+        hit = sorted(pins & seg.recompute)
+        if hit:
+            report.add(
+                "error",
+                "pinned-node-recomputed",
+                f"segment {seg.index} recomputes must_store node(s) "
+                f"{[g.nodes[v].name for v in hit]}",
+                node=hit[0],
+            )
+
+    # ---- 3. replay soundness -------------------------------------------
+    prev = frozenset()
+    avail: set = set()  # effective cache of L_{i-1}
+    for seg in plan.segments:
+        Vi = frozenset(seg.nodes)
+        ext = g.delta_minus(Vi) - Vi
+        missing = sorted(ext - avail) if seg.index > 0 else sorted(ext)
+        if missing:
+            report.add(
+                "error",
+                "replay-missing-input",
+                f"segment {seg.index} reads {[g.nodes[v].name for v in missing]} "
+                "which are neither recomputed in-segment nor cached by an "
+                "earlier segment",
+                node=missing[0],
+            )
+        avail |= g.boundary(seg.lower_set) | (pins & seg.lower_set)
+        prev = seg.lower_set
+
+    # ---- 4. recomputed taint -------------------------------------------
+    if effects is not None:
+        must_cache = frozenset(
+            v for v in effects.tainted if effects.effects[v].storable
+        ) | effects.pins
+        for v in sorted(must_cache - U_k):
+            report.add(
+                "error",
+                "tainted-recompute",
+                f"{g.nodes[v].name} absorbs non-pure effects "
+                "(effect analysis) but is not in the plan's cache set — "
+                "replaying it in the backward pass is not provably "
+                "bit-identical; re-plan with its must_store pin applied "
+                "(pin_graph)",
+                node=v,
+            )
+
+    # stop before the quantitative checks if the schedule itself is broken —
+    # the simulator requires a structurally valid plan
+    if not report.ok:
+        return report
+
+    # ---- 5. analytic peak (event-level, DP-independent) ----------------
+    sim = liveness.simulate(g, seq, liveness=True)
+    if not _close(sim.peak_memory, plan.peak_memory):
+        report.add(
+            "error",
+            "peak-mismatch",
+            f"declared peak {plan.peak_memory:.6g} != simulated last-use "
+            f"liveness peak {sim.peak_memory:.6g}",
+        )
+    if budget is not None and sim.peak_memory > budget * (1 + _REL_TOL):
+        report.add(
+            "error",
+            "over-budget",
+            f"simulated peak {sim.peak_memory:.6g} exceeds the budget "
+            f"{budget:.6g}",
+        )
+
+    # ---- 6. overhead (eq. 1) -------------------------------------------
+    want_overhead = g.T(full - U_k)
+    if not _close(want_overhead, plan.overhead):
+        report.add(
+            "error",
+            "overhead-mismatch",
+            f"declared overhead {plan.overhead:.6g} != T(V \\ U_k) = "
+            f"{want_overhead:.6g}",
+        )
+
+    # ---- 7. per-device M_v vs the declared mesh ------------------------
+    if jg is not None:
+        report.extend(check_graph_memory(jg).findings)
+
+    return report
+
+
+def check_graph_memory(jg: JaxprGraph) -> Report:
+    """Re-derive every node's ``M_v`` from its equation's output avals.
+
+    For a mesh-traced carrier the bytes must be the ceil-divided shard
+    sizes under the propagated PartitionSpecs; unsharded traces must carry
+    whole-aval bytes.  Catches stale graphs (edited costs, mismatched
+    specs) before a per-device budget is trusted.
+    """
+    from ..core.jaxpr_graph import aval_bytes
+
+    report = Report(checker="graph-memory")
+    g = jg.graph
+    axis_sizes = jg.axis_sizes if jg.eqn_specs is not None else {}
+
+    for idx, eqn in enumerate(jg.eqns):
+        if jg.eqn_specs is not None and axis_sizes:
+            from repro.parallel import sharding as _sh
+
+            specs = jg.eqn_specs[idx]
+            mem = 0
+            for ov, sp in zip(eqn.outvars, specs):
+                if hasattr(ov, "aval"):
+                    mem += _sh.sharded_aval_bytes(ov.aval, sp, axis_sizes)
+        else:
+            mem = sum(
+                aval_bytes(ov.aval)
+                for ov in eqn.outvars
+                if hasattr(ov, "aval")
+            )
+        mem = max(float(mem), 1.0)
+        if mem != g.mem_v[idx]:
+            report.add(
+                "error",
+                "memory-mismatch",
+                f"{g.nodes[idx].name}: graph M_v={g.mem_v[idx]:.6g} but the "
+                f"equation's output avals give {mem:.6g} bytes"
+                + (" per device" if axis_sizes else ""),
+                node=idx,
+            )
+    return report

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import Graph, Node
-from .jaxpr_graph import aval_bytes, eqn_is_heavy, trace
+from .jaxpr_graph import aval_bytes, trace
 from .schedule import ExecutionPlan
 
 
@@ -58,7 +58,8 @@ class Block:
     out_sharding: Optional[Any] = None
 
 
-def block_spec(block: Block, shape: Tuple[int, ...], axis_sizes):
+def block_spec(block: Block, shape: Tuple[int, ...],
+               axis_sizes: Dict[str, int]) -> Any:
     """A Block's ``out_sharding`` annotation → concrete PartitionSpec."""
     from jax.sharding import PartitionSpec
 
@@ -98,7 +99,8 @@ class BlockGraph:
 
     # ------------------------------------------------------------------ init
 
-    def init(self, rng: jax.Array, input_shapes: Dict[str, Tuple[int, ...]]):
+    def init(self, rng: jax.Array,
+             input_shapes: Dict[str, Tuple[int, ...]]) -> Dict[str, Any]:
         """Initialize all block params. input_shapes maps graph inputs to shapes."""
         shapes: Dict[str, Any] = dict(input_shapes)
         params: Dict[str, Any] = {}
@@ -165,13 +167,13 @@ class BlockGraph:
             if axis_sizes is not None and b.out_sharding is not None:
                 mem = float(sum(
                     sharded_aval_bytes(
-                        l, block_spec(b, tuple(l.shape), axis_sizes),
+                        leaf, block_spec(b, tuple(leaf.shape), axis_sizes),
                         axis_sizes,
                     )
-                    for l in leaves
+                    for leaf in leaves
                 ))
             else:
-                mem = float(sum(aval_bytes(l) for l in leaves))
+                mem = float(sum(aval_bytes(leaf) for leaf in leaves))
             if cost_model == "paper":
                 t = 10.0 if b.heavy else 1.0
             elif cost_model == "flops":
@@ -194,7 +196,7 @@ class BlockGraph:
         params: Dict[str, Any],
         inputs: Dict[str, Any],
         plan: ExecutionPlan,
-        checkpoint_policy=None,
+        checkpoint_policy: Any = None,
     ) -> Any:
         """Execute under the canonical strategy: per-segment jax.checkpoint.
 
@@ -222,7 +224,7 @@ def plan_blockgraph(
     method: str = "approx_dp",
     objective: str = "time_centric",
     cost_model: str = "paper",
-):
+) -> Tuple[Any, Callable[..., Any]]:
     """Trace → plan → return (PlanReport, planned_apply).
 
     The plan-only slice of the unified pipeline: carrier (this BlockGraph)
@@ -238,7 +240,7 @@ def plan_blockgraph(
     if report.plan is None:
         raise InfeasibleBudgetError("infeasible budget for this BlockGraph")
 
-    def planned_apply(p, x):
+    def planned_apply(p: Dict[str, Any], x: Dict[str, Any]) -> Any:
         return bg.apply_planned(p, x, report.plan)
 
     return report, planned_apply

@@ -21,7 +21,7 @@ from __future__ import annotations
 import math
 from typing import List, Optional, Set, Tuple
 
-from .dp import DPResult, INF, overhead, peak_memory_live
+from .dp import DPResult, overhead, peak_memory_live
 from .graph import Graph, NodeSet
 
 

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Any, Optional, Sequence
 
 from .dp import quantize_times
 from .graph import Graph, Node
@@ -79,12 +79,12 @@ DEFAULT_PROFILE = OpProfile(
 )
 
 
-def _median(xs):
+def _median(xs: Sequence[float]) -> float:
     xs = sorted(xs)
     return xs[len(xs) // 2]
 
 
-def _time_call(fn, *args, repeats: int = 3) -> float:
+def _time_call(fn: Any, *args: Any, repeats: int = 3) -> float:
     """Median wall time of ``fn(*args)`` with warmup (jit compile excluded)."""
     import jax
 
@@ -169,7 +169,7 @@ def _profile_path(cache_dir: str, backend: str, jax_version: str) -> str:
 
 
 def load_or_profile(
-    cache_dir: Optional[str] = None, profiler=profile_ops
+    cache_dir: Optional[str] = None, profiler: Any = profile_ops
 ) -> OpProfile:
     """Load the backend's profile from ``cache_dir`` or measure and store it.
 
@@ -236,7 +236,8 @@ def node_seconds(nd: Node, profile: OpProfile) -> float:
 def measured_times(g: Graph, profile: OpProfile) -> Graph:
     """New graph with ``T_v`` = calibrated seconds (topology/memory kept)."""
     nodes = [
-        Node(nd.idx, nd.name, node_seconds(nd, profile), nd.memory, nd.kind)
+        Node(nd.idx, nd.name, node_seconds(nd, profile), nd.memory, nd.kind,
+             must_store=nd.must_store)
         for nd in g.nodes
     ]
     return Graph(nodes, g.edges)

@@ -7,7 +7,7 @@ triplet-state ``(L, t, m)`` observation that motivates the DP.
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 from .dp import DPResult, INF, peak_memory_live, to_mask
 from .graph import EMPTY, Graph, NodeSet

@@ -66,7 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 from bisect import bisect_left, bisect_right
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .graph import EMPTY, Graph, NodeSet, from_mask, mask_iter, to_mask
 from .liveness import transition_excess
@@ -80,9 +80,14 @@ MEMORY_FUNCTIONAL = "live-v1"
 _FUNCTIONALS = ("liveness", "eq2")
 
 
-def _check_functional(functional: str) -> None:
+def _check_functional(functional: str, g: Optional[Graph] = None) -> None:
     if functional not in _FUNCTIONALS:
         raise ValueError(f"unknown memory functional {functional!r}")
+    if functional == "eq2" and g is not None and g.store_pins_mask:
+        raise ValueError(
+            "functional='eq2' cannot price must_store pins (the paper's "
+            "eq. 2 predates effect analysis); use the liveness functional"
+        )
 
 
 # Bitmask helpers live in core.graph (shared with core.liveness);
@@ -135,25 +140,29 @@ class _LowerSetInfo:
     T: float  # T(L)
     M: float  # M(L)
     boundary_mask: int  # ∂(L)
+    cache_mask: int  # ∂(L) ∪ (pins ∩ L) — the effective cached set
     T_boundary: float  # T(∂(L))
     m_after: float  # M(δ⁺(L) \ L) + M(δ⁻(δ⁺(L)) \ L)   (terms iii+iv of eq. 2)
 
 
 def _prepare(g: Graph, family: Sequence[NodeSet]) -> List[_LowerSetInfo]:
     infos = []
+    pins = g.store_pins_mask
     for L in family:
         mask = to_mask(L)
         dplus = g.delta_plus(L)
         dplus_out = to_mask(dplus) & ~mask  # δ⁺(L) \ L
         dmd_out = to_mask(g.delta_minus(dplus)) & ~mask  # δ⁻(δ⁺(L)) \ L
         boundary = g.boundary(L)
+        boundary_mask = to_mask(boundary)
         infos.append(
             _LowerSetInfo(
                 mask=mask,
                 size=len(L),
                 T=g.T(L),
                 M=g.M(L),
-                boundary_mask=to_mask(boundary),
+                boundary_mask=boundary_mask,
+                cache_mask=boundary_mask | (pins & mask),
                 T_boundary=g.T(boundary),
                 m_after=sum(g.mem_v[v] for v in mask_iter(dplus_out))
                 + sum(g.mem_v[v] for v in mask_iter(dmd_out)),
@@ -196,7 +205,7 @@ def solve(
     """
     if objective not in ("time_centric", "memory_centric"):
         raise ValueError(f"unknown objective {objective!r}")
-    _check_functional(functional)
+    _check_functional(functional, g)
     live = functional == "liveness"
 
     infos = _prepare(g, family)
@@ -235,7 +244,8 @@ def solve(
         # The dominance direction depends on the objective: TC keeps the
         # (t↓, m↓) frontier; MC keeps the (t↑, m↓) frontier — an entry is
         # dominated by one with ≥ overhead so far AND ≤ cache mass.
-        pruned = _pareto(entries) if objective == "time_centric" else _pareto_mc(entries)
+        pruned = (_pareto(entries) if objective == "time_centric"
+                  else _pareto_mc(entries))
         table[i] = pruned
         pruned_items = list(pruned.items())
         mask_L = info_L.mask
@@ -246,13 +256,13 @@ def solve(
             info_Lp = infos[j]
             if mask_L & ~info_Lp.mask:
                 continue  # L ⊄ L'
-            # Pair terms.
+            # Pair terms (cache_mask = ∂(L') plus must_store pins in L').
             Vp_mask = info_Lp.mask & ~mask_L  # V' = L' \ L
-            # T(V' \ ∂(L')) = T(V') - T(V' ∩ ∂(L'))
-            inter = Vp_mask & info_Lp.boundary_mask
+            # T(V' \ cached) — pinned nodes are stored, never recomputed
+            inter = Vp_mask & info_Lp.cache_mask
             t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
-            # M(∂(L') \ L)
-            m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            # M(cached(L') \ L)
+            m_step = _mask_M(g, info_Lp.cache_mask & ~mask_L)
             m_fixed = (
                 transition_excess(g, mask_L, info_Lp.mask, info_Lp.boundary_mask)
                 if live
@@ -310,7 +320,7 @@ def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
     """
     import bisect
 
-    _check_functional(functional)
+    _check_functional(functional, g)
     live = functional == "liveness"
     infos = infos if infos is not None else _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)
@@ -341,7 +351,7 @@ def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
             Mi = m + m_fixed
             if Mi > budget:
                 continue
-            m2 = m + _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            m2 = m + _mask_M(g, info_Lp.cache_mask & ~mask_L)
             if m2 < best[j]:
                 best[j] = m2
     for i, info in enumerate(infos):
@@ -492,7 +502,7 @@ def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
     by having all four entry points read the same memoized
     ``transition_excess`` value per pair).
     """
-    _check_functional(functional)
+    _check_functional(functional, g)
     live = functional == "liveness"
     infos = _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)
@@ -526,7 +536,7 @@ def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
             info_Lp = infos[j]
             if mask_L & ~info_Lp.mask:
                 continue  # L ⊄ L'
-            m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            m_step = _mask_M(g, info_Lp.cache_mask & ~mask_L)
             m_fixed = (
                 transition_excess(g, mask_L, info_Lp.mask, info_Lp.boundary_mask)
                 if live
@@ -924,9 +934,9 @@ def sweep(g: Graph, family: Sequence[NodeSet],
             if mask_L & ~info_Lp.mask:
                 continue  # L ⊄ L'
             Vp_mask = info_Lp.mask & ~mask_L
-            inter = Vp_mask & info_Lp.boundary_mask
+            inter = Vp_mask & info_Lp.cache_mask
             t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
-            m_step = _mask_M(g, info_Lp.boundary_mask & ~mask_L)
+            m_step = _mask_M(g, info_Lp.cache_mask & ~mask_L)
             m_fixed = transition_excess(
                 g, mask_L, info_Lp.mask, info_Lp.boundary_mask
             )
@@ -1055,11 +1065,17 @@ def approx_dp(g: Graph, budget: float, objective: str = "time_centric") -> DPRes
 
 
 def cached_sets(g: Graph, sequence: Sequence[NodeSet]) -> List[NodeSet]:
-    """U_i = ∪_{j≤i} ∂(L_j) for each prefix."""
+    """U_i = ∪_{j≤i} (∂(L_j) ∪ (pins ∩ L_j)) for each prefix.
+
+    With no ``must_store`` pins this is the paper's U_i exactly; pinned
+    nodes (effect analysis) additionally join the cache at their own
+    segment and are never recomputed.
+    """
+    pins = g.store_pins
     u: set = set()
     out = []
     for L in sequence:
-        u |= g.boundary(L)
+        u |= g.boundary(L) | (pins & L)
         out.append(frozenset(u))
     return out
 
@@ -1075,6 +1091,7 @@ def peak_memory(g: Graph, sequence: Sequence[NodeSet]) -> float:
     """Eq. (2): max_i 𝓜⁽ⁱ⁾ (the paper's original segment-footprint model,
     kept for the Appendix C ablation — the DP itself prices transitions
     with :func:`peak_memory_live`)."""
+    _check_functional("eq2", g)
     Us = cached_sets(g, sequence)
     peak = 0.0
     prev: NodeSet = EMPTY
@@ -1100,16 +1117,19 @@ def peak_memory_live(g: Graph, sequence: Sequence[NodeSet]) -> float:
     every feasible ``DPResult.peak_memory`` reports, so
     ``result.peak_memory ≤ budget`` holds exactly.
     """
+    pins = g.store_pins_mask
     prev_mask = 0
     m = 0.0
     peak = 0.0
     for L in sequence:
         mask_Lp = to_mask(L)
         bd_mask = to_mask(g.boundary(L))
+        # The excess is priced against the *true* boundary (gradient flow is
+        # graph-structural); pins only add cache mass.
         Mi = m + transition_excess(g, prev_mask, mask_Lp, bd_mask)
         if Mi > peak:
             peak = Mi
-        m = m + _mask_M(g, bd_mask & ~prev_mask)
+        m = m + _mask_M(g, (bd_mask | (pins & mask_Lp)) & ~prev_mask)
         prev_mask = mask_Lp
     return peak
 
@@ -1140,6 +1160,7 @@ def quantize_times(g: Graph, levels: int = 64) -> Graph:
             float(max(1, round(levels * nd.time / tmax))),
             nd.memory,
             nd.kind,
+            must_store=nd.must_store,
         )
         for nd in g.nodes
     ]

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
 NodeSet = FrozenSet[int]
 
@@ -50,7 +50,7 @@ def from_mask(m: int) -> NodeSet:
     return frozenset(out)
 
 
-def mask_iter(m: int):
+def mask_iter(m: int) -> Iterable[int]:
     v = 0
     while m:
         if m & 1:
@@ -69,6 +69,10 @@ class Node:
       time: forward computation cost ``T_v`` (paper: 10 for conv, 1 otherwise).
       memory: memory consumption cost ``M_v`` (bytes, or abstract units).
       kind: free-form tag ("conv", "matmul", "elementwise", ...).
+      must_store: hard pin from effect analysis (``repro.analysis``) — the
+        node's value may not be recomputed (PRNG draw, side effect, opaque
+        higher-order equation), so every plan must keep it resident from its
+        forward computation until its last use.
     """
 
     idx: int
@@ -76,6 +80,7 @@ class Node:
     time: float
     memory: float
     kind: str = "generic"
+    must_store: bool = False
 
 
 class Graph:
@@ -93,7 +98,8 @@ class Graph:
                 raise ValueError(f"node {node.name} has idx {node.idx}, expected {i}")
             if node.time <= 0 or node.memory <= 0:
                 raise ValueError(
-                    f"node {node.name}: costs must be positive (T={node.time}, M={node.memory})"
+                    f"node {node.name}: costs must be positive "
+                    f"(T={node.time}, M={node.memory})"
                 )
         self.succ: List[List[int]] = [[] for _ in range(n)]
         self.pred: List[List[int]] = [[] for _ in range(n)]
@@ -114,6 +120,15 @@ class Graph:
         # Cost vectors.
         self.time_v: List[float] = [nd.time for nd in self.nodes]
         self.mem_v: List[float] = [nd.memory for nd in self.nodes]
+        # Hard store pins (effect analysis): bit v set ⇔ nodes[v].must_store.
+        self.store_pins_mask: int = to_mask(
+            v for v, nd in enumerate(self.nodes) if nd.must_store
+        )
+
+    @property
+    def store_pins(self) -> NodeSet:
+        """Nodes pinned ``must_store`` by effect analysis (∅ when unanalyzed)."""
+        return from_mask(self.store_pins_mask)
 
     # ------------------------------------------------------------------ basics
 
@@ -278,7 +293,7 @@ def _qcost(x: float, sig: int) -> str:
     return f"{float(x):.{sig}g}"
 
 
-def _h(*parts) -> bytes:
+def _h(*parts: object) -> bytes:
     m = hashlib.sha256()
     for p in parts:
         if isinstance(p, bytes):
@@ -292,7 +307,8 @@ def _h(*parts) -> bytes:
 def _wl_colors(g: Graph, cost_sig: int) -> List[bytes]:
     """Permutation-invariant per-node colors (bidirectional WL refinement)."""
     colors = [
-        _h("node", _qcost(nd.time, cost_sig), _qcost(nd.memory, cost_sig), nd.kind)
+        _h("node", _qcost(nd.time, cost_sig), _qcost(nd.memory, cost_sig), nd.kind,
+           *(("pin",) if nd.must_store else ()))
         for nd in g.nodes
     ]
     rounds = min(g.n, 16) + 1
@@ -347,7 +363,7 @@ def canonical_order(g: Graph, cost_sig: int = 12) -> List[int]:
         preds = sorted(pos[p] for p in g.pred[v])
         digest.update(
             _h(i, _qcost(nd.time, cost_sig), _qcost(nd.memory, cost_sig),
-               nd.kind, *preds)
+               nd.kind, *preds, *(("pin",) if nd.must_store else ()))
         )
     cache[cost_sig] = (order, digest.hexdigest())
     return order
@@ -375,7 +391,7 @@ def canonical_maps(g: Graph, cost_sig: int = 12) -> Tuple[Dict[int, int], List[i
 # ---------------------------------------------------------------------------
 
 
-def chain(n: int, time: float = 1.0, memory: float = 1.0, **kw) -> Graph:
+def chain(n: int, time: float = 1.0, memory: float = 1.0, **kw: Any) -> Graph:
     """A simple path v₀ → v₁ → … → v_{n-1} (feed-forward net)."""
     nodes = [Node(i, f"v{i}", time, memory, **kw) for i in range(n)]
     return Graph(nodes, [(i, i + 1) for i in range(n - 1)])

@@ -36,7 +36,6 @@ from jax.extend import core as jcore
 
 from .graph import Graph, Node
 from .prims import (  # single source of truth (core.prims)
-    ELEMENTWISE_FREE as _ELEMENTWISE_FREE,
     HEAVY_PRIMS,
     HIGHER_ORDER_PRIMS as _HIGHER_ORDER_PRIMS,
     INNER_JAXPR_KEYS as _INNER_JAXPR_KEYS,
@@ -44,13 +43,19 @@ from .prims import (  # single source of truth (core.prims)
 )
 
 
-def aval_bytes(aval) -> int:
+def aval_bytes(aval: Any) -> int:
     if not hasattr(aval, "shape") or not hasattr(aval, "dtype"):
         return 1
-    return int(np.prod(aval.shape, dtype=np.int64)) * np.dtype(aval.dtype).itemsize
+    try:
+        itemsize = np.dtype(aval.dtype).itemsize
+    except TypeError:
+        # extended dtypes (e.g. PRNG key arrays, dtype "key<fry>") are not
+        # numpy dtypes but still know their own itemsize
+        itemsize = int(getattr(aval.dtype, "itemsize", 8))
+    return int(np.prod(aval.shape, dtype=np.int64)) * itemsize
 
 
-def _dot_flops(eqn) -> float:
+def _dot_flops(eqn: Any) -> float:
     """2·M·N·K for dot_general from operand avals."""
     lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
     dims = eqn.params["dimension_numbers"]
@@ -68,7 +73,7 @@ def _dot_flops(eqn) -> float:
     return float(2 * b * m * n * k)
 
 
-def _conv_flops(eqn) -> float:
+def _conv_flops(eqn: Any) -> float:
     out = eqn.outvars[0].aval
     rhs = eqn.invars[1].aval  # kernel
     # 2 · out_elems · (k_spatial · Cin)
@@ -78,7 +83,7 @@ def _conv_flops(eqn) -> float:
     return float(2 * out_spatial * max(1, k_elems // max(1, cout)))
 
 
-def _inner_jaxpr_flops(eqn) -> float:
+def _inner_jaxpr_flops(eqn: Any) -> float:
     total = 0.0
     for key in _INNER_JAXPR_KEYS:
         sub = eqn.params.get(key)
@@ -95,7 +100,7 @@ def _inner_jaxpr_flops(eqn) -> float:
     return total
 
 
-def eqn_flops_for(eqn) -> float:
+def eqn_flops_for(eqn: Any) -> float:
     name = eqn.primitive.name
     try:
         if name == "dot_general":
@@ -114,7 +119,7 @@ def eqn_flops_for(eqn) -> float:
     return max(1.0, out)
 
 
-def _eqn_io_bytes(eqn) -> float:
+def _eqn_io_bytes(eqn: Any) -> float:
     total = 0.0
     for vs in (eqn.invars, eqn.outvars):
         for v in vs:
@@ -123,7 +128,7 @@ def _eqn_io_bytes(eqn) -> float:
     return total
 
 
-def eqn_bytes_for(eqn) -> float:
+def eqn_bytes_for(eqn: Any) -> float:
     """HBM-traffic estimate per eqn: input+output bytes, with scan/while/call
     bodies recursed and multiplied by trip count (the piece XLA's
     cost_analysis drops — it counts loop bodies once)."""
@@ -144,7 +149,7 @@ def eqn_bytes_for(eqn) -> float:
     return _eqn_io_bytes(eqn)
 
 
-def jaxpr_totals(closed_jaxpr) -> Dict[str, float]:
+def jaxpr_totals(closed_jaxpr: Any) -> Dict[str, float]:
     """Global (pre-partition) FLOPs and byte-traffic totals of a jaxpr,
     scan-aware.  The dry-run divides by the mesh size for per-chip terms."""
     flops = 0.0
@@ -155,7 +160,7 @@ def jaxpr_totals(closed_jaxpr) -> Dict[str, float]:
     return {"flops": flops, "bytes": nbytes}
 
 
-def eqn_is_heavy(eqn) -> bool:
+def eqn_is_heavy(eqn: Any) -> bool:
     name = eqn.primitive.name
     if name in _MATMUL_PRIMS:
         return True
@@ -181,10 +186,13 @@ class JaxprGraph:
     #: per-equation output PartitionSpecs when traced under a mesh (aligned
     #: with ``eqns``; None for an unsharded trace)
     eqn_specs: Optional[List[Tuple]] = None
+    #: mesh axis name → size for a sharded trace ({} otherwise) — lets the
+    #: static verifier (repro.analysis) re-derive per-device bytes
+    axis_sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def from_jaxpr(
-    closed_jaxpr,
+    closed_jaxpr: Any,
     cost_model: str = "paper",
     mesh: Any = None,
     in_shardings: Optional[Sequence[Any]] = None,
@@ -270,13 +278,13 @@ def from_jaxpr(
 
     return JaxprGraph(
         graph=Graph(nodes, edges), eqns=eqns, jaxpr=closed_jaxpr,
-        eqn_specs=eqn_specs,
+        eqn_specs=eqn_specs, axis_sizes=axis_sizes,
     )
 
 
 def trace(
-    fn: Callable,
-    *example_args,
+    fn: Callable[..., Any],
+    *example_args: Any,
     cost_model: str = "paper",
     mesh: Any = None,
     in_shardings: Optional[Sequence[Any]] = None,

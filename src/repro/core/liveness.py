@@ -40,6 +40,7 @@ value).  Parameters and inputs are excluded, as in §2.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from collections import defaultdict
 from typing import Dict, List, Sequence, Set, Tuple
 
@@ -77,11 +78,15 @@ def build_events(g: Graph, sequence: Sequence[NodeSet]) -> List[_Event]:
     prev: NodeSet = EMPTY
     segs: List[NodeSet] = []
     bounds: List[NodeSet] = []
+    pins = g.store_pins
     for L in sequence:
         segs.append(L - prev)
-        bounds.append(g.boundary(L))
+        # effective cached set: the paper's boundary plus any must_store pins
+        # (effect analysis) — pinned values are kept from their forward
+        # computation and never recomputed.
+        bounds.append(g.boundary(L) | (pins & L))
         prev = L
-    # U_i = ∪_{j≤i} ∂(L_j)
+    # U_i = ∪_{j≤i} ∂(L_j)  (plus pins, when present)
     Us: List[NodeSet] = []
     acc: Set[int] = set()
     for b in bounds:
@@ -272,6 +277,14 @@ def simulate(
 # ---------------------------------------------------------------------------
 
 
+# Per-graph transition memo, weakly keyed: entries die with their graph, so
+# long-lived processes (planner services, sweeps over many models) don't
+# accumulate excess tables for graphs nothing else references.
+_EXCESS_MEMO: "weakref.WeakKeyDictionary[Graph, Dict[Tuple[int, int], float]]" = (
+    weakref.WeakKeyDictionary()
+)
+
+
 def _topo_rank(g: Graph) -> List[int]:
     rank = getattr(g, "_topo_rank", None)
     if rank is None:
@@ -296,14 +309,15 @@ def transition_excess(g: Graph, mask_L: int, mask_Lp: int, bd_mask: int) -> floa
     eq. 2's (under-counted) charge — eq. 2 ignores gradient buffers held
     for earlier segments, this functional does not.
 
-    Results are memoized on ``g`` (graphs are immutable), so the DP entry
-    points (``solve`` / ``feasible`` / ``sweep`` /
+    Results are memoized per graph (graphs are immutable) in a weakly-keyed
+    table, so the DP entry points (``solve`` / ``feasible`` / ``sweep`` /
     ``min_feasible_budget_exact``) all see the *same float* for a pair —
-    the foundation of their bit-identity contract.
+    the foundation of their bit-identity contract — while the memo itself
+    never outlives its graph.
     """
-    memo = getattr(g, "_live_excess", None)
+    memo = _EXCESS_MEMO.get(g)
     if memo is None:
-        memo = g._live_excess = {}
+        memo = _EXCESS_MEMO[g] = {}
     key = (mask_L, mask_Lp)
     hit = memo.get(key)
     if hit is not None:

@@ -15,7 +15,7 @@ ideal-enumeration trick.
 
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, Iterator, List, Set
+from typing import List, Set
 
 from .graph import EMPTY, Graph, NodeSet
 

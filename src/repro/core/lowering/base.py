@@ -17,8 +17,7 @@ right one, with ``"auto"`` selecting each carrier's production path.
 from __future__ import annotations
 
 import abc
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List
 
 from ..schedule import ExecutionPlan
 

@@ -131,6 +131,9 @@ class TracedCarrier:
     jg: JaxprGraph
     mesh: Any = None  # jax.sharding.Mesh | {axis: size} dict | None
     in_specs: Optional[Tuple] = None  # flat per-leaf PartitionSpecs
+    #: repro.analysis.effects.EffectAnalysis when traced with
+    #: ``analyze_effects=True`` (None otherwise)
+    effects: Any = None
 
     default_backend = "jaxpr"
 
@@ -143,6 +146,7 @@ class TracedCarrier:
         cost_model: str = "paper",
         mesh: Any = None,
         in_shardings: Optional[Sequence[Any]] = None,
+        analyze_effects: bool = False,
     ) -> "TracedCarrier":
         flat, in_tree = _tree_flatten(tuple(args))
         # flat-leaf span of each positional argument (interpreter backward)
@@ -167,6 +171,25 @@ class TracedCarrier:
         in_specs = None
         if mesh is not None:
             in_specs = _flat_arg_specs(args, in_shardings)
+        jg = from_jaxpr(closed, cost_model=cost_model, mesh=mesh,
+                        in_shardings=in_specs)
+        effects = None
+        if analyze_effects:
+            # effect/determinism pass: classify equations, derive must_store
+            # pins on the storable frontier of any taint, and rebuild the
+            # graph with the pins applied so the planner treats them as hard
+            # store-only constraints (and plan-cache digests diverge from
+            # the unpinned variant)
+            from repro.analysis.effects import (
+                analyze_effects as _analyze,
+                pin_graph,
+            )
+
+            effects = _analyze(jg)
+            if effects.pins:
+                jg = dataclasses.replace(
+                    jg, graph=pin_graph(jg.graph, effects.pins)
+                )
         return cls(
             fn=fn,
             argnums=argnums,
@@ -178,10 +201,10 @@ class TracedCarrier:
                 for v in closed.jaxpr.invars
             ),
             arg_slices=tuple(slices),
-            jg=from_jaxpr(closed, cost_model=cost_model, mesh=mesh,
-                          in_shardings=in_specs),
+            jg=jg,
             mesh=mesh,
             in_specs=in_specs,
+            effects=effects,
         )
 
     def to_graph(self) -> Graph:

@@ -61,6 +61,8 @@ class PlannedFunction:
         track_live: bool,
         mesh: Any = None,
         in_shardings: Any = None,
+        analyze_effects: bool = False,
+        verify: bool = False,
     ):
         self.fn = fn
         self.budget = budget
@@ -74,6 +76,8 @@ class PlannedFunction:
         self.track_live = track_live
         self.mesh = mesh
         self.in_shardings = in_shardings
+        self.analyze_effects = analyze_effects
+        self.verify = verify
         self._memo: Dict[Tuple, LoweredPlan] = {}
 
     # ------------------------------------------------------------------ plan
@@ -94,12 +98,13 @@ class PlannedFunction:
             # concrete weights in the memo for the function's lifetime
             import jax
 
-            abstract = lambda t: jax.tree_util.tree_map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
-                if hasattr(x, "shape") and hasattr(x, "dtype")
-                else x,
-                t,
-            )
+            def abstract(t):
+                return jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+                    if hasattr(x, "shape") and hasattr(x, "dtype")
+                    else x,
+                    t,
+                )
             if self.backend == "jaxpr":
                 # equation granularity for BlockGraphs: trace ``bg.apply``
                 # whole (plus the loss) and plan it like any JAX function —
@@ -114,6 +119,7 @@ class PlannedFunction:
                     bg_loss, (abstract(args[0]), abstract(args[1])),
                     argnums=0, cost_model=self.cost_model,
                     mesh=self.mesh, in_shardings=self.in_shardings,
+                    analyze_effects=self.analyze_effects,
                 )
             return BlockGraphCarrier(
                 bg=fn, loss_fn=self.loss_fn, params=abstract(args[0]),
@@ -123,6 +129,7 @@ class PlannedFunction:
         return TracedCarrier.trace(
             fn, args, argnums=self.argnums, cost_model=self.cost_model,
             mesh=self.mesh, in_shardings=self.in_shardings,
+            analyze_effects=self.analyze_effects,
         )
 
     def lowered_for(self, *args) -> LoweredPlan:
@@ -146,6 +153,17 @@ class PlannedFunction:
                 f"no feasible strategy for budget {self.budget!r} "
                 f"({self.method}/{self.objective}){hint}"
             )
+        if self.verify:
+            from repro import analysis
+            from repro.analysis.report import PlanVerificationError
+
+            vrep = analysis.check_plan(
+                g, report.plan, budget=self.budget,
+                effects=getattr(carrier, "effects", None),
+                jg=getattr(carrier, "jg", None),
+            )
+            if not vrep.ok:
+                raise PlanVerificationError(str(vrep))
         backend = resolve_backend(self.backend, carrier)
         run = backend.lower(carrier, report.plan, track_live=self.track_live)
         lowered = LoweredPlan(
@@ -173,6 +191,8 @@ def plan_function(
     track_live: bool = False,
     mesh: Any = None,
     in_shardings: Any = None,
+    analyze_effects: bool = False,
+    verify: bool = False,
 ) -> PlannedFunction:
     """Plan ``fn``'s recomputation under ``budget`` bytes; return its
     value_and_grad twin.
@@ -219,6 +239,18 @@ def plan_function(
     track_live:
         Interpreter backend only: calls return ``(value, grads, trace)``
         where ``trace`` is the live-intermediate-bytes audit trail.
+    analyze_effects:
+        Run ``repro.analysis``'s effect/determinism pass on the trace:
+        PRNG-consuming / side-effecting / opaque equations taint the graph
+        and their storable frontier is pinned ``must_store`` — the planner
+        then prices those nodes store-only (never recomputed), and pinned
+        and unpinned variants hash to distinct plan-cache digests.
+    verify:
+        Statically re-verify every produced plan (``analysis.check_plan``:
+        topology, replay soundness, simulated peak vs. budget, eq. (1)
+        overhead, per-device ``M_v``) and raise
+        :class:`~repro.analysis.report.PlanVerificationError` on any error
+        finding before the plan is lowered.
     """
     if track_live and backend == "auto":
         backend = "interpreter"
@@ -227,6 +259,7 @@ def plan_function(
         objective=objective, cost_model=cost_model, argnums=argnums,
         loss_fn=loss_fn, planner=planner, track_live=track_live,
         mesh=mesh, in_shardings=in_shardings,
+        analyze_effects=analyze_effects, verify=verify,
     )
 
 

@@ -25,7 +25,7 @@ the plan's ``peak_memory``.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +71,8 @@ def planned_value_and_grad(
             # paper's budget covers intermediate values only)
             if track_live:
                 nbytes = sum(
-                    sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(v))
+                    sum(leaf.size * leaf.dtype.itemsize
+                        for leaf in jax.tree_util.tree_leaves(v))
                     for name, v in store.items()
                     if name not in inputs
                 )

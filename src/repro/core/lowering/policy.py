@@ -17,7 +17,7 @@ backward pass.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Dict, Sequence
 
 import jax
 import jax.numpy as jnp

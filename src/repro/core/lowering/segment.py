@@ -11,7 +11,7 @@ the DP plan drives ``models.transformer`` without leaving the scan.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 
@@ -77,7 +77,8 @@ def apply_segmented(bg, params: Dict[str, Any], inputs: Dict[str, Any],
             if _needed_later(bg, b.name, internal)
         ]
 
-        def seg_fn(seg_params, *ext_vals, _blocks=seg_blocks, _ext=tuple(ext_names), _out=tuple(out_names)):
+        def seg_fn(seg_params, *ext_vals, _blocks=seg_blocks,
+                   _ext=tuple(ext_names), _out=tuple(out_names)):
             local: Dict[str, Any] = dict(zip(_ext, ext_vals))
             for b in _blocks:
                 local[b.name] = constrain_block_output(
@@ -111,7 +112,8 @@ def _needed_later(bg, name: str, internal: set) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def segment_groups(plan: ExecutionPlan, num_layers: int, nodes_per_layer: int = 1) -> List[int]:
+def segment_groups(plan: ExecutionPlan, num_layers: int,
+                   nodes_per_layer: int = 1) -> List[int]:
     """Layer-group sizes [g₁, …, g_k] induced by the plan on a layer chain.
 
     For the scan-over-layers production models the graph is a chain of

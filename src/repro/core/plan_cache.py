@@ -48,7 +48,7 @@ import hashlib
 import os
 import threading
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from repro.checkpointing.store import atomic_write_json, read_json
 

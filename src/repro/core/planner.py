@@ -31,14 +31,14 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time as _time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from . import dp as dp_mod
 from .chen import chen_sqrt_n
 from .cost_model import OpProfile, calibrated_graph
 from .dp import DPResult, approx_dp, exact_dp, solve
 from .graph import Graph, NodeSet, canonical_maps, graph_digest
-from .liveness import simulate, vanilla_peak
+from .liveness import simulate
 from .lower_sets import all_lower_sets, pruned_lower_sets
 from .plan_cache import PlanCache, SweepKey, default_cache
 from .schedule import ExecutionPlan, make_plan

@@ -65,6 +65,39 @@ INNER_JAXPR_KEYS = (
     "branches",
 )
 
+#: PRNG-consuming primitives.  JAX's functional PRNG makes them
+#: deterministic given the same key operand, but a plan that *recomputes*
+#: one re-derives random bits during the backward pass — a silent numerics
+#: hazard the effect analysis (``repro.analysis``) pins out of plans.
+PRNG_PRIMS = frozenset({
+    "threefry2x32",
+    "random_seed",
+    "random_wrap",
+    "random_unwrap",
+    "random_bits",
+    "random_fold_in",
+    "random_split",
+    "random_gamma",
+    "random_clone",
+    "rng_bit_generator",
+    "rng_uniform",
+})
+
+#: Primitives whose backward rule is user-defined: the remat twin replays
+#: their forward, but nothing structural proves the replay agrees with the
+#: residuals the custom VJP expects — effect analysis treats them as opaque
+#: and pins their (storable) outputs.
+OPAQUE_PRIMS = frozenset({
+    "custom_vjp_call",
+    "custom_vjp_call_jaxpr",
+    "custom_lin",
+})
+
+#: ``eqn.params`` keys the *effect walker* recurses into — the FLOP
+#: accounting's keys plus ``fun_jaxpr`` (where ``custom_vjp_call_jaxpr``
+#: hides its primal body).
+EFFECT_INNER_JAXPR_KEYS = INNER_JAXPR_KEYS + ("fun_jaxpr",)
+
 #: Node kinds priced as compute-bound matmul-class work by the measured
 #: cost model (``time`` field = FLOPs).
 MATMUL_KINDS = frozenset({

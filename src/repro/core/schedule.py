@@ -17,7 +17,7 @@ registered backend in ``core.lowering`` executes —
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from .graph import EMPTY, Graph, NodeSet
 
@@ -29,7 +29,7 @@ class Segment:
     index: int
     nodes: Tuple[int, ...]  # V_i in topological order
     lower_set: NodeSet  # L_i
-    boundary: NodeSet  # ∂(L_i) — cached at end of this segment's forward
+    boundary: NodeSet  # ∂(L_i) ∪ (pins ∩ L_i) — cached after this forward
     keep: NodeSet  # boundary ∩ V_i — newly cached nodes
     recompute: NodeSet  # V_i \ U_k — recomputed during backward
 
@@ -70,9 +70,11 @@ def make_plan(g: Graph, sequence: Sequence[NodeSet]) -> ExecutionPlan:
     segments: List[Segment] = []
     prev: NodeSet = EMPTY
     cached: set = set()
+    pins = g.store_pins
     for i, L in enumerate(sequence):
         Vi = L - prev
-        b = g.boundary(L)
+        # effective cache: boundary plus must_store pins (effect analysis)
+        b = g.boundary(L) | (pins & L)
         cached |= b
         segments.append(
             Segment(

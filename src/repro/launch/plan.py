@@ -363,8 +363,30 @@ def plan_unit_segments(
         sp = SegmentPlan(tuple(1 for _ in range(pi.n_units)),
                          tuple(True for _ in range(pi.n_units)), n_micro)
         return sp, res
+    _maybe_verify(g, res, B)
     sizes, remat = segments_from_result(res, pi.n_units)
     return SegmentPlan(sizes, remat, n_micro), res
+
+
+def _maybe_verify(g: Graph, res: DPResult, budget: float) -> None:
+    """``REPRO_VERIFY_PLANS=1``: statically re-verify the launch plan.
+
+    Runs the DP-independent verifier (``repro.analysis.check_plan``) over
+    the solved lower-set sequence — topology, replay soundness, simulated
+    peak vs. the per-device budget, eq. (1) overhead — and refuses to hand
+    a launcher an unsound schedule.  Off by default: the checks are cheap
+    (linear in segments) but this path sits under dry-run sweeps that call
+    it thousands of times.
+    """
+    if not os.environ.get("REPRO_VERIFY_PLANS"):
+        return
+    from repro import analysis
+    from repro.analysis.report import PlanVerificationError
+    from repro.core.schedule import make_plan
+
+    report = analysis.check_plan(g, make_plan(g, res.sequence), budget=budget)
+    if not report.ok:
+        raise PlanVerificationError(str(report))
 
 
 #: modeled per-extra-microbatch fixed cost, as a fraction of the whole

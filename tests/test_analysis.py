@@ -1,0 +1,455 @@
+"""Acceptance for ``repro.analysis`` (ISSUE 6): effect analysis, the static
+plan verifier, and lowering conformance — plus the satellites.
+
+* effect classification + must_store pins on PRNG / custom_vjp / effectful
+  equations, recursing into scan / while / cond bodies;
+* pins flow through the DP (cached, never recomputed, digests diverge);
+* the verifier accepts valid plans and rejects a deliberately corrupted
+  save-set and a PRNG-tainted unpinned plan with actionable diagnostics;
+* conformance accepts the plan's own lowering and rejects a stale one;
+* planned twins stay bit-identical to vanilla ``jax.value_and_grad`` for
+  carriers containing PRNG keys, scan/while/cond and custom_vjp;
+* ``liveness.transition_excess``'s memo no longer keeps graphs alive;
+* the plan_lint CLI's exit codes.
+"""
+
+import dataclasses
+import gc
+import sys
+import weakref
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro import analysis
+from repro.core import dp
+from repro.core.graph import Graph, Node, graph_digest
+from repro.core.liveness import transition_excess
+from repro.core.lowering.carriers import TracedCarrier
+from repro.core.lowering.front_door import plan_function
+from repro.core.planner import Planner
+from repro.core.schedule import make_plan
+
+DN = (((1,), (0,)), ((), ()))
+
+
+# ---------------------------------------------------------------------- nets
+
+
+def _dropout_net():
+    """Seeded-dropout MLP — the PRNG canary."""
+
+    def fn(params, x, key):
+        h = x
+        for i, w in enumerate(params):
+            h = lax.tanh(lax.dot_general(h, w, DN))
+            keep = jax.random.bernoulli(jax.random.fold_in(key, i), 0.9,
+                                        h.shape)
+            h = jnp.where(keep, h / 0.9, 0.0)
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [
+        jax.random.normal(jax.random.fold_in(key, 10 + i), (16, 16)) * 0.3
+        for i in range(2)
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    return fn, (params, x, jax.random.PRNGKey(7))
+
+
+def _chain_graph(n=6, mem=10.0):
+    nodes = [Node(i, f"v{i}", 1.0, mem, "op") for i in range(n)]
+    return Graph(nodes, [(i, i + 1) for i in range(n - 1)])
+
+
+# ------------------------------------------------------------ effect analysis
+
+
+def test_pure_function_has_no_taint():
+    def fn(params, x):
+        h = lax.tanh(lax.dot_general(x, params, DN))
+        return jnp.sum(h * h)
+
+    c = TracedCarrier.trace(fn, (jnp.ones((4, 8)) * 0.1, jnp.ones((4, 4))),
+                            analyze_effects=True)
+    assert c.effects.pure
+    assert not c.effects.pins
+    assert analysis.check_graph(c).ok
+
+
+def test_dropout_taints_and_pins_storable_frontier():
+    fn, args = _dropout_net()
+    c = TracedCarrier.trace(fn, args, analyze_effects=True)
+    ea = c.effects
+    assert not ea.pure
+    # PRNG classes present, pins non-empty and on storable equations only
+    klasses = {ea.effects[v].klass for v in ea.tainted}
+    assert "prng" in klasses
+    assert ea.pins
+    for v in ea.pins:
+        assert ea.effects[v].storable or v in ea.tainted
+        assert c.jg.graph.nodes[v].must_store
+    # warnings name every tainted equation
+    flagged = {f.node for f in ea.report.warnings()}
+    assert ea.tainted <= flagged | ea.pins
+
+
+def test_taint_recurses_into_scan_body():
+    def fn(x, key):
+        def body(carry, k):
+            bits = jax.random.normal(k, carry.shape)
+            return carry + bits, ()
+
+        keys = jax.random.split(key, 3)
+        out, _ = lax.scan(body, x, keys)
+        return jnp.sum(out)
+
+    c = TracedCarrier.trace(fn, (jnp.ones(4), jax.random.PRNGKey(0)),
+                            analyze_effects=True)
+    ea = c.effects
+    scan_idx = [i for i, e in enumerate(ea.effects) if e.primitive == "scan"]
+    assert scan_idx and all(i in ea.tainted for i in scan_idx)
+    assert any(e.klass == "prng" for e in ea.effects if e.primitive == "scan")
+
+
+def test_custom_vjp_is_opaque_and_pinned():
+    @jax.custom_vjp
+    def f(x):
+        return jnp.tanh(x)
+
+    def f_fwd(x):
+        return jnp.tanh(x), x
+
+    def f_bwd(res, ct):
+        return ((1.0 - jnp.tanh(res) ** 2) * ct,)
+
+    f.defvjp(f_fwd, f_bwd)
+
+    def loss(x):
+        return jnp.sum(f(x) * f(x))
+
+    c = TracedCarrier.trace(loss, (jnp.ones(8) * 0.3,), analyze_effects=True)
+    ea = c.effects
+    assert any(e.klass == "opaque" for e in ea.effects)
+    assert ea.pins  # opaque float output pins itself
+
+
+# ----------------------------------------------------------------- pins in DP
+
+
+def test_pin_marker_changes_digest_only_when_pinned():
+    g = _chain_graph()
+    unpinned_digest = graph_digest(g)
+    same = analysis.pin_graph(g, frozenset())
+    assert graph_digest(same) == unpinned_digest
+    pinned = analysis.pin_graph(g, frozenset({2}))
+    assert graph_digest(pinned) != unpinned_digest
+    assert pinned.store_pins == frozenset({2})
+
+
+def test_pins_are_cached_and_never_recomputed():
+    g = analysis.pin_graph(_chain_graph(8), frozenset({2, 5}))
+    rep = Planner(cache=None).plan(g, budget=None, method="exact_dp")
+    plan = rep.plan
+    assert frozenset({2, 5}) <= plan.cached
+    for seg in plan.segments:
+        assert not (frozenset({2, 5}) & seg.recompute)
+    assert analysis.check_plan(g, plan).ok
+
+
+def test_pinned_peak_matches_event_simulation():
+    from repro.core.liveness import simulate
+
+    g = analysis.pin_graph(_chain_graph(7), frozenset({1, 4}))
+    rep = Planner(cache=None).plan(g, budget=None, method="exact_dp")
+    seq = [s.lower_set for s in rep.plan.segments]
+    assert rep.plan.peak_memory == pytest.approx(
+        simulate(g, seq, liveness=True).peak_memory
+    )
+
+
+def test_eq2_functional_rejects_pins():
+    g = analysis.pin_graph(_chain_graph(5), frozenset({2}))
+    with pytest.raises(ValueError, match="eq2"):
+        dp.peak_memory(g, [frozenset(range(3)), frozenset(range(5))])
+
+
+# ------------------------------------------------------------------- verifier
+
+
+def test_verifier_accepts_valid_plan_and_budget():
+    g = _chain_graph(8)
+    rep = Planner(cache=None).plan(g, budget=None, method="exact_dp")
+    r = analysis.check_plan(g, rep.plan, budget=rep.plan.peak_memory)
+    assert r.ok
+
+
+def test_verifier_rejects_corrupted_save_set():
+    g = _chain_graph(8)
+    plan = Planner(cache=None).plan(g, budget=None, method="exact_dp").plan
+    # mutate the save-set: drop a cached node from one segment's decisions
+    seg = next(s for s in plan.segments if s.keep)
+    victim = max(seg.keep)
+    bad_seg = dataclasses.replace(
+        seg, boundary=seg.boundary - {victim}, keep=seg.keep - {victim}
+    )
+    segs = tuple(bad_seg if s.index == seg.index else s
+                 for s in plan.segments)
+    bad = dataclasses.replace(plan, segments=segs)
+    r = analysis.check_plan(g, bad)
+    assert not r.ok
+    codes = {f.code for f in r.errors()}
+    assert codes & {"boundary-mismatch", "keep-mismatch",
+                    "cache-set-mismatch"}
+    # diagnostics are actionable: they name the derived-vs-declared sets
+    assert any(str(victim) in f.message for f in r.errors())
+
+
+def test_verifier_rejects_over_budget_and_wrong_peak():
+    g = _chain_graph(8)
+    plan = Planner(cache=None).plan(g, budget=None, method="exact_dp").plan
+    r = analysis.check_plan(g, plan, budget=plan.peak_memory / 2)
+    assert any(f.code == "over-budget" for f in r.errors())
+    lied = dataclasses.replace(plan, peak_memory=plan.peak_memory * 2)
+    r2 = analysis.check_plan(g, lied)
+    assert any(f.code == "peak-mismatch" for f in r2.errors())
+    lied3 = dataclasses.replace(plan, overhead=plan.overhead + 5.0)
+    r3 = analysis.check_plan(g, lied3)
+    assert any(f.code == "overhead-mismatch" for f in r3.errors())
+
+
+def test_verifier_rejects_prng_tainted_unpinned_plan():
+    fn, args = _dropout_net()
+    c = TracedCarrier.trace(fn, args, analyze_effects=True)
+    ea = c.effects
+    # plan on the UNPINNED graph with an empty cache set: the storable
+    # tainted frontier is necessarily in a recompute set → rejected
+    unpinned = TracedCarrier.trace(fn, args).to_graph()
+    plan = make_plan(unpinned, [frozenset(range(unpinned.n))])
+    assert not plan.cached
+    r = analysis.check_plan(unpinned, plan, effects=ea)
+    assert not r.ok
+    errs = [f for f in r.errors() if f.code == "tainted-recompute"]
+    assert errs and "must_store pin" in errs[0].message
+    # ...and the pinned plan passes the same check
+    pinned_plan = Planner(cache=None).plan(
+        c.to_graph(), budget=None, method="approx_dp"
+    ).plan
+    r2 = analysis.check_plan(c.to_graph(), pinned_plan, effects=ea,
+                             jg=c.jg)
+    assert r2.ok
+
+
+# ---------------------------------------------------------------- conformance
+
+
+def test_conformance_accepts_own_lowering():
+    fn, args = _dropout_net()
+    c = TracedCarrier.trace(fn, args, analyze_effects=True)
+    plan = Planner(cache=None).plan(
+        c.to_graph(), budget=None, method="approx_dp"
+    ).plan
+    r = analysis.check_lowering(c, plan)
+    assert r.ok, str(r)
+
+
+def test_conformance_rejects_stale_lowering():
+    from repro.core.lowering.policy import traced_value_and_grad
+
+    def fn(params, x):
+        h = x
+        for w in params:
+            h = lax.tanh(lax.dot_general(h, w, DN))
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [jax.random.normal(jax.random.fold_in(key, i), (8, 8)) * 0.3
+              for i in range(6)]
+    x = jnp.ones((4, 8))
+    c = TracedCarrier.trace(fn, (params, x))
+    g = c.to_graph()
+    planner = Planner(cache=None)
+    tight = planner.plan(g, budget=None, method="exact_dp").plan
+    from repro.core.liveness import vanilla_peak
+
+    roomy = planner.plan(g, budget=vanilla_peak(g, liveness=True),
+                         method="exact_dp").plan
+    assert tight.cached != roomy.cached
+    stale = traced_value_and_grad(c, tight)
+    r = analysis.check_lowering(c, roomy, lowered=stale)
+    assert not r.ok
+    codes = {f.code for f in r.errors()}
+    assert codes & {"remat-set-mismatch", "residual-not-saved"}
+
+
+# -------------------------------------------------- bit-identity (satellite 3)
+
+
+def _assert_bit_identical(fn, args, argnums=0, analyze=True):
+    planned = plan_function(fn, argnums=argnums, analyze_effects=analyze,
+                            verify=True)
+    loss, grads = planned(*args)
+    ref_loss, ref_grads = jax.value_and_grad(fn, argnums=argnums)(*args)
+    assert float(loss) == float(ref_loss)
+    for a, b in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(ref_grads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_planned_dropout_bit_identical_to_vanilla():
+    fn, args = _dropout_net()
+    _assert_bit_identical(fn, args)
+
+
+def test_planned_scan_bit_identical():
+    def fn(w, x):
+        def body(h, _):
+            return lax.tanh(lax.dot_general(h, w, DN)), ()
+
+        out, _ = lax.scan(body, x, None, length=4)
+        return jnp.sum(out * out)
+
+    w = jnp.eye(8) * 0.5
+    x = jnp.ones((4, 8))
+    _assert_bit_identical(fn, (w, x))
+
+
+def test_planned_while_and_cond_bit_identical():
+    # reverse-mode AD through lax.while_loop is unsupported in JAX itself,
+    # so the while sits on a stop_gradient path (a data-dependent scale),
+    # exactly how it shows up in real training code
+    def fn(w, x):
+        def cond_fn(c):
+            return c[0] < 3
+
+        def body_fn(c):
+            i, s = c
+            return i + 1, s * 1.5
+
+        _, scale = lax.while_loop(
+            cond_fn, body_fn, (0, lax.stop_gradient(jnp.sum(x)) * 0.01)
+        )
+        h = lax.tanh(lax.dot_general(x, w, DN))
+        h = lax.cond(jnp.sum(h) > 0, lambda a: a * 2.0, lambda a: a, h)
+        return jnp.sum(h * h) * scale
+
+    w = jnp.eye(8) * 0.5
+    x = jnp.ones((4, 8))
+    _assert_bit_identical(fn, (w, x))
+
+
+def test_planned_custom_vjp_bit_identical():
+    @jax.custom_vjp
+    def sq(x):
+        return x * x
+
+    def sq_fwd(x):
+        return x * x, x
+
+    def sq_bwd(res, ct):
+        return (2.0 * res * ct,)
+
+    sq.defvjp(sq_fwd, sq_bwd)
+
+    def fn(w, x):
+        h = lax.tanh(lax.dot_general(x, w, DN))
+        return jnp.sum(sq(h))
+
+    w = jnp.eye(8) * 0.5
+    x = jnp.ones((4, 8))
+    _assert_bit_identical(fn, (w, x))
+
+
+# ---------------------------------------------- liveness memo (satellite 2)
+
+
+def test_transition_excess_memo_does_not_leak_graphs():
+    from repro.core.graph import to_mask
+
+    g = _chain_graph(6)
+    m1, m2 = to_mask(range(3)), to_mask(range(6))
+    transition_excess(g, m1, m2, 0)  # populate the memo (∂(V) = ∅)
+    ref = weakref.ref(g)
+    del g
+    gc.collect()
+    assert ref() is None, "transition_excess memo kept the graph alive"
+
+
+def test_transition_excess_memo_still_caches():
+    from repro.core.graph import to_mask
+    from repro.core.liveness import _EXCESS_MEMO
+
+    g = _chain_graph(6)
+    m1, m2 = to_mask(range(3)), to_mask(range(6))
+    a = transition_excess(g, m1, m2, 0)
+    assert g in _EXCESS_MEMO and _EXCESS_MEMO[g]
+    b = transition_excess(g, m1, m2, 0)
+    assert a == b
+
+
+# --------------------------------------------------------------- CLI / smoke
+
+
+def test_cli_traced_quickstart_ok(tmp_path):
+    from repro.analysis.cli import main
+
+    out = tmp_path / "report.json"
+    rc = main(["--traced", "quickstart", "--json", str(out)])
+    assert rc == 0
+    import json
+
+    data = json.loads(out.read_text())
+    assert data["ok"] and data["targets"][0]["target"] == "quickstart"
+    checkers = [r["checker"] for r in data["targets"][0]["reports"]]
+    assert checkers == ["effects", "plan", "lowering"]
+
+
+def test_cli_infeasible_budget_exits_2(capsys):
+    from repro.analysis.cli import main
+
+    rc = main(["--traced", "quickstart", "--budget", "10"])
+    assert rc == 2
+    outp = capsys.readouterr().out
+    assert "minimal feasible budget" in outp
+
+
+def test_cli_network_ok():
+    root = Path(__file__).resolve().parent.parent
+    if str(root) not in sys.path:
+        sys.path.insert(0, str(root))
+    pytest.importorskip("benchmarks.networks")
+    from repro.analysis.cli import main
+
+    assert main(["--network", "unet"]) == 0
+
+
+# ---------------------------------------------------------- front-door verify
+
+
+def test_plan_function_verify_knob_passes():
+    def fn(w, x):
+        h = lax.tanh(lax.dot_general(x, w, DN))
+        return jnp.sum(h * h)
+
+    planned = plan_function(fn, verify=True)
+    w = jnp.eye(8) * 0.5
+    x = jnp.ones((4, 8))
+    loss, _ = planned(w, x)
+    assert np.isfinite(float(loss))
+
+
+def test_launch_verify_hook(monkeypatch):
+    from repro.launch.plan import _maybe_verify
+
+    g = _chain_graph(8)
+    res = Planner(cache=None).plan(g, budget=None, method="exact_dp").result
+    monkeypatch.setenv("REPRO_VERIFY_PLANS", "1")
+    _maybe_verify(g, res, budget=res.peak_memory)  # must not raise
+    from repro.analysis.report import PlanVerificationError
+
+    with pytest.raises(PlanVerificationError):
+        _maybe_verify(g, res, budget=res.peak_memory / 4)

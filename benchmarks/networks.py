@@ -239,6 +239,66 @@ def pspnet() -> Graph:
     return b.graph()
 
 
+def executable_twin(g: Graph, batch: int = 4, width: int = 16):
+    """A small *runnable* JAX twin of an abstract benchmark graph.
+
+    Same topology, toy shapes: every node carries a ``(batch, width)`` f32
+    activation; ``conv``-kind nodes apply a per-node ``(width, width)``
+    ``dot_general`` (one heavy op each, mirroring the 10/1 cost model),
+    every other kind a cheap elementwise ``tanh``; multi-predecessor nodes
+    take the mean of their inputs.  Each node's output is tagged with the
+    abstract node's *name* via ``checkpoint_name``, so a plan computed on
+    the abstract graph maps directly onto the twin through
+    ``save_only_these_names`` — no re-planning on the trace.  Per-node
+    distinct constants keep sibling branches CSE-distinct.
+
+    Returns ``(fwd, (params, x), byte_graph)`` where the example args are
+    ``ShapeDtypeStruct``s (enough for ``jit.lower``) and ``byte_graph`` is
+    the abstract topology re-priced so every node's ``M_v`` is the twin's
+    actual activation byte size — the graph to evaluate analytic peaks on
+    when comparing against the twin's compiled memory use.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.ad_checkpoint import checkpoint_name
+
+    dn = (((1,), (0,)), ((), ()))
+    conv_ids = [v for v in range(g.n) if g.nodes[v].kind == "conv"]
+    sinks = [v for v in range(g.n) if not g.succ[v]]
+
+    def fwd(params, x):
+        vals: Dict[int, object] = {}
+        for v in range(g.n):  # builders emit nodes in topological order
+            nd = g.nodes[v]
+            preds = g.pred[v]
+            if not preds:
+                h = x * (1.0 + 0.003 * v)
+            elif len(preds) == 1:
+                h = vals[preds[0]]
+            else:
+                h = jnp.mean(jnp.stack([vals[p] for p in preds]), axis=0)
+            if nd.kind == "conv":
+                h = jax.lax.dot_general(h, params[str(v)], dn)
+            else:
+                h = jnp.tanh(h) * (1.0 + 0.003 * v)
+            vals[v] = checkpoint_name(h, nd.name)
+        out = 0.0
+        for s in sinks:
+            out = out + jnp.sum(vals[s] * vals[s])
+        return out
+
+    params = {
+        str(v): jax.ShapeDtypeStruct((width, width), jnp.float32)
+        for v in conv_ids
+    }
+    x = jax.ShapeDtypeStruct((batch, width), jnp.float32)
+    nbytes = 4.0 * batch * width
+    byte_nodes = [
+        Node(nd.idx, nd.name, nd.time, nbytes, nd.kind) for nd in g.nodes
+    ]
+    return fwd, (params, x), Graph(byte_nodes, g.edges)
+
+
 NETWORKS = {
     "vgg19": vgg19,
     "resnet50": resnet50,

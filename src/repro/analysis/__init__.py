@@ -13,10 +13,17 @@ ROADMAP's "honest against the compiler" direction):
   (``analysis.verifier``);
 * :func:`check_lowering` — lowering conformance: the lowered twin's
   ``checkpoint_name`` save-set equals the plan's ``U_k``
-  (``analysis.conformance``).
+  (``analysis.conformance``);
+* :func:`check_hlo` — compiler-truth checks over the *compiled* planned
+  twin: optimized-HLO heavy-op multiplicity vs. the plan's eq. (1)
+  recompute counts, materialization of every cached residual, and the
+  memory-drift gate against ``compiled.memory_analysis()``
+  (``analysis.hlo``, text parsing in ``analysis.hlo_text``).
 
-The ``plan_lint`` CLI (``python -m repro.analysis``) runs all three over
-benchmark networks and traced functions and emits a JSON report.
+The ``plan_lint`` CLI (``python -m repro.analysis``) runs the checkers
+over benchmark networks and traced functions and emits a JSON report
+(``--hlo`` adds the compiled-artifact stage and the drift-record
+artifact).
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ from __future__ import annotations
 from typing import Any
 
 from .conformance import check_lowering
+from .hlo import HloAnalysis, analyze_hlo, check_hlo, drift_findings
 from .effects import (
     CLASSES,
     EffectAnalysis,
@@ -49,6 +57,10 @@ __all__ = [
     "check_plan",
     "check_graph_memory",
     "check_lowering",
+    "check_hlo",
+    "analyze_hlo",
+    "HloAnalysis",
+    "drift_findings",
 ]
 
 

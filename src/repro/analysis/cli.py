@@ -3,6 +3,7 @@
     python -m repro.analysis --network unet
     python -m repro.analysis --network unet --budget 2e9
     python -m repro.analysis --smoke --json lint_report.json
+    python -m repro.analysis --hlo --drift-json BENCH_hlo_drift.json
 
 ``--network`` lints one of the paper's seven benchmark graphs: plan at the
 given budget (default: the exact minimal feasible one) and run the plan
@@ -10,6 +11,15 @@ verifier.  ``--traced module:factory`` (or the built-in ``quickstart``)
 lints a real JAX function end to end: effect analysis → pinned planning →
 plan verification → lowering conformance.  ``--smoke`` runs every
 benchmark network plus the quickstart traced function — the CI gate.
+
+``--hlo`` adds the compiler-truth checkers (``analysis.hlo``): each
+network's plan is lowered onto its executable twin
+(``benchmarks.networks.executable_twin``), compiled, and the optimized HLO
+is checked for eq. (1) heavy-op multiplicity, cached-residual
+materialization and memory drift; traced targets get the same treatment
+through their carrier.  Per-target drift records land in
+``--drift-json`` (default ``BENCH_hlo_drift.json``) — the CI drift-gate
+artifact.  ``--hlo`` alone runs every network plus the quickstart.
 
 Exit codes: 0 all clean, 1 lint errors, 2 infeasible budget (the exact
 minimal feasible budget is printed — re-run with at least that).
@@ -69,8 +79,16 @@ def lint_graph(
     name: str,
     budget: Optional[float],
     method: str,
+    hlo_records: Optional[List[Dict[str, Any]]] = None,
 ) -> Tuple[List[Report], bool]:
-    """Plan ``g`` and verify; returns (reports, infeasible)."""
+    """Plan ``g`` and verify; returns (reports, infeasible).
+
+    With ``hlo_records`` (a list to append drift records to) the compiler
+    -truth checkers also run: the abstract plan is lowered onto the
+    network's executable twin (``benchmarks.networks.executable_twin``)
+    through ``save_only_these_names`` and the compiled HLO is checked for
+    heavy-op multiplicity, residual materialization and memory drift.
+    """
     from ..core.planner import get_default_planner
 
     planner = get_default_planner()
@@ -87,7 +105,48 @@ def lint_graph(
         return [r], True
     from .verifier import check_plan
 
-    return [check_plan(g, rep.plan, budget=budget)], False
+    reports = [check_plan(g, rep.plan, budget=budget)]
+    if hlo_records is not None:
+        import jax
+
+        from benchmarks.networks import executable_twin
+
+        from ..core import dp
+        from .hlo import HEAVY_NODE_KINDS, analyze_twin
+
+        plan = rep.plan
+        fwd, ex_args, byte_graph = executable_twin(g)
+        # analytic peak in the *twin's* byte units: same lower-set sequence,
+        # per-node activation bytes of the toy shapes
+        analytic_peak = dp.peak_memory_live(
+            byte_graph, [s.lower_set for s in plan.segments]
+        )
+        cached = set(plan.cached)
+        recompute = set(range(g.n)) - cached
+        cached_tags = {g.nodes[v].name for v in cached}
+        recompute_tags = {g.nodes[v].name for v in recompute}
+        plan_heavy = sum(
+            1 for v in recompute if g.nodes[v].kind in HEAVY_NODE_KINDS
+        )
+        policy = jax.checkpoint_policies.save_only_these_names(
+            *sorted(cached_tags)
+        )
+        fn_grad = jax.value_and_grad(jax.checkpoint(fwd, policy=policy))
+        res = analyze_twin(
+            fn_grad,
+            ex_args,
+            cached_tags=cached_tags,
+            recompute_tags=recompute_tags,
+            plan_heavy_recompute=plan_heavy,
+            analytic_peak=analytic_peak,
+            vanilla_grad=jax.value_and_grad(fwd),
+        )
+        res.drift.update(
+            target=name, nodes=g.n, segments=len(plan.segments)
+        )
+        hlo_records.append(res.drift)
+        reports.append(res.report)
+    return reports, False
 
 
 def lint_traced(
@@ -95,8 +154,14 @@ def lint_traced(
     args: Sequence[Any],
     budget: Optional[float],
     method: str,
+    hlo_records: Optional[List[Dict[str, Any]]] = None,
+    target: str = "traced",
 ) -> Tuple[List[Report], bool]:
-    """Full three-checker lint of a traced function."""
+    """Full three-checker lint of a traced function.
+
+    With ``hlo_records`` the compiler-truth checkers (``analysis.hlo``)
+    run as a fourth stage on the compiled planned twin.
+    """
     from ..core.lowering.carriers import TracedCarrier
     from ..core.planner import get_default_planner
     from .conformance import check_lowering
@@ -117,11 +182,20 @@ def lint_traced(
             f"minimal feasible budget is {needed:g}",
         )
         return [ea.report, r], True
-    return [
+    reports = [
         ea.report,
         check_plan(g, rep.plan, budget=budget, effects=ea, jg=carrier.jg),
         check_lowering(carrier, rep.plan),
-    ], False
+    ]
+    if hlo_records is not None:
+        from .hlo import analyze_hlo
+
+        res = analyze_hlo(carrier, rep.plan)
+        res.drift.update(target=target, nodes=g.n,
+                         segments=len(rep.plan.segments))
+        hlo_records.append(res.drift)
+        reports.append(res.report)
+    return reports, False
 
 
 def _run_target(
@@ -165,6 +239,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="lint every benchmark network plus the quickstart "
                          "traced function")
+    ap.add_argument("--hlo", action="store_true",
+                    help="compiler-truth checks: compile each target's "
+                         "planned twin and verify heavy-op multiplicity, "
+                         "residual materialization and memory drift against "
+                         "the plan (alone, runs every network + quickstart)")
+    ap.add_argument("--drift-json", default=None, metavar="PATH",
+                    help="where --hlo writes its drift records "
+                         "(default BENCH_hlo_drift.json)")
     ap.add_argument("--budget", type=float, default=None,
                     help="byte budget (default: exact minimal feasible)")
     ap.add_argument("--method", default="approx_dp",
@@ -173,11 +255,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="write the merged findings as a JSON artifact")
     args = ap.parse_args(argv)
 
-    if not (args.network or args.traced or args.smoke):
-        ap.error("pick one of --network / --traced / --smoke")
+    if not (args.network or args.traced or args.smoke or args.hlo):
+        ap.error("pick one of --network / --traced / --smoke / --hlo")
+
+    run_all = args.smoke or (
+        args.hlo and not (args.network or args.traced)
+    )
+    drift_records: List[Dict[str, Any]] = []
+    hlo_records = drift_records if args.hlo else None
 
     targets: List[Tuple[str, Callable[[], Tuple[List[Report], bool]]]] = []
-    if args.network or args.smoke:
+    if args.network or run_all:
         try:
             from benchmarks.networks import NETWORKS
         except ImportError as e:
@@ -194,15 +282,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             targets.append((
                 name,
                 lambda name=name: lint_graph(
-                    NETWORKS[name](), name, args.budget, args.method
+                    NETWORKS[name](), name, args.budget, args.method,
+                    hlo_records=hlo_records,
                 ),
             ))
-    if args.traced or args.smoke:
+    if args.traced or run_all:
         spec = args.traced or "quickstart"
         fn, ex_args = _resolve_traced(spec)
         targets.append((
             spec,
-            lambda: lint_traced(fn, ex_args, args.budget, args.method),
+            lambda: lint_traced(fn, ex_args, args.budget, args.method,
+                                hlo_records=hlo_records, target=spec),
         ))
 
     results: List[Dict[str, Any]] = []
@@ -218,6 +308,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             json.dump({"ok": not any_errors, "targets": results}, fh,
                       indent=2)
         print(f"report written to {args.json}")
+
+    if args.hlo:
+        drift_path = args.drift_json or "BENCH_hlo_drift.json"
+        with open(drift_path, "w") as fh:
+            json.dump({"ok": not any_errors, "records": drift_records}, fh,
+                      indent=2)
+        print(f"drift records written to {drift_path}")
 
     if any_infeasible:
         return EXIT_INFEASIBLE

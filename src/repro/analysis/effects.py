@@ -99,6 +99,12 @@ def _classify(eqn: Any) -> Tuple[str, str]:
     name = eqn.primitive.name
     if name in PRNG_PRIMS:
         return "prng", f"PRNG primitive '{name}'"
+    if name == "pallas_call":
+        return "opaque", (
+            "'pallas_call' runs a hand-written kernel the taint walker "
+            "cannot see into (scratch buffers, input aliasing, reduction "
+            "order); its outputs must be stored, not recomputed"
+        )
     if name in OPAQUE_PRIMS:
         return "opaque", (
             f"'{name}' has a user-defined VJP; replaying its forward is not "
@@ -247,4 +253,4 @@ def pin_graph(g: Graph, pins: FrozenSet[int]) -> Graph:
         )
         for nd in g.nodes
     ]
-    return Graph(nodes, g.edges)
+    return Graph(nodes, g.edges, cost_source=getattr(g, "cost_source", ""))

@@ -1,0 +1,629 @@
+"""Compiler-truth HLO analysis: remat conformance, memory drift, compiled cost.
+
+``analysis.check_plan`` and ``analysis.check_lowering`` verify a plan against
+the *trace* — but what runs is XLA's optimized HLO, where fusion, CSE, DCE
+and buffer assignment can silently break the save-set or blow the budget.
+This module closes that loop with three cooperating checkers over the
+compiled planned twin, all speaking the shared :class:`~.report.Report` type:
+
+1. **remat conformance** — trace the twin's differentiated jaxpr, census its
+   heavy ops (dot/conv, trip-count aware through ``scan`` bodies) into
+   *forward*, *inside-remat* and *named-recompute* counts, and prove the
+   optimized HLO's heavy-op multiplicity lands in the band the plan's eq. (1)
+   recompute set implies.  The band is one-sided by construction: backends
+   that expand ``optimization_barrier`` before CSE (XLA **CPU** does; GPU/TPU
+   expand it last) may merge a planned recomputation back into its forward
+   twin — that elision only ever *removes* planned-recompute ops, so
+
+       expected − named_recompute  ≤  measured  ≤  expected
+
+   with ``expected = forward + inside_remat``.  Anything above the band is
+   unplanned recomputation (an eq. (1) breach); anything below lost forward
+   or backward work.  Every cached ``checkpoint_name`` tensor must also
+   survive as a materialized buffer: jax's ``save_only_these_names`` policy
+   marks each saved residual with an identity ``reduce_precision`` (e8m23
+   for f32), so the StableHLO must carry exactly one marker per
+   backward-live saved residual and the optimized HLO at least that many
+   (fusion may duplicate a marker, never drop one).
+2. **memory drift** — ``compiled.memory_analysis()`` temp bytes against the
+   plan's liveness-tight analytic peak, with a tolerance band
+   ``peak·(1+rel) + abs_slack``.  On CPU the barrier expansion above means a
+   planned twin can legitimately compile to vanilla-peak temp; when a
+   vanilla compile is supplied as ceiling, drift inside the vanilla band
+   downgrades to the documented ``memory-drift-remat-elided`` warning.
+3. **compiled cost extraction** — per-segment sub-jaxprs compiled in
+   isolation yield XLA's own FLOPs / bytes-accessed, which
+   ``core.cost_model.compiled_calibrated_graph`` turns into a ``"compiled"``
+   cost profile for the DP (profile source hashed into the plan-cache
+   digest via ``Graph.cost_source``).
+
+Entry points: :func:`check_hlo` / :func:`analyze_hlo` for a
+``TracedCarrier`` + plan (the ``plan_function(verify_hlo=True)`` and
+``REPRO_VERIFY_PLANS=hlo`` hook), :func:`analyze_twin` for an explicitly
+lowered twin (the ``plan_lint --hlo`` benchmark-network path), and
+:func:`extract_segment_costs` for the cost profile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+from jax.extend import core as jcore
+
+from ..core.prims import HIGHER_ORDER_PRIMS, INNER_JAXPR_KEYS, MATMUL_PRIMS
+from ..core.schedule import ExecutionPlan
+from .conformance import _remat_eqns, _tag_names
+from .hlo_text import count_heavy_ops, reduce_precision_count
+from .report import Report
+
+#: Node kinds the plan-side recompute census treats as heavy (one dot/conv
+#: instruction each): traced-jaxpr kinds are primitive names, the abstract
+#: benchmark graphs use "conv", chain/BlockGraph twins "matmul".
+HEAVY_NODE_KINDS = frozenset(MATMUL_PRIMS) | frozenset({"conv", "matmul"})
+
+#: Default drift tolerance: relative band around the analytic peak plus an
+#: absolute slack for buffer padding/alignment and the compiler's scratch.
+DRIFT_REL = 0.5
+DRIFT_ABS_SLACK = 256 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class HeavyCensus:
+    """Heavy-op (dot/conv) counts of a differentiated twin jaxpr.
+
+    ``forward``: outside any differentiated remat body (the forward pass);
+    ``remat``: inside differentiated remat bodies (planned recompute plus the
+    backward's transposed heavy ops); ``remat_named``: the subset of remat
+    heavy ops whose output feeds a ``name`` tag — exactly the plan's
+    rematerialized nodes, the only ops a CSE-after-barrier backend may elide.
+    All counts are trip-aware (a heavy op in a ``scan`` body counts
+    ``length`` times).
+    """
+
+    forward: int
+    remat: int
+    remat_named: int
+
+    @property
+    def expected(self) -> int:
+        """Heavy ops a faithful compilation of the twin executes."""
+        return self.forward + self.remat
+
+
+def _named_heavy(body: Any) -> int:
+    """Heavy eqns in ``body`` whose output a ``name`` tag consumes."""
+    producer: Dict[Any, Any] = {}
+    for e in body.eqns:
+        for ov in e.outvars:
+            producer[ov] = e
+    n = 0
+    for e in body.eqns:
+        if e.primitive.name == "name":
+            src = producer.get(e.invars[0])
+            if src is not None and src.primitive.name in MATMUL_PRIMS:
+                n += 1
+    return n
+
+
+def heavy_census(closed: Any) -> HeavyCensus:
+    """Trip-aware heavy-op census of a traced value_and_grad twin."""
+    fwd = rem = named = 0
+
+    def walk(jaxpr: Any, mult: int, in_remat: bool) -> None:
+        nonlocal fwd, rem, named
+        for e in jaxpr.eqns:
+            nm = e.primitive.name
+            if nm in MATMUL_PRIMS:
+                if in_remat:
+                    rem += mult
+                else:
+                    fwd += mult
+                continue
+            if nm not in HIGHER_ORDER_PRIMS:
+                continue
+            differentiated = bool(
+                nm in ("remat2", "remat") and e.params.get("differentiated")
+            )
+            m2 = mult
+            if nm == "scan":
+                m2 = mult * max(1, int(e.params.get("length", 1)))
+            for key in INNER_JAXPR_KEYS:
+                sub = e.params.get(key)
+                if sub is None:
+                    continue
+                subs = sub if isinstance(sub, (list, tuple)) else [sub]
+                for s in subs:
+                    inner = s.jaxpr if hasattr(s, "jaxpr") else s
+                    if not hasattr(inner, "eqns"):
+                        continue
+                    if differentiated:
+                        named += _named_heavy(inner) * mult
+                    walk(inner, m2, in_remat or differentiated)
+
+    walk(closed.jaxpr, 1, False)
+    return HeavyCensus(forward=fwd, remat=rem, remat_named=named)
+
+
+def saved_residual_count(closed: Any) -> int:
+    """Saved residuals of a differentiated twin jaxpr.
+
+    The checkpoint policy lowering marks every residual it saves with an
+    identity ``reduce_precision`` whose output the differentiated ``remat``
+    equation consumes — so this count is exactly
+    |cached ∩ storable ∩ backward-live| and the number of identity
+    reduce-precision markers the StableHLO must carry.
+    """
+    jaxpr = closed.jaxpr
+    remat_ins: Set[Any] = set()
+    for e in _remat_eqns(jaxpr):
+        for iv in e.invars:
+            if not isinstance(iv, jcore.Literal):
+                remat_ins.add(iv)
+    return sum(
+        1
+        for e in jaxpr.eqns
+        if e.primitive.name == "reduce_precision"
+        and any(ov in remat_ins for ov in e.outvars)
+    )
+
+
+def drift_findings(
+    report: Report,
+    *,
+    analytic_peak: float,
+    temp_bytes: float,
+    rel: float = DRIFT_REL,
+    abs_slack: float = DRIFT_ABS_SLACK,
+    ceiling: Optional[float] = None,
+) -> str:
+    """Memory-drift gate: compare compiled temp bytes to the analytic peak.
+
+    Returns the drift status (``"ok"`` / ``"remat-elided"`` / ``"drift"``)
+    and appends the matching finding.  ``ceiling`` is the compiled *vanilla*
+    twin's temp bytes: on backends that elide remat through early barrier
+    expansion (XLA CPU), temp within the vanilla band is the documented
+    backend behavior, not planner drift — a warning, never silence.
+    """
+    band = analytic_peak * (1.0 + rel) + abs_slack
+    if temp_bytes <= band:
+        report.add(
+            "info",
+            "memory-drift-ok",
+            f"compiled temp {temp_bytes:.4g} B within the plan band "
+            f"{band:.4g} B (analytic peak {analytic_peak:.4g} B, "
+            f"rel={rel:g}, slack={abs_slack:.4g} B)",
+        )
+        return "ok"
+    if ceiling is not None and temp_bytes <= ceiling * (1.0 + rel) + abs_slack:
+        report.add(
+            "warning",
+            "memory-drift-remat-elided",
+            f"compiled temp {temp_bytes:.4g} B exceeds the plan band "
+            f"{band:.4g} B but stays within the vanilla ceiling "
+            f"{ceiling:.4g} B — this backend expands optimization_barrier "
+            "before CSE, so the planned recompute was merged back into the "
+            "forward (documented XLA-CPU behavior; the plan's savings apply "
+            "on barrier-last backends)",
+        )
+        return "remat-elided"
+    report.add(
+        "error",
+        "memory-drift",
+        f"compiled temp {temp_bytes:.4g} B exceeds the plan band "
+        f"{band:.4g} B by {temp_bytes - band:.4g} B "
+        f"(analytic peak {analytic_peak:.4g} B"
+        + (f", vanilla ceiling {ceiling:.4g} B" if ceiling is not None else "")
+        + ") — the compiled artifact does not respect the planned budget",
+    )
+    return "drift"
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    """Report plus the machine-readable drift record (one JSON row)."""
+
+    report: Report
+    drift: Dict[str, Any]
+
+
+def analyze_twin(
+    fn_grad: Callable[..., Any],
+    args: Sequence[Any],
+    *,
+    cached_tags: Set[str],
+    recompute_tags: Set[str],
+    plan_heavy_recompute: int,
+    analytic_peak: float,
+    vanilla_grad: Optional[Callable[..., Any]] = None,
+    rel: float = DRIFT_REL,
+    abs_slack: float = DRIFT_ABS_SLACK,
+) -> HloAnalysis:
+    """Run all HLO checks on an explicitly lowered value_and_grad twin.
+
+    ``fn_grad`` must be the planned twin (forward tagged with
+    ``checkpoint_name``, lowered through ``jax.checkpoint`` with the plan's
+    ``save_only_these_names`` policy); ``args`` may be concrete arrays or
+    ``ShapeDtypeStruct``s.  ``cached_tags`` / ``recompute_tags`` are the
+    plan's storable U_k and V \\ U_k tag names; ``plan_heavy_recompute`` the
+    number of heavy (dot/conv) nodes in V \\ U_k; ``analytic_peak`` the
+    plan's liveness-tight peak *in the twin's byte units*.  With
+    ``vanilla_grad`` (the unplanned twin) the drift gate gains the vanilla
+    ceiling and the record a reference compile.
+    """
+    report = Report(checker="hlo")
+    record: Dict[str, Any] = {"analytic_peak_bytes": float(analytic_peak)}
+
+    # ---- trace the twin's own differentiated jaxpr -------------------------
+    try:
+        closed = jax.make_jaxpr(fn_grad)(*args)
+    except Exception as e:
+        report.add(
+            "error",
+            "lowering-untraceable",
+            f"could not trace the planned twin: {type(e).__name__}: {e}",
+        )
+        return HloAnalysis(report, record)
+
+    all_tags: Set[str] = set()
+    _tag_names(closed.jaxpr, all_tags)
+    remats = list(_remat_eqns(closed.jaxpr))
+    if not remats:
+        report.add(
+            "error",
+            "no-remat",
+            "the differentiated trace contains no remat equation — the plan "
+            "was not lowered through jax.checkpoint at all",
+        )
+        return HloAnalysis(report, record)
+    recomputed: Set[str] = set()
+    for eqn in remats:
+        inner = eqn.params.get("jaxpr")
+        body = getattr(inner, "jaxpr", inner)
+        if body is not None and hasattr(body, "eqns"):
+            _tag_names(body, recomputed)
+
+    missing = sorted(cached_tags - all_tags)
+    if missing:
+        report.add(
+            "error",
+            "cached-tag-missing",
+            f"plan caches {missing} but the twin's trace carries no "
+            "checkpoint_name tag for them — the policy cannot save what was "
+            "never tagged, so these residuals will be silently recomputed",
+        )
+    extras = sorted(recomputed - recompute_tags)
+    if extras:
+        report.add(
+            "error",
+            "recompute-exceeds-eq1",
+            f"the twin rematerializes {extras} beyond the plan's V \\ U_k — "
+            "eq. (1) overhead accounting no longer matches the lowering",
+        )
+
+    census = heavy_census(closed)
+    record.update(
+        heavy_forward=census.forward,
+        heavy_remat=census.remat,
+        heavy_recompute_planned=census.remat_named,
+    )
+    if census.remat_named > plan_heavy_recompute:
+        report.add(
+            "error",
+            "recompute-exceeds-eq1",
+            f"the twin rematerializes {census.remat_named} heavy ops but the "
+            f"plan's recompute set V \\ U_k holds only "
+            f"{plan_heavy_recompute} heavy nodes — the compiled overhead "
+            "exceeds the plan's eq. (1) claim",
+        )
+
+    # ---- compile ------------------------------------------------------------
+    try:
+        lowered = jax.jit(fn_grad).lower(*args)
+        stable_text = lowered.as_text()
+        compiled = lowered.compile()
+        hlo_text = compiled.as_text()
+    except Exception as e:
+        report.add(
+            "error",
+            "compile-failed",
+            f"could not compile the planned twin: {type(e).__name__}: {e}",
+        )
+        return HloAnalysis(report, record)
+
+    # ---- materialization: every saved residual is a real buffer ------------
+    saved_used = saved_residual_count(closed)
+    record["saved_residuals"] = saved_used
+    if saved_used == 0 and cached_tags:
+        report.add(
+            "warning",
+            "materialization-untrackable",
+            "the trace carries no reduce_precision save markers despite a "
+            "non-empty cache set — either every cached residual is dead for "
+            "the backward, or this jax version lowers the policy "
+            "differently; buffer materialization cannot be checked",
+        )
+    else:
+        rp_stable = reduce_precision_count(stable_text)
+        rp_opt = reduce_precision_count(hlo_text)
+        record.update(rp_stablehlo=rp_stable, rp_optimized=rp_opt)
+        if rp_stable != saved_used:
+            report.add(
+                "error",
+                "cached-tensor-not-materialized",
+                f"the StableHLO carries {rp_stable} identity "
+                f"reduce_precision save markers but the jaxpr saves "
+                f"{saved_used} residuals into the backward — a cached "
+                "tensor was dropped between trace and lowering",
+            )
+        elif rp_opt < saved_used:
+            report.add(
+                "error",
+                "cached-tensor-not-materialized",
+                f"only {rp_opt} of the plan's {saved_used} saved residuals "
+                "survive in the optimized HLO as materialized buffers — "
+                "fusion/DCE ate a cached tensor",
+            )
+
+    # ---- heavy-op multiplicity vs eq. (1) ----------------------------------
+    measured = count_heavy_ops(hlo_text)
+    expected = census.expected
+    low = expected - census.remat_named
+    record.update(heavy_measured=measured, heavy_expected=expected)
+    if measured > expected:
+        report.add(
+            "error",
+            "hlo-heavy-multiplicity-mismatch",
+            f"optimized HLO executes {measured} heavy ops but the twin's "
+            f"jaxpr implies at most {expected} "
+            f"({census.forward} forward + {census.remat} in-remat) — XLA "
+            "introduced recomputation the plan never priced",
+        )
+    elif measured < low:
+        report.add(
+            "error",
+            "hlo-heavy-multiplicity-mismatch",
+            f"optimized HLO executes {measured} heavy ops, below the "
+            f"eq. (1) band [{low}, {expected}] — forward or backward heavy "
+            "work vanished, the twin no longer computes the same function",
+        )
+    elif measured < expected:
+        report.add(
+            "info",
+            "hlo-cse-elided-recompute",
+            f"optimized HLO executes {measured} of {expected} heavy ops: "
+            f"{expected - measured} planned recomputations were merged with "
+            "their forward twins (barrier-early CSE; within the eq. (1) "
+            f"band [{low}, {expected}])",
+        )
+    else:
+        report.add(
+            "info",
+            "hlo-heavy-multiplicity-ok",
+            f"optimized HLO heavy-op count {measured} equals forward + "
+            "remat exactly — eq. (1) recompute counts hold in the compiled "
+            "artifact",
+        )
+
+    # ---- memory drift -------------------------------------------------------
+    mem = compiled.memory_analysis()
+    temp = getattr(mem, "temp_size_in_bytes", None) if mem is not None else None
+    if temp is None:
+        report.add(
+            "warning",
+            "memory-analysis-unavailable",
+            "compiled.memory_analysis() returned nothing on this backend — "
+            "drift gate skipped",
+        )
+    else:
+        ceiling: Optional[float] = None
+        if vanilla_grad is not None:
+            try:
+                vcompiled = jax.jit(vanilla_grad).lower(*args).compile()
+                vmem = vcompiled.memory_analysis()
+                vtemp = getattr(vmem, "temp_size_in_bytes", None)
+                if vtemp is not None:
+                    ceiling = float(vtemp)
+                    record["vanilla_temp_bytes"] = int(vtemp)
+                    record["vanilla_heavy"] = count_heavy_ops(
+                        vcompiled.as_text()
+                    )
+            except Exception:
+                pass  # no ceiling → strict band only
+        record["temp_bytes"] = int(temp)
+        record["drift_rel"] = rel
+        record["drift_abs_slack"] = abs_slack
+        record["drift_status"] = drift_findings(
+            report,
+            analytic_peak=analytic_peak,
+            temp_bytes=float(temp),
+            rel=rel,
+            abs_slack=abs_slack,
+            ceiling=ceiling,
+        )
+
+    # ---- compiled cost (the "compiled" profile's raw numbers) ---------------
+    cost = compiled.cost_analysis()
+    if cost:
+        c = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["compiled_flops"] = float(c.get("flops", -1.0))
+        record["compiled_bytes_accessed"] = float(c.get("bytes accessed", -1.0))
+
+    if report.ok and not any(f.severity == "warning" for f in report.findings):
+        report.add(
+            "info",
+            "hlo-conformant",
+            f"compiled twin conforms: {measured} heavy ops in band, "
+            f"{saved_used} residuals materialized, temp within tolerance",
+        )
+    return HloAnalysis(report, record)
+
+
+def analyze_hlo(
+    carrier: Any,
+    plan: ExecutionPlan,
+    *,
+    rel: float = DRIFT_REL,
+    abs_slack: float = DRIFT_ABS_SLACK,
+    use_vanilla_ceiling: bool = True,
+) -> HloAnalysis:
+    """HLO checks for a ``TracedCarrier`` + plan (the front-door hook).
+
+    Lowers the plan through the ``"jaxpr"`` backend's
+    ``traced_value_and_grad``, compiles it on the current backend (post-SPMD
+    when the carrier holds a concrete mesh) and runs
+    :func:`analyze_twin` with the plan's own tag sets and analytic peak.
+    ``use_vanilla_ceiling=False`` makes the drift gate strict — no
+    remat-elision allowance — which is what corruption regression tests
+    want.
+    """
+    from ..core.lowering.carriers import TracedCarrier
+    from ..core.lowering.policy import traced_value_and_grad
+    from .effects import _storable
+
+    if not isinstance(carrier, TracedCarrier):
+        report = Report(checker="hlo")
+        report.add(
+            "info",
+            "not-applicable",
+            f"HLO analysis needs a traced carrier "
+            f"(got {type(carrier).__name__})",
+        )
+        return HloAnalysis(report, {})
+
+    names = carrier.node_names()
+    jg = carrier.jg
+    recompute = set(range(len(names))) - set(plan.cached)
+    cached_tags = {
+        names[v] for v in plan.cached if _storable(jg.eqns[v])
+    }
+    recompute_tags = {
+        names[v] for v in recompute if _storable(jg.eqns[v])
+    }
+    plan_heavy = sum(
+        1 for v in recompute if jg.eqns[v].primitive.name in MATMUL_PRIMS
+    )
+
+    flat = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in carrier.flat_avals]
+    args = jax.tree_util.tree_unflatten(carrier.in_tree, flat)
+    fn_grad = traced_value_and_grad(carrier, plan)
+    vanilla = None
+    if use_vanilla_ceiling:
+        vanilla = jax.value_and_grad(carrier.fn, argnums=carrier.argnums)
+    return analyze_twin(
+        fn_grad,
+        args,
+        cached_tags=cached_tags,
+        recompute_tags=recompute_tags,
+        plan_heavy_recompute=plan_heavy,
+        analytic_peak=plan.peak_memory,
+        vanilla_grad=vanilla,
+        rel=rel,
+        abs_slack=abs_slack,
+    )
+
+
+def check_hlo(
+    carrier: Any,
+    plan: ExecutionPlan,
+    *,
+    rel: float = DRIFT_REL,
+    abs_slack: float = DRIFT_ABS_SLACK,
+    use_vanilla_ceiling: bool = True,
+) -> Report:
+    """Report-only wrapper over :func:`analyze_hlo` (same contract)."""
+    return analyze_hlo(
+        carrier,
+        plan,
+        rel=rel,
+        abs_slack=abs_slack,
+        use_vanilla_ceiling=use_vanilla_ceiling,
+    ).report
+
+
+# ---------------------------------------------------------------------------
+# Compiled cost extraction (checker 3's raw numbers).
+# ---------------------------------------------------------------------------
+
+
+def extract_segment_costs(
+    carrier: Any, plan: ExecutionPlan
+) -> List[Dict[str, float]]:
+    """XLA ``cost_analysis()`` FLOPs / bytes-accessed per plan segment.
+
+    Each segment's equations are evaluated as a standalone jit whose inputs
+    are the values crossing into the segment; XLA compiles and prices it in
+    isolation.  The result feeds
+    ``core.cost_model.compiled_calibrated_graph``, which distributes each
+    segment's roofline seconds over its nodes proportionally to their
+    analytic FLOPs — compiler truth at segment granularity, analytic ratios
+    within.
+    """
+    closed = carrier.closed
+    jaxpr = closed.jaxpr
+    const_map = dict(zip(jaxpr.constvars, closed.consts))
+    out: List[Dict[str, float]] = []
+    for seg in plan.segments:
+        eqns = [jaxpr.eqns[v] for v in seg.nodes]
+        produced = {ov for e in eqns for ov in e.outvars}
+        ins: List[Any] = []
+        seen: Set[Any] = set()
+        for e in eqns:
+            for iv in e.invars:
+                if (
+                    isinstance(iv, jcore.Literal)
+                    or iv in produced
+                    or iv in seen
+                    or iv in const_map
+                ):
+                    continue
+                seen.add(iv)
+                ins.append(iv)
+
+        def run(*vals: Any, _eqns: Any = eqns, _ins: Any = ins) -> Any:
+            env: Dict[Any, Any] = dict(const_map)
+            env.update(zip(_ins, vals))
+
+            def read(v: Any) -> Any:
+                return v.val if isinstance(v, jcore.Literal) else env[v]
+
+            for e in _eqns:
+                res = e.primitive.bind(
+                    *[read(iv) for iv in e.invars], **e.params
+                )
+                outs = res if e.primitive.multiple_results else [res]
+                for ov, val in zip(e.outvars, outs):
+                    env[ov] = val
+            return [
+                env[ov]
+                for e in _eqns
+                for ov in e.outvars
+                if type(ov).__name__ != "DropVar"
+            ]
+
+        avals = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype) for v in ins]
+        compiled = jax.jit(run).lower(*avals).compile()
+        cost = compiled.cost_analysis()
+        c: Any = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+        out.append(
+            {
+                "flops": float(c.get("flops", 0.0)),
+                "bytes": float(c.get("bytes accessed", 0.0)),
+            }
+        )
+    return out
+
+
+__all__: Tuple[str, ...] = (
+    "HEAVY_NODE_KINDS",
+    "HeavyCensus",
+    "HloAnalysis",
+    "analyze_hlo",
+    "analyze_twin",
+    "check_hlo",
+    "drift_findings",
+    "extract_segment_costs",
+    "heavy_census",
+    "saved_residual_count",
+)

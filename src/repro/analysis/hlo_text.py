@@ -1,0 +1,273 @@
+"""Textual HLO / StableHLO parsing shared by the dry-run and the HLO checkers.
+
+XLA's compiled artifacts are exposed to Python as *text* (``lowered.as_text()``
+is StableHLO, ``compiled.as_text()`` is post-optimization HLO); this module is
+the one place that text is parsed.  It grew out of ``launch/dryrun.py``'s
+collective-bytes accounting and now also serves ``analysis.hlo``:
+
+* :func:`split_computations` — module text → per-computation instruction lines
+  (plus the ``"__entry__"`` marker);
+* :func:`computation_multipliers` — trip-count-aware execution multiplier per
+  computation: a while body (``jax.lax.scan`` lowers to while) executes once
+  per iteration, read from its condition's compare constant, and the caller
+  chain (``calls=`` / ``to_apply=`` / ``condition=`` / ``body=`` /
+  ``branch_computations=``) propagates multipliers into fusions and nested
+  loops;
+* :func:`collective_bytes` — per-chip collective byte totals (the dry-run's
+  roofline input);
+* :func:`count_ops` / :func:`count_heavy_ops` — trip-aware instruction counts
+  (the remat-conformance checker's heavy-op multiplicity);
+* :func:`reduce_precision_count` — identity-format ``reduce-precision`` ops,
+  the marker ``jax.checkpoint``'s ``save_only_these_names`` policy leaves on
+  every saved residual (both HLO and StableHLO spellings).
+
+Pure stdlib — no jax import — so it stays cheap to unit-test and safe to use
+from the lint CLI before any backend initializes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+DTYPE_BYTES: Dict[str, int] = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES: Tuple[str, ...] = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+#: dot/conv instruction spellings in post-optimization HLO.  ``custom-call``
+#: is matched only when its target names a matmul/conv library routine (see
+#: ``_HEAVY_TARGET``), so plain host callbacks never count as heavy.
+HEAVY_OPCODES: Tuple[str, ...] = ("dot", "convolution")
+
+_HEAVY_TARGET = re.compile(r"(dot|conv|gemm|matmul)", re.IGNORECASE)
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLSITE_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+# reduce-precision spellings.  HLO text puts the attributes after the operand
+# list; StableHLO encodes them as ``format = e<exp>m<man>``.
+_RP_HLO_RE = re.compile(
+    r"reduce-precision\(.*?\),.*?exponent_bits=(\d+),\s*mantissa_bits=(\d+)"
+)
+_RP_STABLE_RE = re.compile(r"stablehlo\.reduce_precision.*?e(\d+)m(\d+)")
+
+#: (exponent_bits, mantissa_bits) pairs that change no bits for their dtype —
+#: the identity ``reduce_precision`` jax's checkpoint policy uses as a
+#: save-this-residual marker (f32, f16, bf16, f64).
+IDENTITY_EM: Set[Tuple[int, int]] = {(8, 23), (5, 10), (8, 7), (11, 52)}
+
+
+def shape_bytes(tok: str) -> int:
+    """Byte size of one HLO shape token like ``f32[8,128]`` (0 if unparsable)."""
+    m = SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dt]
+
+
+def split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Module text → {computation name: instruction lines}.
+
+    The entry computation's name is additionally stored under the
+    ``"__entry__"`` key (as a single-element list), matching the historical
+    dry-run contract.
+    """
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line)
+        if m and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    comps["__entry__"] = [entry]  # type: ignore[list-item]
+    return comps
+
+
+def _body_trips(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """while body name → trip count (from the condition's compare constant)."""
+    trips: Dict[str, int] = {}
+    for lines in comps.values():
+        for s in lines:
+            m = _WHILE_RE.search(s)
+            if m:
+                cond, body = m.groups()
+                consts = [
+                    int(c)
+                    for c in _CONST_RE.findall("\n".join(comps.get(cond, [])))
+                ]
+                trips[body] = max(consts) if consts else 1
+    return trips
+
+
+def computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """Execution-count multiplier per computation.
+
+    A while body runs ``trip`` times per execution of its caller; every other
+    callee (fusion ``calls=``, reducer ``to_apply=``, loop ``condition=``,
+    ``branch_computations=``) runs once per caller execution.  Multipliers
+    compose down the (acyclic) caller chain, so a fusion inside a scan body
+    inherits the trip count — the piece a flat instruction sum drops.
+    """
+    trips = _body_trips(comps)
+    parents: Dict[str, str] = {}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for s in lines:
+            for callee in _CALLSITE_RE.findall(s):
+                if callee in comps:
+                    parents.setdefault(callee, name)
+            m = _BRANCHES_RE.search(s)
+            if m:
+                for tok in m.group(1).split(","):
+                    callee = tok.strip().lstrip("%")
+                    if callee in comps:
+                        parents.setdefault(callee, name)
+
+    def multiplier(name: str, seen: Optional[Set[str]] = None) -> int:
+        seen = seen or set()
+        if name in seen:
+            return 1
+        seen.add(name)
+        parent = parents.get(name)
+        if parent is None:
+            return trips.get(name, 1)
+        return trips.get(name, 1) * multiplier(parent, seen)
+
+    return {
+        name: multiplier(name) for name in comps if name != "__entry__"
+    }
+
+
+def count_ops(hlo_text: str, opcode: str) -> int:
+    """Trip-count-aware occurrences of `` opcode(`` across all computations."""
+    comps = split_computations(hlo_text)
+    comps.pop("__entry__", None)
+    mults = computation_multipliers(comps)
+    total = 0
+    needle = f" {opcode}("
+    for name, lines in comps.items():
+        mult = mults.get(name, 1)
+        for s in lines:
+            if needle in s:
+                total += mult
+    return total
+
+
+def count_heavy_ops(hlo_text: str) -> int:
+    """Trip-aware count of dot/conv work in an HLO module.
+
+    ``dot`` + ``convolution`` instructions, plus ``custom-call``s whose
+    target names a matmul/conv library routine (oneDNN, cuBLAS, cuDNN
+    spellings all match ``_HEAVY_TARGET``).
+    """
+    comps = split_computations(hlo_text)
+    comps.pop("__entry__", None)
+    mults = computation_multipliers(comps)
+    total = 0
+    needles = tuple(f" {op}(" for op in HEAVY_OPCODES)
+    for name, lines in comps.items():
+        mult = mults.get(name, 1)
+        for s in lines:
+            if any(nd in s for nd in needles):
+                total += mult
+            elif " custom-call(" in s and "custom_call_target=" in s:
+                target = s.split("custom_call_target=", 1)[1]
+                if _HEAVY_TARGET.search(target.split(",", 1)[0]):
+                    total += mult
+    return total
+
+
+def reduce_precision_count(text: str) -> int:
+    """Identity-format ``reduce_precision`` ops in HLO or StableHLO text.
+
+    jax's ``save_only_these_names`` checkpoint policy marks every saved
+    residual with a bit-identical ``reduce_precision`` (e.g. f32 → e8m23);
+    counting only :data:`IDENTITY_EM` formats keeps genuine user-requested
+    precision reductions out of the materialization census.  HLO counts are
+    trip-aware; StableHLO modules are flat single functions and counted flat.
+    """
+    total = 0
+    if "stablehlo" in text:
+        for m in _RP_STABLE_RE.finditer(text):
+            if (int(m.group(1)), int(m.group(2))) in IDENTITY_EM:
+                total += 1
+        return total
+    comps = split_computations(text)
+    comps.pop("__entry__", None)
+    mults = computation_multipliers(comps)
+    for name, lines in comps.items():
+        mult = mults.get(name, 1)
+        for s in lines:
+            m = _RP_HLO_RE.search(s)
+            if m and (int(m.group(1)), int(m.group(2))) in IDENTITY_EM:
+                total += mult
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-chip collective bytes from the post-SPMD HLO, **trip-count aware**.
+
+    Collectives inside while bodies (jax.lax.scan lowers to while) execute
+    once per iteration; a flat instruction sum undercounts them by the trip
+    count.  Shapes in the partitioned module are already per-device.
+    """
+    comps = split_computations(hlo_text)
+    comps.pop("__entry__", None)
+    mults = computation_multipliers(comps)
+
+    per_op: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    static_counts: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for name, lines in comps.items():
+        mult = mults.get(name, 1)
+        for s in lines:
+            for coll in COLLECTIVES:
+                if f" {coll}(" not in s and f" {coll}-start(" not in s:
+                    continue
+                head = s.split(f" {coll}", 1)[0]
+                nbytes = sum(
+                    shape_bytes(m.group(0)) for m in SHAPE_RE.finditer(head)
+                )
+                per_op[coll] += nbytes * mult
+                counts[coll] += mult
+                static_counts[coll] += 1
+                break
+    total = sum(per_op.values())
+    return {
+        "bytes_per_chip": per_op,
+        "dynamic_counts": counts,
+        "static_counts": static_counts,
+        "total_bytes_per_chip": total,
+    }

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 from .dp import quantize_times
 from .graph import Graph, Node
@@ -63,9 +63,17 @@ class OpProfile:
     sec_per_byte_elementwise: float
     backend: str = "unknown"
     jax_version: str = "unknown"
+    #: Where the rates came from: "measured" (microbenchmarks, the default),
+    #: "analytic" (DEFAULT_PROFILE's roofline constants), or "compiled"
+    #: (XLA cost_analysis per-segment numbers, see
+    #: ``compiled_calibrated_graph``).  Non-measured sources are suffixed
+    #: into ``profile_key`` so differently-sourced calibrations never share
+    #: a cache identity.
+    source: str = "measured"
 
     def profile_key(self) -> str:
-        return f"{self.backend}-{self.jax_version}-v{PROFILE_VERSION}"
+        base = f"{self.backend}-{self.jax_version}-v{PROFILE_VERSION}"
+        return base if self.source == "measured" else f"{base}-{self.source}"
 
 
 #: Analytical fallback (rough TPU-v5e-class numbers) used when profiling is
@@ -76,6 +84,7 @@ DEFAULT_PROFILE = OpProfile(
     sec_per_byte_elementwise=1.0 / 500e9,
     backend="analytic",
     jax_version="-",
+    source="analytic",
 )
 
 
@@ -197,6 +206,7 @@ def load_or_profile(
                     sec_per_byte_elementwise=float(raw["sec_per_byte_elementwise"]),
                     backend=str(raw["backend"]),
                     jax_version=str(raw["jax_version"]),
+                    source=str(raw.get("source", "measured")),
                 )
             except (KeyError, TypeError, ValueError):
                 pass  # torn/stale file → re-profile
@@ -240,7 +250,8 @@ def measured_times(g: Graph, profile: OpProfile) -> Graph:
              must_store=nd.must_store)
         for nd in g.nodes
     ]
-    return Graph(nodes, g.edges)
+    return Graph(nodes, g.edges,
+                 cost_source=f"profile:{profile.profile_key()}")
 
 
 def calibrated_graph(g: Graph, profile: OpProfile, levels: int = 64) -> Graph:
@@ -250,3 +261,58 @@ def calibrated_graph(g: Graph, profile: OpProfile, levels: int = 64) -> Graph:
     output contract (small positive integer ``T_v``), hardware-true ratios.
     """
     return quantize_times(measured_times(g, profile), levels=levels)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-cost calibration (XLA cost_analysis instead of microbenchmarks).
+# ---------------------------------------------------------------------------
+
+
+def roofline_seconds(flops: float, nbytes: float, profile: OpProfile) -> float:
+    """Roofline wall-clock estimate: max of compute and memory time."""
+    return max(
+        flops * profile.sec_per_flop_matmul,
+        nbytes * profile.sec_per_byte_elementwise,
+        1e-12,
+    )
+
+
+def compiled_calibrated_graph(
+    g: Graph,
+    plan: Any,
+    seg_costs: Sequence[Dict[str, float]],
+    profile: Optional[OpProfile] = None,
+    levels: int = 64,
+) -> Graph:
+    """Re-price ``T_v`` from XLA's own per-segment FLOPs / bytes-accessed.
+
+    ``seg_costs`` is ``analysis.hlo.extract_segment_costs`` output: one
+    ``{"flops", "bytes"}`` dict per ``plan.segments`` entry, measured by
+    compiling each segment's sub-jaxpr in isolation and asking
+    ``compiled.cost_analysis()`` — compiler truth after fusion and
+    simplification, which analytic FLOP counting cannot see.  Each segment's
+    roofline seconds are distributed over its nodes proportionally to their
+    analytic ``T_v`` (compiler truth at segment granularity, analytic ratios
+    within), then quantized for the DP.  The result carries
+    ``cost_source="compiled:<profile key>"`` so compiled-calibrated plans
+    never collide with flops- or microbenchmark-priced ones in the plan
+    cache.
+    """
+    if profile is None:
+        profile = dataclasses.replace(DEFAULT_PROFILE, source="compiled")
+    secs = list(g.time_v)
+    for seg, cost in zip(plan.segments, seg_costs):
+        seg_sec = roofline_seconds(
+            float(cost.get("flops", 0.0)), float(cost.get("bytes", 0.0)), profile
+        )
+        total = sum(g.time_v[v] for v in seg.nodes) or 1.0
+        for v in seg.nodes:
+            secs[v] = max(seg_sec * (g.time_v[v] / total), 1e-12)
+    nodes = [
+        Node(nd.idx, nd.name, secs[nd.idx], nd.memory, nd.kind,
+             must_store=nd.must_store)
+        for nd in g.nodes
+    ]
+    priced = Graph(nodes, g.edges,
+                   cost_source=f"compiled:{profile.profile_key()}")
+    return quantize_times(priced, levels=levels)

@@ -1164,4 +1164,4 @@ def quantize_times(g: Graph, levels: int = 64) -> Graph:
         )
         for nd in g.nodes
     ]
-    return Graph(nodes, g.edges)
+    return Graph(nodes, g.edges, cost_source=getattr(g, "cost_source", ""))

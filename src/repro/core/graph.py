@@ -90,7 +90,19 @@ class Graph:
     compute ``w``.
     """
 
-    def __init__(self, nodes: Sequence[Node], edges: Iterable[Tuple[int, int]]):
+    def __init__(
+        self,
+        nodes: Sequence[Node],
+        edges: Iterable[Tuple[int, int]],
+        cost_source: str = "",
+    ):
+        #: Provenance of the ``T_v`` values ("" = analytic / paper costs,
+        #: ``"profile:<key>"`` = microbenchmark-calibrated,
+        #: ``"compiled:<key>"`` = XLA cost_analysis-calibrated).  Non-empty
+        #: sources are hashed into ``graph_digest`` so plans priced under
+        #: different cost models never alias in the plan cache, even when the
+        #: quantized T_v happen to coincide.
+        self.cost_source: str = cost_source
         self.nodes: List[Node] = list(nodes)
         n = len(self.nodes)
         for i, node in enumerate(self.nodes):
@@ -358,6 +370,8 @@ def canonical_order(g: Graph, cost_sig: int = 12) -> List[int]:
 
     digest = hashlib.sha256()
     digest.update(f"G|{g.n}|{len(g.edges)}".encode())
+    if getattr(g, "cost_source", ""):
+        digest.update(_h("cost_source", g.cost_source))
     for i, v in enumerate(order):
         nd = g.nodes[v]
         preds = sorted(pos[p] for p in g.pred[v])

@@ -63,6 +63,7 @@ class PlannedFunction:
         in_shardings: Any = None,
         analyze_effects: bool = False,
         verify: bool = False,
+        verify_hlo: bool = False,
     ):
         self.fn = fn
         self.budget = budget
@@ -78,9 +79,17 @@ class PlannedFunction:
         self.in_shardings = in_shardings
         self.analyze_effects = analyze_effects
         self.verify = verify
+        self.verify_hlo = verify_hlo
         self._memo: Dict[Tuple, LoweredPlan] = {}
 
     # ------------------------------------------------------------------ plan
+
+    @property
+    def _trace_cost_model(self) -> str:
+        # "compiled" calibration is a re-pricing step *after* a pilot plan
+        # exists (extract_segment_costs needs segments); the trace itself is
+        # priced analytically by FLOPs and re-priced in lowered_for.
+        return "flops" if self.cost_model == "compiled" else self.cost_model
 
     def _carrier_for(self, args) -> Any:
         fn = self.fn
@@ -117,17 +126,17 @@ class PlannedFunction:
 
                 return TracedCarrier.trace(
                     bg_loss, (abstract(args[0]), abstract(args[1])),
-                    argnums=0, cost_model=self.cost_model,
+                    argnums=0, cost_model=self._trace_cost_model,
                     mesh=self.mesh, in_shardings=self.in_shardings,
                     analyze_effects=self.analyze_effects,
                 )
             return BlockGraphCarrier(
                 bg=fn, loss_fn=self.loss_fn, params=abstract(args[0]),
-                inputs=abstract(args[1]), cost_model=self.cost_model,
+                inputs=abstract(args[1]), cost_model=self._trace_cost_model,
                 mesh=self.mesh,
             )
         return TracedCarrier.trace(
-            fn, args, argnums=self.argnums, cost_model=self.cost_model,
+            fn, args, argnums=self.argnums, cost_model=self._trace_cost_model,
             mesh=self.mesh, in_shardings=self.in_shardings,
             analyze_effects=self.analyze_effects,
         )
@@ -153,7 +162,39 @@ class PlannedFunction:
                 f"no feasible strategy for budget {self.budget!r} "
                 f"({self.method}/{self.objective}){hint}"
             )
-        if self.verify:
+        if self.cost_model == "compiled" and getattr(carrier, "jg", None):
+            # Two-phase compiled calibration: the pilot plan above (FLOP
+            # priced) defines segments; XLA prices each segment's compiled
+            # sub-jaxpr, the graph is re-priced from those numbers (with the
+            # "compiled" source hashed into its digest) and the DP re-runs.
+            import jax as _jax
+
+            from repro.analysis.hlo import extract_segment_costs
+
+            from ..cost_model import DEFAULT_PROFILE, compiled_calibrated_graph
+
+            profile = dataclasses.replace(
+                DEFAULT_PROFILE,
+                backend=_jax.default_backend(),
+                jax_version=_jax.__version__,
+                source="compiled",
+            )
+            seg_costs = extract_segment_costs(carrier, report.plan)
+            g = compiled_calibrated_graph(g, report.plan, seg_costs, profile)
+            report = pl.plan(g, self.budget, self.method, self.objective)
+            if report.plan is None:
+                raise InfeasibleBudgetError(
+                    f"budget {self.budget!r} became infeasible after "
+                    "compiled-cost recalibration"
+                )
+        import os
+
+        env_verify = os.environ.get("REPRO_VERIFY_PLANS", "")
+        do_verify = self.verify or bool(env_verify)
+        do_verify_hlo = (
+            self.verify_hlo or env_verify.strip().lower() == "hlo"
+        )
+        if do_verify:
             from repro import analysis
             from repro.analysis.report import PlanVerificationError
 
@@ -164,6 +205,13 @@ class PlannedFunction:
             )
             if not vrep.ok:
                 raise PlanVerificationError(str(vrep))
+        if do_verify_hlo:
+            from repro.analysis.hlo import check_hlo
+            from repro.analysis.report import PlanVerificationError
+
+            hrep = check_hlo(carrier, report.plan)
+            if not hrep.ok:
+                raise PlanVerificationError(str(hrep))
         backend = resolve_backend(self.backend, carrier)
         run = backend.lower(carrier, report.plan, track_live=self.track_live)
         lowered = LoweredPlan(
@@ -193,6 +241,7 @@ def plan_function(
     in_shardings: Any = None,
     analyze_effects: bool = False,
     verify: bool = False,
+    verify_hlo: bool = False,
 ) -> PlannedFunction:
     """Plan ``fn``'s recomputation under ``budget`` bytes; return its
     value_and_grad twin.
@@ -251,6 +300,23 @@ def plan_function(
         overhead, per-device ``M_v``) and raise
         :class:`~repro.analysis.report.PlanVerificationError` on any error
         finding before the plan is lowered.
+    verify_hlo:
+        Additionally run the compiler-truth checks (``analysis.check_hlo``)
+        on the compiled planned twin: heavy-op multiplicity vs. the plan's
+        eq. (1) recompute counts, materialization of every cached residual
+        in the optimized HLO, and the memory-drift gate against
+        ``compiled.memory_analysis()``.  Traced carriers only (BlockGraph
+        carriers report ``not-applicable``).
+
+    The ``REPRO_VERIFY_PLANS`` environment variable overrides both flags at
+    the launch layer: any truthy value enables ``verify``; the value
+    ``"hlo"`` enables ``verify`` *and* ``verify_hlo``.
+
+    ``cost_model="compiled"`` selects two-phase planning: a FLOP-priced
+    pilot plan defines segments, XLA's ``cost_analysis()`` prices each
+    segment's compiled sub-jaxpr, and the DP re-runs on the re-priced graph
+    (whose digest carries the ``compiled:`` cost source, so such plans
+    never alias flops-priced cache entries).
     """
     if track_live and backend == "auto":
         backend = "interpreter"
@@ -260,6 +326,7 @@ def plan_function(
         loss_fn=loss_fn, planner=planner, track_live=track_live,
         mesh=mesh, in_shardings=in_shardings,
         analyze_effects=analyze_effects, verify=verify,
+        verify_hlo=verify_hlo,
     )
 
 

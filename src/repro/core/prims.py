@@ -86,11 +86,16 @@ PRNG_PRIMS = frozenset({
 #: Primitives whose backward rule is user-defined: the remat twin replays
 #: their forward, but nothing structural proves the replay agrees with the
 #: residuals the custom VJP expects — effect analysis treats them as opaque
-#: and pins their (storable) outputs.
+#: and pins their (storable) outputs.  ``pallas_call`` belongs here too:
+#: a hand-written kernel (e.g. ``kernels/flash_attention.py``) is a black
+#: box to the taint walker — it may carry scratch semantics, input aliasing
+#: or nondeterministic reductions the jaxpr does not expose, so its outputs
+#: must be pinned rather than silently treated as pure.
 OPAQUE_PRIMS = frozenset({
     "custom_vjp_call",
     "custom_vjp_call_jaxpr",
     "custom_lin",
+    "pallas_call",
 })
 
 #: ``eqn.params`` keys the *effect walker* recurses into — the FLOP

@@ -29,7 +29,6 @@ Usage:
 
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
@@ -37,121 +36,17 @@ from typing import Any, Dict, Optional
 
 import jax
 
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-_COLLECTIVES = (
-    "all-gather",
-    "all-reduce",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
+# HLO text parsing lives in repro.analysis.hlo_text (shared with the
+# compiler-truth checkers); the historical underscore names stay as aliases
+# for existing callers of the dry-run module.
+from repro.analysis.hlo_text import (
+    COLLECTIVES as _COLLECTIVES,  # noqa: F401  (re-exported alias)
+    DTYPE_BYTES as _DTYPE_BYTES,  # noqa: F401
+    SHAPE_RE as _SHAPE_RE,  # noqa: F401
+    collective_bytes,
+    shape_bytes as _shape_bytes,  # noqa: F401
+    split_computations as _split_computations,  # noqa: F401
 )
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
-
-def _shape_bytes(tok: str) -> int:
-    m = _SHAPE_RE.match(tok)
-    if not m:
-        return 0
-    dt, dims = m.groups()
-    if dt not in _DTYPE_BYTES:
-        return 0
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES[dt]
-
-
-_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
-_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
-_CONST_RE = re.compile(r"constant\((\d+)\)")
-
-
-def _split_computations(hlo_text: str) -> Dict[str, list]:
-    comps: Dict[str, list] = {}
-    cur: Optional[str] = None
-    entry: Optional[str] = None
-    for line in hlo_text.splitlines():
-        m = _COMP_HEAD_RE.match(line)
-        if m and (line.startswith("%") or line.startswith("ENTRY")):
-            cur = m.group(1)
-            comps[cur] = []
-            if line.startswith("ENTRY"):
-                entry = cur
-            continue
-        if line.startswith("}"):
-            cur = None
-            continue
-        if cur is not None:
-            comps[cur].append(line.strip())
-    comps["__entry__"] = [entry]  # type: ignore[list-item]
-    return comps
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, Any]:
-    """Per-chip collective bytes from the post-SPMD HLO, **trip-count aware**.
-
-    Collectives inside while bodies (jax.lax.scan lowers to while) execute
-    once per iteration; a flat instruction sum undercounts them by the trip
-    count.  We split the module into computations, read each while's trip
-    count from its condition's compare constant, and multiply bytes through
-    the (possibly nested) body chain.  Shapes in the partitioned module are
-    already per-device.
-    """
-    comps = _split_computations(hlo_text)
-    entry = comps.pop("__entry__")[0]
-
-    # while body -> (cond, parent computation)
-    body_info: Dict[str, Dict[str, Any]] = {}
-    for name, lines in comps.items():
-        for s in lines:
-            m = _WHILE_RE.search(s)
-            if m:
-                cond, body = m.groups()
-                consts = [int(c) for c in _CONST_RE.findall("\n".join(comps.get(cond, [])))]
-                body_info[body] = {"parent": name, "trip": max(consts) if consts else 1}
-
-    def multiplier(name: str, _seen=None) -> int:
-        _seen = _seen or set()
-        if name in _seen:
-            return 1
-        _seen.add(name)
-        info = body_info.get(name)
-        if info is None:
-            return 1
-        return info["trip"] * multiplier(info["parent"], _seen)
-
-    per_op: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
-    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
-    static_counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
-    for name, lines in comps.items():
-        mult = multiplier(name)
-        for s in lines:
-            for coll in _COLLECTIVES:
-                if f" {coll}(" not in s and f" {coll}-start(" not in s:
-                    continue
-                head = s.split(f" {coll}", 1)[0]
-                nbytes = sum(
-                    _shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(head)
-                )
-                per_op[coll] += nbytes * mult
-                counts[coll] += mult
-                static_counts[coll] += 1
-                break
-    total = sum(per_op.values())
-    return {
-        "bytes_per_chip": per_op,
-        "dynamic_counts": counts,
-        "static_counts": static_counts,
-        "total_bytes_per_chip": total,
-    }
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,

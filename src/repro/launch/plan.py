@@ -377,6 +377,12 @@ def _maybe_verify(g: Graph, res: DPResult, budget: float) -> None:
     a launcher an unsound schedule.  Off by default: the checks are cheap
     (linear in segments) but this path sits under dry-run sweeps that call
     it thousands of times.
+
+    The stronger ``REPRO_VERIFY_PLANS=hlo`` level (compiler-truth checks,
+    ``analysis.check_hlo``) applies at the ``plan_function`` front door,
+    where a traced carrier exists to compile; the launch chain graphs here
+    have no compiled twin, so any truthy value — including ``hlo`` — runs
+    the static verifier only.
     """
     if not os.environ.get("REPRO_VERIFY_PLANS"):
         return

@@ -16,12 +16,20 @@ Beyond the paper, this also benchmarks the budget-sweep engine
   vs the retired §5.1 binary search — must agree within the search's
   tolerance (the exact value is ≤ the search's, and itself feasible).
 
-``--smoke`` runs a trimmed network set and *asserts* the regression
+Since ISSUE 8 it also gates the vectorized-DP fleet targets: EVERY
+benchmark net (densenet161 included) must plan cold in < 5 s (fresh
+process: family + exact min budget + solve) and warm in < 10 ms (aux +
+decoded-LRU hits) through the Planner front door — ~10× over the ~50 s
+scalar-era cold solve.  The cold number is a min-of-2 and warm a
+min-of-3, so the gates measure the solver, not machine noise.
+
+``--smoke`` runs a trimmed network set for the sweep/paper sections (the
+cold/warm gates always cover all nets) and *asserts* the regression
 guards (exit code 1 on violation) — wired into CI so DP-speed or
 bit-identity regressions fail the build instead of landing silently.
 Every run also writes ``BENCH_dp_runtime.json`` (sweep-vs-loop state
-counts, plan-cache cold/warm timings) — CI uploads it per commit so the
-perf trajectory is tracked across PRs.
+counts, per-net cold/warm planning walls, plan-cache hit timings) — CI
+uploads it per commit so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -31,7 +39,7 @@ import sys
 import time
 from typing import Dict
 
-from repro.core import approx_dp, exact_dp, min_feasible_budget
+from repro.core import PlanCache, Planner, approx_dp, exact_dp, min_feasible_budget
 from repro.core import dp as dp_mod
 from repro.core.planner import _min_feasible_budget_uncached
 from repro.core.lower_sets import all_lower_sets, count_lower_sets, pruned_lower_sets
@@ -43,6 +51,78 @@ GRID_POINTS = 8
 GRID_SPAN = 3.0  # grid covers [B_min, (1 + GRID_SPAN) · B_min]
 MAX_SWEEP_STATES = 20_000_000  # ≈ Planner's fallback threshold
 SMOKE_NETS = ("vgg19", "unet")
+# ISSUE-8 fleet gates: every net plans cold under this (vectorized DP), and
+# a warm repeat is a decoded-LRU lookup.  Cold is min-of-2 fresh runs and
+# warm min-of-3 repeats, so one scheduler hiccup can't fail CI.
+COLD_PLAN_BUDGET_S = 5.0
+WARM_PLAN_BUDGET_S = 0.010
+
+
+def plan_rows(nets) -> Dict[str, Dict]:
+    """Per-net cold/warm planning wall clock through the Planner front door.
+
+    Cold = fresh graph + fresh Planner + empty PlanCache: family
+    enumeration, exact min-feasible budget, and the budget solve — the
+    full price a first-ever process pays.  Warm = the same two queries
+    repeated on the live planner: aux + decoded-LRU hits.  min-of-2 /
+    min-of-3 respectively, so the gates measure the code, not the
+    machine's noise floor.
+    """
+    print("\n== Planner cold/warm wall clock (ISSUE-8 fleet gates) ==")
+    print(f"{'network':12s} {'cold_s':>8s} {'warm_ms':>9s} {'identical':>9s}")
+    out: Dict[str, Dict] = {}
+    for name in nets:
+        cold = None
+        for _ in range(2):
+            g = NETWORKS[name]()  # fresh object: no memoized digest/liveness
+            planner = Planner(cache=PlanCache())  # empty tiers
+            t0 = time.perf_counter()
+            B = planner.min_feasible_budget(g, "approx_dp")
+            res = planner.solve(g, B, "approx_dp")
+            dt = time.perf_counter() - t0
+            cold = dt if cold is None else min(cold, dt)
+        warm = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            B2 = planner.min_feasible_budget(g, "approx_dp")
+            res2 = planner.solve(g, B2, "approx_dp")
+            dt = time.perf_counter() - t0
+            warm = dt if warm is None else min(warm, dt)
+        identical = (
+            B2 == B
+            and res2.sequence == res.sequence
+            and res2.overhead == res.overhead
+            and res2.peak_memory == res.peak_memory
+        )
+        out[name] = {
+            "cold_s": cold,
+            "warm_s": warm,
+            "feasible": bool(res.feasible),
+            "identical": identical,
+        }
+        print(f"{name:12s} {cold:8.2f} {warm * 1e3:9.3f} {str(identical):>9s}")
+    return out
+
+
+def check_plan_rows(rows: Dict[str, Dict]) -> list:
+    """The cold < 5 s / warm < 10 ms fleet gates, per net."""
+    failures = []
+    for name, r in rows.items():
+        if not r["feasible"]:
+            failures.append(f"{name}: min-feasible-budget plan infeasible")
+        if not r["identical"]:
+            failures.append(f"{name}: warm plan not identical to cold plan")
+        if r["cold_s"] >= COLD_PLAN_BUDGET_S:
+            failures.append(
+                f"{name}: cold plan {r['cold_s']:.2f}s >= "
+                f"{COLD_PLAN_BUDGET_S:.0f}s budget"
+            )
+        if r["warm_s"] >= WARM_PLAN_BUDGET_S:
+            failures.append(
+                f"{name}: warm plan {r['warm_s'] * 1e3:.2f}ms >= "
+                f"{WARM_PLAN_BUDGET_S * 1e3:.0f}ms budget"
+            )
+    return failures
 
 
 def sweep_rows(nets) -> Dict[str, Dict]:
@@ -285,6 +365,11 @@ def main(smoke: bool = False,
         "vgg19", "unet", "resnet50", "googlenet")
     out = {"paper": paper_rows(nets), "sweep": sweep_rows(sweep_nets)}
     failures = check_sweep(out["sweep"])
+    # the ISSUE-8 cold/warm fleet gates cover ALL nets, smoke included —
+    # densenet161's ~50 s scalar-era cold solve is exactly the regression
+    # this guard exists to catch
+    out["plan"] = plan_rows(tuple(NETWORKS))
+    failures += check_plan_rows(out["plan"])
     pf_failures, pf_record = check_plan_function()
     failures += pf_failures
     out["plan_function"] = pf_record
@@ -298,6 +383,7 @@ def main(smoke: bool = False,
             "failures": failures,
             "paper": out["paper"],
             "sweep": out["sweep"],
+            "plan": out["plan"],
             "plan_function": pf_record,
         }
         with open(out_json, "w") as f:
@@ -312,8 +398,10 @@ def main(smoke: bool = False,
     elif smoke:
         print("\nsmoke OK: sweep grids bit-identical, within 2x of the "
               "per-budget loop's DP work; exact min budget feasible and "
-              "<= search; plan_function cache-hits and matches vanilla "
-              "gradients bit-for-bit")
+              "<= search; every net plans cold < "
+              f"{COLD_PLAN_BUDGET_S:.0f}s and warm < "
+              f"{WARM_PLAN_BUDGET_S * 1e3:.0f}ms; plan_function cache-hits "
+              "and matches vanilla gradients bit-for-bit")
     return out
 
 

@@ -23,6 +23,7 @@ like any benchmark network.  ``demo`` uses a built-in MLP factory.
 """
 
 import argparse
+import time
 
 from repro.core import (
     chen_sqrt_n,
@@ -67,7 +68,17 @@ def frontier(g, n_points: int = 8, budget: float = None):
     B_lo = budget if budget is not None else B_min
     budgets = [B_lo * (1.0 + 3.0 * i / max(n_points - 1, 1))
                for i in range(n_points)]
+    t0 = time.perf_counter()
     results = planner.solve_grid(g, budgets, "approx_dp")  # one capped sweep
+    grid_s = time.perf_counter() - t0
+    grid_tier = planner.cache.last_tier or "local DP (now cached)"
+    planner.cache.last_tier = None  # so the warm label reflects this call
+    t0 = time.perf_counter()
+    planner.solve(g, budgets[0], "approx_dp")
+    warm_s = time.perf_counter() - t0
+    warm_tier = planner.cache.last_tier or "in-process memo"
+    print(f"solve_grid: {grid_s*1e3:.1f} ms (plan from {grid_tier}); "
+          f"warm re-solve {warm_s*1e3:.2f} ms (from {warm_tier})\n")
     rows = []
     for res in results:
         if not res.feasible:
@@ -209,12 +220,19 @@ def main():
                          "exact minimal feasible budget")
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk plan cache (re-runs become lookups)")
+    ap.add_argument("--remote", default=None,
+                    help="fleet plan store path/URL (read-through under the "
+                         "local tiers; see docs/plan_cache.md)")
     args = ap.parse_args()
 
     if args.cache_dir:
         from repro.core import set_default_cache_dir
 
         set_default_cache_dir(args.cache_dir)
+    if args.remote:
+        from repro.core import set_default_remote_store
+
+        set_default_remote_store(args.remote)
 
     if args.traced:
         g = traced_graph(args.traced, backend=args.backend)

@@ -71,9 +71,13 @@ from .lowering import (
 from .plan_cache import (
     PlanCache,
     PlanKey,
+    RemoteStore,
+    SharedFSStore,
     SweepKey,
     default_cache,
+    remote_store_from_url,
     set_default_cache_dir,
+    set_default_remote_store,
 )
 from .planner import (
     Planner,
@@ -130,9 +134,13 @@ __all__ = [
     "canonical_maps",
     "PlanCache",
     "PlanKey",
+    "RemoteStore",
+    "SharedFSStore",
     "SweepKey",
     "default_cache",
+    "remote_store_from_url",
     "set_default_cache_dir",
+    "set_default_remote_store",
     "Planner",
     "get_default_planner",
     "OpProfile",

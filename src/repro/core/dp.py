@@ -65,11 +65,22 @@ sweep and the plan cache speak the liveness functional, versioned by
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from bisect import bisect_left, bisect_right
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+from numpy.typing import NDArray
 
 from .graph import EMPTY, Graph, NodeSet, from_mask, mask_iter, to_mask
-from .liveness import transition_excess
+from .liveness import (
+    _masks_bools,
+    record_excess,
+    scalar_only,
+    transition_excess,
+    transition_excess_many,
+    transition_excess_row,
+)
 from .lower_sets import all_lower_sets, pruned_lower_sets
 
 # Version tag of the DP's memory functional, content-addressed into every
@@ -180,8 +191,338 @@ def _mask_T(g: Graph, mask: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Vectorized hot path (shared by solve / feasible / mfb / sweep)
+# ---------------------------------------------------------------------------
+#
+# The DP's per-(L, L') work — the subset test, the cache-mass and overhead
+# steps (_mask_M/_mask_T), the liveness excess, and the frontier merges —
+# is batched with numpy one *source row* at a time: for each L in size
+# order, all its targets L' ⊇ L are handled in one shot.  The scalar loops
+# above stay byte-for-byte as oracles behind REPRO_DP_SCALAR=1.
+#
+# Bit-identity rests on three facts, each load-bearing:
+#   * the segment sums fold node masses in ascending node id exactly like
+#     ``sum(mem_v[v] for v in mask_iter(mask))`` — ``np.bincount`` with
+#     weights accumulates sequentially in input order, and ``np.nonzero``
+#     on a (J, n) mask emits row-major (= per-row ascending id) pairs, so
+#     one bincount per source row is the scalar left fold, batched;
+#   * every per-candidate expression (``m + m_step``, ``m + m_fixed``,
+#     ``max(peak, Mi)``, the ``Mi > budget`` filter) is evaluated as the
+#     same single IEEE operation, just elementwise;
+#   * the scalar frontier inserts maintain exactly the Pareto-minimal set
+#     of everything ever inserted — an order-independent *set* — so
+#     gathering a cell's incoming candidates and canonically filtering
+#     them once (sort + strict prefix-min scan) when the cell's lower set
+#     becomes a source reproduces the scalar frontier arrays exactly.
+
+
+@dataclasses.dataclass
+class _VecPrep:
+    """Per-(graph, family) batched transition terms, source-row major.
+
+    ``targets[pos]`` are the family ids reachable from ``order[pos]``
+    (strictly larger sets L' ⊇ L, in size order — the same jpos order the
+    scalar loops walk).  ``m_step``/``t_step`` are the per-pair cache-mass
+    and overhead steps; ``m_fixed`` rows are priced lazily (first DP that
+    walks the row batches the liveness kernel) and shared by every entry
+    point via this cache, so a solve after a min-budget pass re-prices
+    nothing.
+    """
+
+    infos: List[_LowerSetInfo]
+    order: List[int]
+    sizes: List[int]
+    empty_id: int
+    full_id: int
+    targets: List[NDArray[np.int64]]
+    m_step: List[NDArray[np.float64]]
+    t_step: List[NDArray[np.float64]]
+    m_fixed: List[Optional[NDArray[np.float64]]]
+    fam_b: NDArray[np.bool_]  # (F, n) family membership rows, by node id
+    bound_b: NDArray[np.bool_]  # (F, n) boundary ∂(L) rows, by node id
+
+
+_VEC_PREP: "weakref.WeakKeyDictionary[Graph, Dict[Tuple[int, ...], _VecPrep]]" = (
+    weakref.WeakKeyDictionary()
+)
+
+
+def _vec_prep(g: Graph, family: Sequence[NodeSet]) -> _VecPrep:
+    key = tuple(to_mask(L) for L in family)
+    per_g = _VEC_PREP.setdefault(g, {})
+    cached = per_g.get(key)
+    if cached is not None:
+        return cached
+    infos = _prepare(g, family)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    sizes = [infos[i].size for i in order]
+    full_mask = (1 << g.n) - 1
+    empty_id = full_id = -1
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            empty_id = i
+        if info.mask == full_mask:
+            full_id = i
+    # ∅/V may legitimately be absent for feasible(); solve/sweep/mfb raise
+    # via _require_terminals, matching their scalar paths.
+
+    n = g.n
+    fam_b = _masks_bools([info.mask for info in infos], n)
+    bound_b = _masks_bools([info.boundary_mask for info in infos], n)
+    cache_b = _masks_bools([info.cache_mask for info in infos], n)
+    # byte-packed family rows: the superset filter compares n/8 bytes
+    # instead of n bools per candidate
+    fam_p = np.packbits(fam_b, axis=1, bitorder="little")
+    mem = np.asarray(g.mem_v, dtype=np.float64)
+    tim = np.asarray(g.time_v, dtype=np.float64)
+    t_of = np.array([info.T for info in infos], dtype=np.float64)
+    order_arr = np.asarray(order, dtype=np.int64)
+
+    targets: List[NDArray[np.int64]] = []
+    m_steps: List[NDArray[np.float64]] = []
+    t_steps: List[NDArray[np.float64]] = []
+    empty_f = np.zeros(0, dtype=np.float64)
+    empty_i = np.zeros(0, dtype=np.int64)
+    for pos, i in enumerate(order):
+        start = bisect_right(sizes, infos[i].size)
+        cand = order_arr[start:]
+        lb = fam_b[i]
+        if len(cand) == 0:
+            targets.append(empty_i)
+            m_steps.append(empty_f)
+            t_steps.append(empty_f)
+            continue
+        tg = cand[~((~fam_p[cand] & fam_p[i]).any(axis=1))]
+        j_cnt = len(tg)
+        if j_cnt == 0:
+            targets.append(empty_i)
+            m_steps.append(empty_f)
+            t_steps.append(empty_f)
+            continue
+        # m_step = Σ mem over cache(L') \ L, left-folded in ascending id:
+        # np.nonzero is row-major, bincount accumulates in input order.
+        sel_m = cache_b[tg] & ~lb
+        rr, cc = np.nonzero(sel_m)
+        m_step = np.bincount(rr, weights=mem[cc], minlength=j_cnt)
+        # t_step = (T(L') − T(L)) − Σ time over (L' \ L) ∩ cache(L').
+        # (L'\L) ∩ cache(L') ⊆ cache(L') \ L, so compress the sel_m pairs
+        # by L'-membership instead of scanning a second (J, n) matrix —
+        # the surviving (rr, cc) keep their ascending-cc-per-row order.
+        ft = fam_b[tg[rr], cc]
+        t_sum = np.bincount(
+            rr[ft], weights=tim[cc[ft]], minlength=j_cnt
+        )
+        t_step = (t_of[tg] - infos[i].T) - t_sum
+        targets.append(tg)
+        m_steps.append(m_step)
+        t_steps.append(t_step)
+
+    vp = _VecPrep(
+        infos=infos,
+        order=order,
+        sizes=sizes,
+        empty_id=empty_id,
+        full_id=full_id,
+        targets=targets,
+        m_step=m_steps,
+        t_step=t_steps,
+        m_fixed=[None] * len(order),
+        fam_b=fam_b,
+        bound_b=bound_b,
+    )
+    per_g[key] = vp
+    return vp
+
+
+def _require_terminals(vp: _VecPrep) -> None:
+    if vp.empty_id < 0 or vp.full_id < 0:
+        raise ValueError("family must contain ∅ and V")
+
+
+def _price_row(g: Graph, vp: _VecPrep, pos: int) -> NDArray[np.float64]:
+    """Liveness excess for every target of source row ``pos`` (one batch).
+
+    Memo-free: the row is cached here (shared by every entry point via
+    ``_VEC_PREP``), and the traceback seeds the per-pair liveness memo for
+    just the transitions the answer takes (:func:`_seed_chain_excess`).
+    """
+    mf = vp.m_fixed[pos]
+    if mf is None:
+        i = vp.order[pos]
+        tg = vp.targets[pos]
+        mf = transition_excess_row(
+            g,
+            vp.infos[i].mask,
+            tmul=vp.fam_b[tg],
+            bdful=vp.bound_b[tg],
+        )
+        vp.m_fixed[pos] = mf
+    return mf
+
+
+def _seed_chain_excess(g: Graph, vp: _VecPrep, chain: List[int]) -> None:
+    """Seed the liveness memo along a traceback chain (full → ∅ order).
+
+    The row pricer skips the per-pair memo (130k keys on a ResNet-152
+    family, 99% never read back); the handful of transitions the chosen
+    sequence takes are recorded here so ``peak_memory_live`` prices the
+    returned plan with the *same floats* the DP's budget filter used.
+    """
+    pos_of = {i: p for p, i in enumerate(vp.order)}
+    for child, parent in zip(chain[:-1], chain[1:]):
+        pos = pos_of[parent]
+        mf = vp.m_fixed[pos]
+        if mf is None:  # pragma: no cover - chain rows are always priced
+            continue
+        idx = int(np.nonzero(vp.targets[pos] == child)[0][0])
+        record_excess(
+            g,
+            vp.infos[parent].mask,
+            vp.infos[child].mask,
+            float(mf[idx]),
+        )
+
+
+def _pareto_keep(
+    ms: NDArray[np.float64], ps: NDArray[np.float64]
+) -> NDArray[np.bool_]:
+    """Canonical (m, p) Pareto filter: sort callers pass (m asc, p asc)-
+    sorted arrays; a point survives iff its p is strictly below every
+    earlier point's — the same set the scalar bisect-insert loops keep."""
+    keep = np.empty(len(ms), dtype=bool)
+    keep[0] = True
+    pm = np.minimum.accumulate(ps)
+    keep[1:] = ps[1:] < pm[:-1]
+    return keep
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 1
 # ---------------------------------------------------------------------------
+
+
+def _solve_vec(
+    g: Graph, budget: float, family: Sequence[NodeSet], objective: str
+) -> DPResult:
+    """Vectorized Algorithm 1 (liveness functional).
+
+    Table rows are finalized by gathering each lower set's incoming
+    candidates and picking, per distinct t, the minimal-m entry with the
+    smallest arrival sequence number — the scalar ``row.get``-and-compare
+    loop's first-writer-wins tie-break, reproduced as a lexsort key.
+    """
+    tc = objective == "time_centric"
+    vp = _vec_prep(g, family)
+    _require_terminals(vp)
+    n_infos = len(vp.infos)
+    # pending chunks per set: (t2, m2, parent_id, parent_t, arrival seq) —
+    # rows here are wide (one entry per distinct t), so ndarray chunks beat
+    # the flat-list accumulation _mfb_vec uses for its ~6-wide frontiers.
+    pend: List[
+        List[
+            Tuple[
+                NDArray[np.float64],
+                NDArray[np.float64],
+                NDArray[np.int64],
+                NDArray[np.float64],
+                NDArray[np.int64],
+            ]
+        ]
+    ] = [[] for _ in range(n_infos)]
+    zero = np.zeros(1, dtype=np.float64)
+    neg1 = np.full(1, -1, dtype=np.int64)
+    pend[vp.empty_id].append((zero, zero, neg1, zero, neg1))
+    # finalized + Pareto-pruned rows, in expansion order (t asc for TC,
+    # t desc for MC — the scalar dict-iteration order)
+    rows: List[
+        Optional[
+            Tuple[
+                NDArray[np.float64],
+                NDArray[np.float64],
+                NDArray[np.int64],
+                NDArray[np.float64],
+            ]
+        ]
+    ] = [None] * n_infos
+    states = 0
+    seq_base = 0
+    for pos, i in enumerate(vp.order):
+        chunks = pend[i]
+        pend[i] = []
+        if not chunks:
+            continue
+        t2 = np.concatenate([c[0] for c in chunks])
+        m2 = np.concatenate([c[1] for c in chunks])
+        pid = np.concatenate([c[2] for c in chunks])
+        pt = np.concatenate([c[3] for c in chunks])
+        seq = np.concatenate([c[4] for c in chunks])
+        o = np.lexsort((seq, m2, t2))
+        t2, m2, pid, pt = t2[o], m2[o], pid[o], pt[o]
+        first = np.empty(len(t2), dtype=bool)
+        first[0] = True
+        first[1:] = t2[1:] != t2[:-1]
+        t2, m2, pid, pt = t2[first], m2[first], pid[first], pt[first]
+        if not tc:  # MC prunes (and expands) in descending-t order
+            t2, m2, pid, pt = t2[::-1], m2[::-1], pid[::-1], pt[::-1]
+        # _pareto/_pareto_mc: walk t (asc TC / desc MC), keep m strictly
+        # below the running best
+        keepb = np.empty(len(m2), dtype=bool)
+        keepb[0] = True
+        pm = np.minimum.accumulate(m2)
+        keepb[1:] = m2[1:] < pm[:-1]
+        t_e, m_e, pid_e, pt_e = t2[keepb], m2[keepb], pid[keepb], pt[keepb]
+        rows[i] = (t_e, m_e, pid_e, pt_e)
+        tg = vp.targets[pos]
+        j_cnt, e_cnt = len(tg), len(t_e)
+        if j_cnt == 0 or e_cnt == 0:
+            continue
+        states += j_cnt * e_cnt
+        mf = _price_row(g, vp, pos)
+        t2m = t_e[None, :] + vp.t_step[pos][:, None]
+        m2m = m_e[None, :] + vp.m_step[pos][:, None]
+        ok = (m_e[None, :] + mf[:, None]) <= budget  # scalar: skip Mi > B
+        seqm = seq_base + np.arange(j_cnt, dtype=np.int64)[:, None] * e_cnt + np.arange(
+            e_cnt, dtype=np.int64
+        )
+        seq_base += j_cnt * e_cnt
+        pid_i = np.full(e_cnt, i, dtype=np.int64)
+        cnt = ok.sum(axis=1)  # one reduction replaces 2 per-row dispatches
+        for jj, c in zip(range(j_cnt), cnt.tolist()):
+            if c == 0:
+                continue
+            if c == e_cnt:
+                pend[tg[jj]].append((t2m[jj], m2m[jj], pid_i, t_e, seqm[jj]))
+            else:
+                okr = ok[jj]
+                pend[tg[jj]].append(
+                    (t2m[jj][okr], m2m[jj][okr], pid_i[okr], t_e[okr], seqm[jj][okr])
+                )
+    final = rows[vp.full_id]
+    if final is None or len(final[0]) == 0:
+        return DPResult([], INF, INF, feasible=False, states_visited=states)
+    # rows are stored in expansion order: TC ascending t (min first), MC
+    # descending t (max first) — the optimum is the first entry either way.
+    t_star = float(final[0][0])
+    chain: List[int] = []
+    cur_id, cur_t = vp.full_id, t_star
+    while cur_id >= 0:
+        chain.append(cur_id)
+        row = rows[cur_id]
+        assert row is not None
+        k = int(np.nonzero(row[0] == cur_t)[0][0])
+        cur_id, cur_t = int(row[2][k]), float(row[3][k])
+    _seed_chain_excess(g, vp, chain)
+    masks = [
+        vp.infos[cid].mask for cid in reversed(chain) if vp.infos[cid].mask != 0
+    ]
+    sequence = [from_mask(mk) for mk in masks]
+    return DPResult(
+        sequence=sequence,
+        overhead=t_star,
+        peak_memory=peak_memory_live(g, sequence),
+        feasible=True,
+        states_visited=states,
+    )
 
 
 def solve(
@@ -207,6 +548,8 @@ def solve(
         raise ValueError(f"unknown objective {objective!r}")
     _check_functional(functional, g)
     live = functional == "liveness"
+    if live and not scalar_only():
+        return _solve_vec(g, budget, family, objective)
 
     infos = _prepare(g, family)
     # ascending order of set size (line 3)
@@ -322,6 +665,30 @@ def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
 
     _check_functional(functional, g)
     live = functional == "liveness"
+    if live and not scalar_only():
+        vp = _vec_prep(g, family)
+        if vp.full_id < 0:
+            return False
+        best = np.full(len(vp.infos), INF, dtype=np.float64)
+        if vp.empty_id >= 0:
+            best[vp.empty_id] = 0.0
+        for pos, i in enumerate(vp.order):
+            m = best[i]
+            if m == INF:
+                continue
+            tg = vp.targets[pos]
+            if len(tg) == 0:
+                continue
+            mf = _price_row(g, vp, pos)
+            ok = (m + mf) <= budget  # scalar: skip Mi > B
+            if not ok.any():
+                continue
+            sel = tg[ok]
+            m2 = m + vp.m_step[pos][ok]
+            cur = best[sel]
+            upd = m2 < cur
+            best[sel[upd]] = m2[upd]
+        return bool(best[vp.full_id] < INF)
     infos = infos if infos is not None else _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)
     sizes = [infos[i].size for i in order]
@@ -480,6 +847,57 @@ class SweepOverflow(RuntimeError):
     """
 
 
+def _mfb_vec(g: Graph, family: Sequence[NodeSet]) -> float:
+    """Vectorized :func:`min_feasible_budget_exact` (liveness functional).
+
+    Gather formulation: candidates pushed into a lower set are buffered as
+    raw (m, peak) chunks and canonically Pareto-filtered once, when the
+    set's turn comes as a source — the scalar insert loop maintains the
+    same order-independent set incrementally.
+    """
+    vp = _vec_prep(g, family)
+    _require_terminals(vp)
+    # Incoming candidates accumulate as flat python float lists — 130k
+    # tiny per-(source, target) ndarrays cost more to concatenate than the
+    # whole DP; ``tolist``/``asarray`` round-trip float64 exactly, and
+    # ``extend`` preserves the source-order arrival the canonical filter
+    # expects.
+    pend_m: List[List[float]] = [[] for _ in vp.infos]
+    pend_p: List[List[float]] = [[] for _ in vp.infos]
+    pend_m[vp.empty_id].append(0.0)
+    pend_p[vp.empty_id].append(0.0)
+    final_p: Optional[NDArray[np.float64]] = None
+    for pos, i in enumerate(vp.order):
+        mlist = pend_m[i]
+        plist = pend_p[i]
+        pend_m[i] = []
+        pend_p[i] = []
+        if not mlist:
+            continue
+        ms = np.asarray(mlist, dtype=np.float64)
+        ps = np.asarray(plist, dtype=np.float64)
+        o = np.lexsort((ps, ms))
+        ms, ps = ms[o], ps[o]
+        keep = _pareto_keep(ms, ps)
+        src_m, src_p = ms[keep], ps[keep]
+        if i == vp.full_id:
+            final_p = src_p
+        tg = vp.targets[pos]
+        if len(tg) == 0:
+            continue
+        mf = _price_row(g, vp, pos)
+        m_step = vp.m_step[pos]
+        # (J, F) candidate blocks — the scalar expressions, elementwise.
+        m2 = src_m[None, :] + m_step[:, None]
+        peak2 = np.maximum(src_m[None, :] + mf[:, None], src_p[None, :])
+        for t, mrow, prow in zip(tg.tolist(), m2.tolist(), peak2.tolist()):
+            pend_m[t].extend(mrow)
+            pend_p[t].extend(prow)
+    if final_p is None or len(final_p) == 0:
+        return INF
+    return float(final_p[-1])
+
+
 def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
                               functional: str = "liveness") -> float:
     """Exact minimal feasible budget in one forward pass (no search).
@@ -504,6 +922,8 @@ def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
     """
     _check_functional(functional, g)
     live = functional == "liveness"
+    if live and not scalar_only():
+        return _mfb_vec(g, family)
     infos = _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)
     sizes = [infos[i].size for i in order]
@@ -788,6 +1208,267 @@ def decode_sweep(entry: dict) -> Optional[Sweep]:
         return None
 
 
+def _finalize_cell(
+    pk: NDArray[np.float64],
+    mm: NDArray[np.float64],
+    po: NDArray[np.int64],
+    pid: NDArray[np.int64],
+    pt: NDArray[np.float64],
+) -> _Cell:
+    """Canonical (peak, (m, pos)) frontier of one cell's gathered candidates.
+
+    Reproduces what a sequence of :meth:`_Cell.insert` calls retains: the
+    Pareto-minimal set under (peak ≤, (m, pos) lex ≤) with duplicates
+    collapsed — order-independent, so one sort + strict prefix-min scan
+    over a lex *rank* of (m, pos) equals the incremental result.
+    """
+    o2 = np.lexsort((po, mm))
+    rk = np.empty(len(mm), dtype=np.int64)
+    ch = np.empty(len(mm), dtype=np.int64)
+    ch[0] = 0
+    ch[1:] = np.cumsum(
+        (mm[o2][1:] != mm[o2][:-1]) | (po[o2][1:] != po[o2][:-1])
+    )
+    rk[o2] = ch
+    o = np.lexsort((rk, pk))
+    rks = rk[o]
+    keep = np.empty(len(o), dtype=bool)
+    keep[0] = True
+    pm = np.minimum.accumulate(rks)
+    keep[1:] = rks[1:] < pm[:-1]
+    ks = o[keep]
+    cell = _Cell()
+    cell.peaks = [float(x) for x in pk[ks]]
+    cell.ms = [float(x) for x in mm[ks]]
+    cell.poss = [int(x) for x in po[ks]]
+    cell.parent_ids = [int(x) for x in pid[ks]]
+    cell.parent_ts = [float(x) for x in pt[ks]]
+    return cell
+
+
+# A pending-candidate column: a full per-candidate array, or one scalar
+# broadcast over the chunk (chunks from a single expansion share their
+# source position/id, so materializing constant columns is wasted work).
+_Col = Union[float, int, NDArray[np.float64], NDArray[np.int64]]
+
+
+def _fill_col(vals: Sequence[_Col], counts: Sequence[int], total: int,
+              dtype: type) -> np.ndarray:
+    """Concatenate mixed scalar/array columns into one array.
+
+    Scalars broadcast over their chunk's length — the assembly-time
+    equivalent of the ``np.full`` columns chunks used to carry.
+    """
+    out = np.empty(total, dtype=dtype)
+    off = 0
+    for v, c in zip(vals, counts):
+        out[off:off + c] = v
+        off += c
+    return out
+
+
+def _sweep_vec(g: Graph, family: Sequence[NodeSet], objective: str,
+               max_states: Optional[int], cap: Optional[float],
+               prior: Optional[Sweep]) -> Sweep:
+    """Vectorized :func:`sweep` — gather-then-filter frontier merges.
+
+    Candidates bound for a cell are buffered as raw array chunks and
+    canonically filtered once when the cell's lower set becomes a source
+    (:func:`_finalize_cell`); per-pair expansion windows, cap filters and
+    the work counter are evaluated as one (J targets × ΣF candidates)
+    block per source, with the source's cells laid out as contiguous
+    column segments (the per-cell crossover scan becomes a segmented
+    min-reduce).  Small graphs are dominated by per-call overhead, so the
+    kernel touches numpy O(sources) times, not O(source cells) times.
+    """
+    tc = objective == "time_centric"
+    vp = _vec_prep(g, family)
+    _require_terminals(vp)
+    n_infos = len(vp.infos)
+    n_fam = len(vp.order)
+
+    # pending chunks per set: (t, peak, m, pos, parent_id, parent_t)
+    pend: List[
+        List[Tuple[_Col, NDArray[np.float64], NDArray[np.float64],
+                   _Col, _Col, _Col]]
+    ] = [[] for _ in range(n_infos)]
+
+    skip_cap = -INF
+    prior_states = 0
+    if prior is not None:
+        if prior.objective != objective:
+            raise ValueError(
+                f"prior sweep objective {prior.objective!r} != {objective!r}"
+            )
+        if prior.family_masks != [info.mask for info in vp.infos]:
+            raise ValueError("prior sweep was built over a different family")
+        if prior.cap is None or (cap is not None and cap <= prior.cap):
+            return prior  # nothing to extend
+        skip_cap = prior.cap
+        prior_states = prior.states_visited
+        for j, cdict_prior in enumerate(prior.cells):
+            for t, cell in cdict_prior.items():
+                pend[j].append((
+                    t,
+                    np.asarray(cell.peaks, dtype=np.float64),
+                    np.asarray(cell.ms, dtype=np.float64),
+                    np.asarray(cell.poss, dtype=np.int64),
+                    np.asarray(cell.parent_ids, dtype=np.int64),
+                    np.asarray(cell.parent_ts, dtype=np.float64),
+                ))
+    else:
+        zero = np.zeros(1, dtype=np.float64)
+        pend[vp.empty_id].append((0.0, zero, zero, -1, -1, 0.0))
+
+    states = 0
+    state_cap = max_states if max_states is not None else INF
+    budget_cap = cap if cap is not None else INF
+    cells: List[Dict[float, _Cell]] = [{} for _ in range(n_infos)]
+    empty_f = np.zeros(0, dtype=np.float64)
+
+    for pos, i in enumerate(vp.order):
+        chunks = pend[i]
+        pend[i] = []
+        cdict = cells[i]
+        if chunks:
+            counts = [len(c[1]) for c in chunks]
+            total = sum(counts)
+            tt = _fill_col([c[0] for c in chunks], counts, total, np.float64)
+            pk = np.concatenate([c[1] for c in chunks])
+            mm = np.concatenate([c[2] for c in chunks])
+            po = _fill_col([c[3] for c in chunks], counts, total, np.int64)
+            pidv = _fill_col([c[4] for c in chunks], counts, total, np.int64)
+            ptv = _fill_col([c[5] for c in chunks], counts, total, np.float64)
+            ts_u, inv = np.unique(tt, return_inverse=True)
+            so = np.argsort(inv, kind="stable")
+            bnd = np.concatenate(
+                [np.zeros(1, dtype=np.int64), np.cumsum(np.bincount(inv))]
+            )
+            for gi in range(len(ts_u)):
+                idx = so[bnd[gi]:bnd[gi + 1]]
+                cdict[float(ts_u[gi])] = _finalize_cell(
+                    pk[idx], mm[idx], po[idx], pidv[idx], ptv[idx]
+                )
+        if not cdict:
+            continue
+
+        # Source-side pruning — the scalar running (m, peak) frontier over
+        # cells in t order, with the per-cell scans batched.
+        fr_m = empty_f
+        fr_p = empty_f
+        expansions: List[Tuple[float, NDArray[np.float64], NDArray[np.float64]]] = []
+        for t in sorted(cdict, reverse=not tc):
+            cell = cdict[t]
+            m_a = np.asarray(cell.ms[::-1], dtype=np.float64)  # m asc / peak desc
+            p_a = np.asarray(cell.peaks[::-1], dtype=np.float64)
+            if len(fr_m):
+                idx = np.searchsorted(fr_m, m_a, side="right") - 1
+                dom = (idx >= 0) & (fr_p[np.maximum(idx, 0)] <= p_a)
+                kms, kp = m_a[~dom], p_a[~dom]
+            else:
+                kms, kp = m_a, p_a
+            if len(kms) == 0:
+                continue
+            expansions.append((t, kms, kp))
+            am = np.concatenate([fr_m, kms])
+            ap = np.concatenate([fr_p, kp])
+            o = np.lexsort((ap, am))
+            am, ap = am[o], ap[o]
+            keep = _pareto_keep(am, ap)
+            fr_m, fr_p = am[keep], ap[keep]
+
+        if not expansions:
+            continue
+        tg = vp.targets[pos]
+        j_cnt = len(tg)
+        if j_cnt:
+            mf = _price_row(g, vp, pos)
+            m_step = vp.m_step[pos]
+            t_step = vp.t_step[pos]
+            # All of this source's cells in one block: columns are the
+            # flattened per-cell candidates, contiguous per cell.
+            t_cells = np.array([e[0] for e in expansions], dtype=np.float64)
+            seg_len = np.array([len(e[1]) for e in expansions],
+                               dtype=np.int64)
+            seg_bnd = np.concatenate(
+                [np.zeros(1, dtype=np.int64), np.cumsum(seg_len)]
+            )
+            f_tot = int(seg_bnd[-1])
+            kms = np.concatenate([e[1] for e in expansions])
+            kp = np.concatenate([e[2] for e in expansions])
+            cell_of = np.repeat(
+                np.arange(len(expansions), dtype=np.int64), seg_len
+            )
+            cols = np.arange(f_tot, dtype=np.int64)
+            k_local = cols - seg_bnd[cell_of]
+            # crossover: first k with kpeaks[k] <= kms[k] + m_fixed —
+            # expansion stops one past it (see the scalar comment);
+            # per (target, cell) via a segmented min over flagged columns
+            pred = kp[None, :] <= (kms[None, :] + mf[:, None])
+            first = np.minimum.reduceat(
+                np.where(pred, cols[None, :], f_tot), seg_bnd[:-1], axis=1
+            )
+            found = first < seg_bnd[1:][None, :]
+            end = np.where(
+                found, first - seg_bnd[:-1][None, :] + 1, seg_len[None, :]
+            )
+            if prior is not None:
+                # extension: cells already inside the old band only keep
+                # pairs that can reach the new band
+                old_cell = kp[seg_bnd[:-1]] <= skip_cap  # kp[0] per cell
+                last_m = kms[seg_bnd[1:] - 1]            # kms[-1] per cell
+                end = np.where(
+                    old_cell[None, :]
+                    & ((last_m[None, :] + mf[:, None]) <= skip_cap),
+                    0, end,
+                )
+            if prior is None:
+                states += int(end.sum())
+            active = k_local[None, :] < end[:, cell_of]
+            peak = np.maximum(kms[None, :] + mf[:, None], kp[None, :])
+            okc = active & (peak <= budget_cap) & (peak > skip_cap)
+            if prior is not None:
+                states += int(okc.sum())  # new-band work only
+            if okc.any():
+                m2 = kms[None, :] + m_step[:, None]
+                t2 = t_cells[None, :] + t_step[:, None]  # (J, cells)
+                jj_nz, kk_nz = np.nonzero(okc)
+                sel_cell = cell_of[kk_nz]
+                pk_sel = peak[jj_nz, kk_nz]
+                m2_sel = m2[jj_nz, kk_nz]
+                t2_sel = t2[jj_nz, sel_cell]
+                pt_sel = t_cells[sel_cell]
+                bnds = np.searchsorted(jj_nz, np.arange(j_cnt + 1))
+                for jj in range(j_cnt):
+                    a, b = int(bnds[jj]), int(bnds[jj + 1])
+                    if a == b:
+                        continue
+                    pend[int(tg[jj])].append((
+                        t2_sel[a:b],
+                        pk_sel[a:b],
+                        m2_sel[a:b],
+                        pos,
+                        i,
+                        pt_sel[a:b],
+                    ))
+        if prior_states + states > state_cap:
+            raise SweepOverflow(
+                f"budget sweep exceeded max_states={max_states} "
+                f"({prior_states + states} transitions; family of {n_fam})"
+            )
+
+    return Sweep(
+        objective=objective,
+        n=g.n,
+        family_masks=[info.mask for info in vp.infos],
+        cells=cells,
+        empty_id=vp.empty_id,
+        full_id=vp.full_id,
+        states_visited=prior_states + states,
+        cap=cap,
+    )
+
+
 def sweep(g: Graph, family: Sequence[NodeSet],
           objective: str = "time_centric",
           max_states: Optional[int] = None,
@@ -833,6 +1514,8 @@ def sweep(g: Graph, family: Sequence[NodeSet],
     """
     if objective not in ("time_centric", "memory_centric"):
         raise ValueError(f"unknown objective {objective!r}")
+    if not scalar_only():
+        return _sweep_vec(g, family, objective, max_states, cap, prior)
     tc = objective == "time_centric"
 
     infos = _prepare(g, family)
@@ -945,9 +1628,11 @@ def sweep(g: Graph, family: Sequence[NodeSet],
                 if kpeaks[0] <= skip_cap and kms[-1] + m_fixed <= skip_cap:
                     continue  # extension: every candidate is in the old band
                 t2 = t + t_step
+                # cells materialize only when a candidate survives the cap
+                # filters below — a husk cell would make the encoded sweep
+                # undecodable (decode_sweep rejects empty cells), silently
+                # defeating the cache for capped surfaces
                 cell2 = target.get(t2)
-                if cell2 is None:
-                    cell2 = target[t2] = _Cell()
                 # Once this transition's own 𝓜⁽ⁱ⁾ = m + m_fixed reaches a
                 # candidate's carried peak, peak₂ = m + m_fixed grows with m
                 # exactly as m₂ does — every candidate past the first such
@@ -970,11 +1655,12 @@ def sweep(g: Graph, family: Sequence[NodeSet],
                 # max_states (a lower bound on a fresh build's count, i.e.
                 # extensions never overflow where a fresh build would fit)
                 # inlined _Cell.insert — this is the sweep's hot loop
-                peaks2 = cell2.peaks
-                ms2 = cell2.ms
-                poss2 = cell2.poss
-                pids2 = cell2.parent_ids
-                pts2 = cell2.parent_ts
+                if cell2 is not None:
+                    peaks2 = cell2.peaks
+                    ms2 = cell2.ms
+                    poss2 = cell2.poss
+                    pids2 = cell2.parent_ids
+                    pts2 = cell2.parent_ts
                 for k in range(end):
                     m = kms[k]
                     peak = kpeaks[k]
@@ -987,6 +1673,13 @@ def sweep(g: Graph, family: Sequence[NodeSet],
                         continue  # already materialized by the prior sweep
                     if prior is not None:
                         states += 1  # extension: count new-band work only
+                    if cell2 is None:
+                        cell2 = target[t2] = _Cell()
+                        peaks2 = cell2.peaks
+                        ms2 = cell2.ms
+                        poss2 = cell2.poss
+                        pids2 = cell2.parent_ids
+                        pts2 = cell2.parent_ts
                     m2 = m + m_step
                     ci = bisect_left(peaks2, peak)
                     if ci > 0:

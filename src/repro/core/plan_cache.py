@@ -27,10 +27,18 @@ canonical content address so repeated planning is a hash lookup:
   canonical node positions and mapped back through the querying graph's
   canonical order, so a cached plan transfers between isomorphic labelings
   (e.g. the same network traced twice with different eqn numbering).
-* **two tiers** — an in-memory LRU (per process) over an optional on-disk
-  content-addressed store (crash-safe single-file JSON writes via
-  ``checkpointing.store.atomic_write_json``; filename = SHA-256 of the key,
-  sharded by 2-hex-char prefix like a git object store).
+* **three tiers** — an in-memory LRU (per process) over an optional on-disk
+  content-addressed store (crash-safe single-file JSON writes; filename =
+  SHA-256 of the key, sharded by 2-hex-char prefix like a git object
+  store), over an optional **fleet-shared remote store** (``RemoteStore``)
+  in read-through mode: a miss in the local tiers fetches from the remote
+  and back-fills memory + disk, and every put pushes through, so a plan
+  solved by any process in the fleet is a lookup for every other one.
+  Content addressing makes read-through trivially coherent — two stores
+  can only ever hold the *same* bytes under a hash, so there is no
+  staleness protocol; the invalidation matrix is unchanged.  Concurrent
+  writers on one digest are serialized by an O_EXCL ``.lock`` file
+  (``_locked_write_json``); a loser skips the write (same bytes anyway).
 * **validated hits** — every hit is re-validated against the querying graph
   (``check_increasing_sequence``), so a digest collision or a corrupt cache
   file degrades to a miss, never a wrong plan.
@@ -47,8 +55,9 @@ import dataclasses
 import hashlib
 import os
 import threading
+import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.checkpointing.store import atomic_write_json, read_json
 
@@ -62,6 +71,138 @@ from .graph import Graph, NodeSet, canonical_maps, graph_digest
 # construction, exactly like a cost-model recalibration does through the
 # graph digest).
 FORMAT_VERSION = 2
+
+#: a ``.lock`` older than this is presumed abandoned (holder crashed between
+#: acquiring and unlinking) and is broken by the next writer
+STALE_LOCK_SECONDS = 60.0
+
+
+def _locked_write_json(path: str, obj: object,
+                       stale_s: float = STALE_LOCK_SECONDS) -> bool:
+    """Cross-process exclusive JSON write; returns True when this call wrote.
+
+    ``atomic_write_json`` alone is torn-read-safe (temp file + rename) but
+    two processes read-through-solving the same digest would both write.
+    An ``O_CREAT | O_EXCL`` sidecar ``<path>.lock`` serializes them; the
+    loser simply *skips* — entries are content-addressed, so the winner is
+    writing byte-identical data and a second write is pure waste.  A lock
+    older than ``stale_s`` is presumed leaked by a crashed holder and is
+    broken (unlink + retry once).
+    """
+    lock = path + ".lock"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    try:
+        fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        try:
+            age = time.time() - os.path.getmtime(lock)
+        except OSError:
+            return False  # holder finished between our open and stat
+        if age < stale_s:
+            return False  # live writer owns this digest; same bytes anyway
+        try:
+            os.unlink(lock)  # break the stale lock …
+            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except OSError:
+            return False  # … lost the re-acquire race — fine, skip
+    try:
+        atomic_write_json(path, obj)
+        return True
+    finally:
+        os.close(fd)
+        try:
+            os.unlink(lock)
+        except OSError:  # pragma: no cover — lock vanished under us
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Remote (fleet-shared) stores: the third tier under LRU + disk.
+# ---------------------------------------------------------------------------
+
+
+class RemoteStore:
+    """Transport interface for a fleet-shared plan store.
+
+    Implementations move opaque ``(content_hash → JSON entry)`` pairs; all
+    keying, validation, and coherence live in :class:`PlanCache` — content
+    addresses make read-through trivially coherent, so a transport needs no
+    consistency guarantees beyond "a fetch returns bytes some push wrote
+    (or None)".  Transport failures should raise ``OSError`` (counted as
+    ``remote_errors`` and degraded to a miss, never a planning failure).
+    """
+
+    scheme = "abstract"
+
+    def fetch(self, content_hash: str) -> Optional[dict]:
+        raise NotImplementedError
+
+    def push(self, content_hash: str, entry: dict) -> None:
+        raise NotImplementedError
+
+
+class SharedFSStore(RemoteStore):
+    """Shared-filesystem transport (NFS / Lustre / GCS-fuse mount).
+
+    Same sharded object layout as the local disk tier, so a fleet store can
+    be seeded by simply copying a warm node's cache directory.  Pushes go
+    through :func:`_locked_write_json` — concurrent read-through writers on
+    one digest across *hosts* are serialized by the O_EXCL lock.
+    """
+
+    scheme = "file"
+
+    def __init__(self, root: str):
+        self.root = root
+
+    def _path(self, content_hash: str) -> str:
+        return os.path.join(
+            self.root, "plans", content_hash[:2], content_hash + ".json"
+        )
+
+    def fetch(self, content_hash: str) -> Optional[dict]:
+        entry = read_json(self._path(content_hash))
+        return entry if isinstance(entry, dict) else None
+
+    def push(self, content_hash: str, entry: dict) -> None:
+        _locked_write_json(self._path(content_hash), entry)
+
+
+class _ObjectStoreStub(RemoteStore):
+    """Placeholder for bucket transports (s3:// / gs://): constructing one
+    names the URL it would serve; using it raises with a pointer to the
+    interface to implement.  Kept importable so launcher configs can carry
+    bucket URLs before the blob client lands."""
+
+    def __init__(self, scheme: str, url: str):
+        self.scheme = scheme
+        self.url = url
+
+    def _unimplemented(self) -> "NotImplementedError":
+        return NotImplementedError(
+            f"{self.scheme}:// plan stores are stubbed: implement "
+            f"RemoteStore.fetch/push over your object-store client and pass "
+            f"the instance to PlanCache(remote=...) (url: {self.url!r})"
+        )
+
+    def fetch(self, content_hash: str) -> Optional[dict]:
+        raise self._unimplemented()
+
+    def push(self, content_hash: str, entry: dict) -> None:
+        raise self._unimplemented()
+
+
+def remote_store_from_url(url: str) -> RemoteStore:
+    """``/dir``, ``file:///dir`` → :class:`SharedFSStore`; ``s3://…`` /
+    ``gs://…`` → the object-store stub (raises on first use)."""
+    if "://" not in url:
+        return SharedFSStore(url)
+    scheme, _, rest = url.partition("://")
+    if scheme == "file":
+        return SharedFSStore("/" + rest.lstrip("/") if rest else "/")
+    if scheme in ("s3", "gs"):
+        return _ObjectStoreStub(scheme, url)
+    raise ValueError(f"unknown plan-store scheme {scheme!r} in {url!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,18 +264,37 @@ def _from_canonical(seq: List[List[int]], from_pos: List[int]) -> List[NodeSet]:
 
 
 class PlanCache:
-    """In-memory LRU over an optional on-disk content-addressed store."""
+    """In-memory LRU over an optional on-disk content-addressed store, over
+    an optional fleet-shared :class:`RemoteStore` (read-through + push-
+    through).  ``last_tier`` records which tier served the most recent hit
+    (``"memory"`` / ``"disk"`` / ``"remote"``; ``None`` after a miss) — the
+    user-visible provenance ``examples/plan_explorer.py`` prints."""
 
-    def __init__(self, capacity: int = 512, cache_dir: Optional[str] = None):
+    def __init__(self, capacity: int = 512, cache_dir: Optional[str] = None,
+                 remote: Optional[Union[RemoteStore, str]] = None):
         self.capacity = capacity
         self.cache_dir = cache_dir
+        self.remote = (
+            remote_store_from_url(remote) if isinstance(remote, str) else remote
+        )
         self._mem: "OrderedDict[str, dict]" = OrderedDict()
+        # Decoded-plan LRU: repeat hits skip JSON decode + re-validation
+        # (rebuilding a 100k-element lower-set sequence costs ~10 ms on the
+        # big nets — too slow for a serving hot path).  Keyed by the entry
+        # hash AND the querying graph's relabeling (canonical order), so
+        # isomorphic graphs with different node ids never share a decode.
+        self._decoded: "OrderedDict[Tuple[str, Tuple[int, ...]], DPResult]" = (
+            OrderedDict()
+        )
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.disk_hits = 0
+        self.remote_hits = 0
         self.invalid_hits = 0  # validation failures (collision/corruption)
         self.disk_errors = 0  # unusable store (permissions, bad path, ENOSPC)
+        self.remote_errors = 0  # unusable transport (degrades to a miss)
+        self.last_tier: Optional[str] = None
 
     # ------------------------------------------------------------------ keys
 
@@ -156,14 +316,69 @@ class PlanCache:
     def _disk_write(self, content_hash: str, entry: dict) -> None:
         """Best-effort disk write: an unusable store (read-only mount, path
         collision, ENOSPC) must degrade the cache to memory-only, never take
-        the planning job down."""
+        the planning job down.  Locked (O_EXCL sidecar): the disk tier may be
+        a directory shared by co-located processes racing the same digest —
+        the loser skips, since content addressing makes both writes
+        byte-identical anyway."""
         path = self._path(content_hash)
         if path is None:
             return
         try:
-            atomic_write_json(path, entry)
+            _locked_write_json(path, entry)
         except OSError:
             self.disk_errors += 1
+
+    # ----------------------------------------------------------------- remote
+
+    def _remote_fetch(self, content_hash: str) -> Optional[dict]:
+        """Read-through fetch; transport failures degrade to a miss."""
+        if self.remote is None:
+            return None
+        try:
+            entry = self.remote.fetch(content_hash)
+        except (OSError, NotImplementedError):
+            self.remote_errors += 1
+            return None
+        return entry if isinstance(entry, dict) else None
+
+    def _remote_push(self, content_hash: str, entry: dict) -> None:
+        """Best-effort push-through — a broken transport never fails a put."""
+        if self.remote is None:
+            return
+        try:
+            self.remote.push(content_hash, entry)
+        except (OSError, NotImplementedError):
+            self.remote_errors += 1
+
+    def _lookup(self, content_hash: str) -> Tuple[Optional[dict], str]:
+        """memory → disk → remote; returns ``(entry, tier)`` (entry None on
+        a full miss).  Tier *accounting* and local back-fill happen in the
+        callers, after the entry validates against the querying graph."""
+        entry = self._mem_get(content_hash)
+        if entry is not None:
+            return entry, "memory"
+        path = self._path(content_hash)
+        if path is not None:
+            entry = read_json(path)
+            if entry is not None:
+                return entry, "disk"
+        entry = self._remote_fetch(content_hash)
+        if entry is not None:
+            return entry, "remote"
+        return None, "miss"
+
+    def _record_hit(self, content_hash: str, entry: dict, tier: str) -> None:
+        """Validated hit: count it, back-fill the faster tiers, stamp
+        ``last_tier``."""
+        if tier == "disk":
+            self.disk_hits += 1
+            self._mem_put(content_hash, entry)
+        elif tier == "remote":
+            self.remote_hits += 1
+            self._mem_put(content_hash, entry)
+            self._disk_write(content_hash, entry)
+        self.hits += 1
+        self.last_tier = tier
 
     # ------------------------------------------------------------------- LRU
 
@@ -183,35 +398,57 @@ class PlanCache:
 
     # ------------------------------------------------------------------- API
 
+    def _decoded_get(self, dk: "Tuple[str, Tuple[int, ...]]") -> Optional[DPResult]:
+        with self._lock:
+            res = self._decoded.get(dk)
+            if res is not None:
+                self._decoded.move_to_end(dk)
+        if res is None:
+            return None
+        # fresh sequence list: callers may mutate it
+        return dataclasses.replace(res, sequence=list(res.sequence))
+
+    def _decoded_put(self, dk: "Tuple[str, Tuple[int, ...]]", res: DPResult) -> None:
+        with self._lock:
+            self._decoded[dk] = dataclasses.replace(
+                res, sequence=list(res.sequence)
+            )
+            self._decoded.move_to_end(dk)
+            while len(self._decoded) > self.capacity:
+                self._decoded.popitem(last=False)
+
     def get(self, g: Graph, key: PlanKey) -> Optional[DPResult]:
         """Cached DPResult for ``key``, re-labeled onto ``g``; None on miss.
 
         Hits are validated against ``g`` (increasing lower-set sequence); an
         entry that fails validation is treated as a miss and evicted.
+        Repeat hits for the same relabeling are served from the decoded LRU
+        at memory-lookup latency (they validated when first decoded).
         """
         h = key.content_hash()
-        entry = self._mem_get(h)
-        from_disk = False
-        if entry is None:
-            path = self._path(h)
-            if path is not None:
-                entry = read_json(path)
-                from_disk = entry is not None
+        _, from_pos = canonical_maps(g)
+        dk = (h, tuple(from_pos))
+        cached = self._decoded_get(dk)
+        if cached is not None:
+            self.hits += 1
+            self.last_tier = "memory"
+            return cached
+        entry, tier = self._lookup(h)
         if entry is None:
             self.misses += 1
+            self.last_tier = None
             return None
 
         result = self._decode(g, entry)
         if result is None:
             self.invalid_hits += 1
             self.misses += 1
+            self.last_tier = None
             with self._lock:
                 self._mem.pop(h, None)
             return None
-        if from_disk:
-            self.disk_hits += 1
-            self._mem_put(h, entry)
-        self.hits += 1
+        self._record_hit(h, entry, tier)
+        self._decoded_put(dk, result)
         return result
 
     def put(self, g: Graph, key: PlanKey, result: DPResult) -> None:
@@ -227,7 +464,9 @@ class PlanCache:
         }
         h = key.content_hash()
         self._mem_put(h, entry)
+        self._decoded_put((h, tuple(canonical_maps(g)[1])), result)
         self._disk_write(h, entry)
+        self._remote_push(h, entry)
 
     def _decode(self, g: Graph, entry: dict) -> Optional[DPResult]:
         try:
@@ -275,16 +514,11 @@ class PlanCache:
         does its own accounting.
         """
         h = key.content_hash()
-        entry = self._mem_get(h)
-        from_disk = False
-        if entry is None:
-            path = self._path(h)
-            if path is not None:
-                entry = read_json(path)
-                from_disk = entry is not None
+        entry, tier = self._lookup(h)
         if entry is None:
             if count_miss:
                 self.misses += 1
+                self.last_tier = None
             return None
         sweep = None
         if isinstance(entry, dict) and entry.get("version") == FORMAT_VERSION \
@@ -293,13 +527,11 @@ class PlanCache:
         if sweep is None:
             self.invalid_hits += 1
             self.misses += 1
+            self.last_tier = None
             with self._lock:
                 self._mem.pop(h, None)
             return None
-        if from_disk:
-            self.disk_hits += 1
-            self._mem_put(h, entry)
-        self.hits += 1
+        self._record_hit(h, entry, tier)
         return sweep
 
     def put_sweep(self, key: SweepKey, sweep: Sweep) -> None:
@@ -309,33 +541,34 @@ class PlanCache:
         h = key.content_hash()
         self._mem_put(h, entry)
         self._disk_write(h, entry)
+        self._remote_push(h, entry)
 
     # ------------------------------------------------- auxiliary scalar store
 
     def get_aux(self, namespace: str, key: str) -> Optional[float]:
         """Small keyed scalar store (e.g. min-feasible-budget results)."""
         h = hashlib.sha256(f"aux|{namespace}|{key}".encode()).hexdigest()
-        entry = self._mem_get(h)
-        if entry is None:
-            path = self._path(h)
-            if path is not None:
-                entry = read_json(path)
-                if entry is not None:
-                    self._mem_put(h, entry)
+        entry, tier = self._lookup(h)
         if not isinstance(entry, dict) or "value" not in entry:
             return None
         if entry.get("version") != FORMAT_VERSION:
             return None  # e.g. a min-budget computed under an old functional
         try:
-            return float(entry["value"])
+            value = float(entry["value"])
         except (TypeError, ValueError):
             return None
+        if tier != "memory":
+            self._mem_put(h, entry)
+            if tier == "remote":
+                self._disk_write(h, entry)
+        return value
 
     def put_aux(self, namespace: str, key: str, value: float) -> None:
         h = hashlib.sha256(f"aux|{namespace}|{key}".encode()).hexdigest()
         entry = {"version": FORMAT_VERSION, "value": float(value)}
         self._mem_put(h, entry)
         self._disk_write(h, entry)
+        self._remote_push(h, entry)
 
     # ----------------------------------------------------------------- stats
 
@@ -344,14 +577,17 @@ class PlanCache:
             "hits": self.hits,
             "misses": self.misses,
             "disk_hits": self.disk_hits,
+            "remote_hits": self.remote_hits,
             "invalid_hits": self.invalid_hits,
             "disk_errors": self.disk_errors,
+            "remote_errors": self.remote_errors,
             "entries_in_memory": len(self._mem),
         }
 
     def clear_memory(self) -> None:
         with self._lock:
             self._mem.clear()
+            self._decoded.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -394,11 +630,33 @@ def set_default_cache_dir(path: Optional[str]) -> PlanCache:
     return _DEFAULT
 
 
+def set_default_remote_store(
+    store: Optional[Union[RemoteStore, str]]
+) -> PlanCache:
+    """Attach (or detach, with None) the fleet tier of the default cache.
+
+    Accepts a :class:`RemoteStore` instance or a URL for
+    :func:`remote_store_from_url`.  Like the disk tier, the remote is
+    process-global: the serving engine, the launchers and ad-hoc planning
+    all read through (and push to) the same fleet store.
+    """
+    _DEFAULT.remote = (
+        remote_store_from_url(store) if isinstance(store, str) else store
+    )
+    return _DEFAULT
+
+
 def cache_dir_from_env() -> Optional[str]:
     return os.environ.get("REPRO_PLAN_CACHE_DIR") or None
 
 
-# Pick up the env var at import so every entry point (benchmarks, examples,
+def remote_from_env() -> Optional[str]:
+    return os.environ.get("REPRO_PLAN_REMOTE_DIR") or None
+
+
+# Pick up the env vars at import so every entry point (benchmarks, examples,
 # launchers) shares the store without plumbing.
 if cache_dir_from_env():
     set_default_cache_dir(cache_dir_from_env())
+if remote_from_env():
+    set_default_remote_store(remote_from_env())

@@ -315,6 +315,31 @@ class Planner:
             states_visited=sw.states_visited,
         )
 
+    def prewarm(
+        self,
+        g: Graph,
+        method: str = "exact_dp",
+        objective: str = "time_centric",
+    ) -> bool:
+        """Make sure a **full** budget-free sweep for ``(g, method,
+        objective)`` is hot in this planner's tiers; returns True when it
+        already was (memo, disk, or fleet store — no DP ran).
+
+        This is the boot-time pre-warm hook: a serving replica calls it for
+        every expected planning signature before taking traffic, so its
+        first planned step is a warm frontier lookup.  In a fleet with a
+        shared store exactly one replica pays the cold solve — everyone
+        else read-throughs the pushed sweep.  A sweep wider than
+        ``sweep_max_states`` stays unwarmed (False; ``solve`` falls back to
+        the per-budget DP as usual).
+        """
+        gp = self.prepare(g)
+        sw = self._cached_sweep(gp, method, objective, count_miss=False)
+        if sw is not None and sw.cap is None:
+            return True
+        self._build_sweep(gp, method, objective, cap=None, prior=sw)
+        return False
+
     def frontier(
         self,
         g: Graph,

@@ -42,7 +42,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import Graph
@@ -366,6 +366,40 @@ def plan_unit_segments(
     _maybe_verify(g, res, B)
     sizes, remat = segments_from_result(res, pi.n_units)
     return SegmentPlan(sizes, remat, n_micro), res
+
+
+def prewarm_unit_plans(
+    cfg: ModelConfig,
+    shapes: Sequence[ShapeConfig],
+    dp_shards: int,
+    seq_shards: int = 1,
+    model_shards: int = 16,
+    n_micro: int = 1,
+    objective: str = "time_centric",
+    measured_costs: Optional[bool] = None,
+    rules: Optional[Rules] = None,
+) -> Dict[str, bool]:
+    """Pre-warm the plan cache for every expected planning signature.
+
+    For each shape, builds the exact chain graph :func:`plan_unit_segments`
+    would solve and makes sure a **full budget-free sweep** for it is hot
+    (``Planner.prewarm`` on the process-default planner) — so the first
+    real ``plan_unit_segments`` / ``plan_with_microbatching`` call at that
+    signature is a frontier lookup, not a cold DP.  With a fleet store
+    attached (``set_default_remote_store`` / ``REPRO_PLAN_REMOTE_DIR``) one
+    replica's pre-warm serves the whole fleet via read-through.
+
+    Returns ``{shape.name: already_warm}`` — False entries are the
+    signatures this call paid a cold solve for.
+    """
+    planner = get_default_planner()
+    out: Dict[str, bool] = {}
+    for shape in shapes:
+        pi = plan_inputs(cfg, shape, dp_shards, seq_shards, model_shards,
+                         n_micro, rules=rules)
+        g = _dp_chain_graph(pi, measured_costs)
+        out[shape.name] = planner.prewarm(g, "exact_dp", objective)
+    return out
 
 
 def _maybe_verify(g: Graph, res: DPResult, budget: float) -> None:

@@ -49,6 +49,8 @@ class Engine:
         rng_seed: int = 0,
         frames: Optional[jax.Array] = None,
         plan_cache_dir: Optional[str] = None,
+        plan_remote: Optional[str] = None,
+        prewarm_shapes: Optional[List[Any]] = None,
         mesh: Optional[jax.sharding.Mesh] = None,
         step_shardings: Any = None,
     ):
@@ -57,11 +59,18 @@ class Engine:
         # planning this process does (prefill remat segmentation via
         # launch.plan, or ad-hoc repro.plan_function calls) is a
         # content-addressed lookup, and plans solved here are visible to
-        # the trainers — one pipeline, one store.
+        # the trainers — one pipeline, one store.  ``plan_remote`` attaches
+        # the fleet-shared tier on top (a shared-FS path/URL for
+        # core.plan_cache.remote_store_from_url): autoscaled replicas
+        # read-through plans the first replica solved and pushed.
         if plan_cache_dir:
             from repro.core.plan_cache import set_default_cache_dir
 
             set_default_cache_dir(plan_cache_dir)
+        if plan_remote:
+            from repro.core.plan_cache import set_default_remote_store
+
+            set_default_remote_store(plan_remote)
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -94,7 +103,38 @@ class Engine:
 
         self._step = jax.jit(_step, **kw)
 
+        # Boot-time sweep pre-warm: solve (or read-through) the budget-free
+        # sweeps for the shapes this replica expects BEFORE taking traffic,
+        # so the first planned step is a warm frontier lookup.
+        if prewarm_shapes:
+            self.prewarm_plans(prewarm_shapes)
+
     # ------------------------------------------------------------- planning
+
+    def prewarm_plans(
+        self,
+        shapes: List[Any],
+        dp_shards: int = 1,
+        seq_shards: int = 1,
+        model_shards: int = 1,
+        **kw: Any,
+    ) -> Dict[str, bool]:
+        """Pre-warm the plan cache for the expected batch-shape signatures.
+
+        ``shapes`` are ``repro.configs.ShapeConfig``s (e.g. ``decode_32k``,
+        ``long_500k`` — the signatures the dry-run matrix compiles); shard
+        counts default to this engine's single-host layout.  Delegates to
+        ``launch.plan.prewarm_unit_plans`` on the process-default planner,
+        so the warmed sweeps are exactly what ``plan_unit_segments`` will
+        look up, and — with a fleet store attached (``plan_remote``) — one
+        replica's cold solve is pushed for every other replica to
+        read-through.  Returns ``{shape.name: already_warm}``.
+        """
+        from repro.launch.plan import prewarm_unit_plans
+
+        return prewarm_unit_plans(
+            self.model.cfg, shapes, dp_shards, seq_shards, model_shards, **kw
+        )
 
     def plan_scoring(self, loss_fn, budget: float, in_shardings: Any = None,
                      **kw):

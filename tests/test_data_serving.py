@@ -123,3 +123,26 @@ def test_eos_terminates(engine_setup):
     eng2.submit([1, 2], max_new_tokens=8, eos_id=first)
     out = eng2.run()[0]
     assert out.output == [first]
+
+
+def test_engine_prewarm_makes_first_planned_step_warm(engine_setup):
+    """ISSUE-8 acceptance: boot-time sweep pre-warm means the engine's
+    first planned call at an expected signature re-runs no DP."""
+    from repro.configs import SHAPES
+    from repro.core import get_default_planner
+    from repro.launch.plan import plan_unit_segments
+
+    cfg, model, params = engine_setup
+    shape = SHAPES["decode_32k"]
+    planner = get_default_planner()
+    eng = Engine(model, params, max_slots=1, max_seq=32,
+                 prewarm_shapes=[shape])
+    # warmed at boot → the first planned step at this signature is a
+    # frontier lookup: zero new plan-cache misses
+    before = planner.cache.stats()["misses"]
+    sp, res = plan_unit_segments(cfg, shape, dp_shards=1, model_shards=1,
+                                 budget=1e18)  # full sweep covers any B
+    assert res.feasible
+    assert planner.cache.stats()["misses"] == before
+    # and a replica pre-warming the same signature reports already-warm
+    assert eng.prewarm_plans([shape]) == {shape.name: True}

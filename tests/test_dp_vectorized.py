@@ -1,0 +1,225 @@
+"""Vectorized DP hot path vs the scalar oracles: bit-identity properties.
+
+The vectorized paths (``liveness._excess_row``, ``dp._mfb_vec``,
+``dp._solve_vec``, ``dp._sweep_vec``) must return *bit-identical* results
+to the scalar loops retained behind ``REPRO_DP_SCALAR=1`` — same float
+expressions, just batched.  These tests drive both paths over random DAGs
+and compare every observable field, including ulp-adjacent budgets around
+the exact feasibility threshold where a single-ulp drift flips a plan.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import dp, liveness
+from repro.core.dp import (
+    Sweep,
+    SweepOverflow,
+    min_feasible_budget_exact,
+    solve,
+    sweep,
+)
+from repro.core.graph import to_mask
+from repro.core.lower_sets import all_lower_sets
+
+from conftest import random_dag
+
+OBJECTIVES = ("time_centric", "memory_centric")
+
+
+@pytest.fixture
+def scalar_mode(monkeypatch):
+    """Context toggles: run a callable under the scalar oracles."""
+
+    def run(fn, *args, **kwargs):
+        monkeypatch.setenv("REPRO_DP_SCALAR", "1")
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            monkeypatch.delenv("REPRO_DP_SCALAR", raising=False)
+
+    return run
+
+
+def _fresh(g):
+    """Drop per-graph memo state so each path prices from scratch."""
+    liveness._EXCESS_MEMO.pop(g, None)
+    dp._VEC_PREP.pop(g, None)
+
+
+def _budget_grid(g, fam):
+    """mfb plus ulp-adjacent probes around it and a loose budget."""
+    b = min_feasible_budget_exact(g, family=fam)
+    if b == dp.INF:
+        return []
+    return [
+        b,
+        np.nextafter(b, -np.inf),
+        np.nextafter(b, np.inf),
+        b * 1.5,
+        b * 4.0,
+    ]
+
+
+def _dp_fields(r):
+    return (r.sequence, r.overhead, r.peak_memory, r.feasible, r.states_visited)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_excess_row_matches_scalar_walk(seed):
+    r = random.Random(seed)
+    g = random_dag(r, r.randint(3, 12))
+    fam = all_lower_sets(g)
+    infos = {i.mask: i for i in dp._prepare(g, fam)}
+    masks = list(infos)
+    for mask_L in masks:
+        pairs = [
+            (mp, infos[mp].boundary_mask)
+            for mp in masks
+            if mp != mask_L and (mask_L & mp) == mask_L
+        ]
+        if not pairs:
+            continue
+        want = [
+            liveness._excess_scalar(g, mask_L, mp, bd) for mp, bd in pairs
+        ]
+        got = liveness._excess_row(g, mask_L, pairs).tolist()
+        assert got == want  # bitwise: == on floats, no tolerance
+
+
+@pytest.mark.parametrize("objective", OBJECTIVES)
+@pytest.mark.parametrize("seed", range(8))
+def test_solve_and_mfb_bit_identical(seed, objective, scalar_mode):
+    r = random.Random(seed * 7 + 1)
+    g = random_dag(r, r.randint(3, 10))
+    fam = all_lower_sets(g)
+
+    _fresh(g)
+    b_vec = min_feasible_budget_exact(g, family=fam)
+    _fresh(g)
+    b_sca = scalar_mode(min_feasible_budget_exact, g, family=fam)
+    assert b_vec == b_sca
+
+    for budget in _budget_grid(g, fam):
+        _fresh(g)
+        rv = solve(g, budget, fam, objective=objective)
+        _fresh(g)
+        rs = scalar_mode(solve, g, budget, fam, objective=objective)
+        assert _dp_fields(rv) == _dp_fields(rs)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_feasible_bit_identical(seed, scalar_mode):
+    r = random.Random(seed * 13 + 5)
+    g = random_dag(r, r.randint(3, 10))
+    fam = all_lower_sets(g)
+    for budget in _budget_grid(g, fam):
+        _fresh(g)
+        fv = dp.feasible(g, budget, fam)
+        _fresh(g)
+        fs = scalar_mode(dp.feasible, g, budget, fam)
+        assert fv == fs
+
+
+@pytest.mark.parametrize("objective", OBJECTIVES)
+@pytest.mark.parametrize("seed", range(6))
+def test_sweep_encoding_bit_identical(seed, objective, scalar_mode):
+    r = random.Random(seed * 31 + 2)
+    g = random_dag(r, r.randint(3, 9))
+    fam = all_lower_sets(g)
+    _fresh(g)
+    sv = sweep(g, fam, objective=objective)
+    _fresh(g)
+    ss = scalar_mode(sweep, g, fam, objective=objective)
+    assert sv.encode() == ss.encode()
+
+    # capped sweep + lazy extension, scalar and vectorized interleaved
+    b = min_feasible_budget_exact(g, family=fam)
+    if b == dp.INF:
+        return
+    cap = b * 1.25
+    _fresh(g)
+    cv = sweep(g, fam, objective=objective, cap=cap)
+    _fresh(g)
+    cs = scalar_mode(sweep, g, fam, objective=objective, cap=cap)
+    assert cv.encode() == cs.encode()
+    ev = cv.extend(g, cap=b * 3.0)
+    es = scalar_mode(cs.extend, g, cap=b * 3.0)
+    assert ev.encode() == es.encode()
+    # mixed provenance: scalar base extended by the vectorized path
+    em = cs.extend(g, cap=b * 3.0)
+    assert em.encode() == ev.encode()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_sweep_extract_matches_solve(seed):
+    r = random.Random(seed * 5 + 3)
+    g = random_dag(r, r.randint(3, 9))
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, family=fam)
+    if b == dp.INF:
+        return
+    sw = sweep(g, fam)
+    for budget in (b, np.nextafter(b, np.inf), b * 2.0):
+        rv = sw.solve(g, budget)
+        rd = solve(g, budget, fam)
+        assert rv.sequence == rd.sequence
+        assert rv.overhead == rd.overhead
+        assert rv.peak_memory == rd.peak_memory
+
+
+def test_sweep_overflow_message_parity(scalar_mode):
+    r = random.Random(99)
+    g = random_dag(r, 8)
+    fam = all_lower_sets(g)
+    msgs = []
+    for runner in (
+        lambda: sweep(g, fam, max_states=7),
+        lambda: scalar_mode(sweep, g, fam, max_states=7),
+    ):
+        _fresh(g)
+        with pytest.raises(SweepOverflow) as ei:
+            runner()
+        msgs.append(str(ei.value))
+    assert msgs[0] == msgs[1]
+
+
+def test_solve_seeds_memo_for_returned_plan():
+    # the traceback must record the exact floats the budget filter used,
+    # so peak_memory_live prices the returned plan with the same values
+    r = random.Random(17)
+    g = random_dag(r, 8)
+    fam = all_lower_sets(g)
+    _fresh(g)
+    b = min_feasible_budget_exact(g, family=fam)
+    res = solve(g, b, fam)
+    assert res.feasible
+    memo = liveness._EXCESS_MEMO.get(g)
+    assert memo is not None
+    prev = 0
+    for L in res.sequence:
+        mk = to_mask(L)
+        assert (prev, mk) in memo
+        prev = mk
+    assert res.peak_memory <= b
+
+
+def test_scalar_env_forces_oracle(monkeypatch):
+    # REPRO_DP_SCALAR=1 must actually bypass the vectorized paths
+    monkeypatch.setenv("REPRO_DP_SCALAR", "1")
+    called = {"row": 0}
+    orig = liveness._excess_row
+
+    def spy(*a, **k):
+        called["row"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(liveness, "_excess_row", spy)
+    r = random.Random(3)
+    g = random_dag(r, 6)
+    fam = all_lower_sets(g)
+    _fresh(g)
+    solve(g, min_feasible_budget_exact(g, family=fam), fam)
+    assert called["row"] == 0

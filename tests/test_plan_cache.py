@@ -356,3 +356,248 @@ def test_planner_with_profile_prepares_graph(rng):
     # same calibrated problem → cache hit through the calibrated digest
     p.solve(g, B, "exact_dp")
     assert p.cache.stats()["hits"] == 1
+
+
+# ------------------------------------------- fleet store: lock + read-through
+
+
+def test_locked_write_json_basic_and_loser_skips(tmp_path):
+    from repro.core.plan_cache import _locked_write_json
+    import json
+    import os
+
+    path = str(tmp_path / "e.json")
+    assert _locked_write_json(path, {"v": 1}) is True
+    assert json.load(open(path)) == {"v": 1}
+    assert not os.path.exists(path + ".lock")  # released
+    # a live lock makes the writer skip (content-addressed: same bytes)
+    open(path + ".lock", "w").close()
+    assert _locked_write_json(path, {"v": 2}) is False
+    assert json.load(open(path)) == {"v": 1}  # untouched
+    os.unlink(path + ".lock")
+
+
+def test_locked_write_json_breaks_stale_lock(tmp_path):
+    from repro.core.plan_cache import _locked_write_json
+    import json
+    import os
+    import time
+
+    path = str(tmp_path / "e.json")
+    lock = path + ".lock"
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    open(lock, "w").close()
+    old = time.time() - 3600.0  # a holder that crashed an hour ago
+    os.utime(lock, (old, old))
+    assert _locked_write_json(path, {"v": 3}) is True
+    assert json.load(open(path)) == {"v": 3}
+    assert not os.path.exists(lock)
+
+
+def _race_writer(path: str, payload_v: int, n_iter: int, start_evt) -> None:
+    """Module-level so multiprocessing can import it in the child."""
+    from repro.core.plan_cache import _locked_write_json
+
+    start_evt.wait()
+    for _ in range(n_iter):
+        _locked_write_json(path, {"v": payload_v, "pad": "x" * 4096})
+
+
+def test_two_process_race_same_key(tmp_path):
+    """Satellite regression (ISSUE 8): two processes hammering the same
+    digest must never corrupt the entry or leave lock/tmp litter."""
+    import json
+    import multiprocessing as mp
+    import os
+
+    # spawn, not fork: the parent has a live (multithreaded) jax runtime
+    ctx = mp.get_context("spawn")
+    path = str(tmp_path / "plans" / "ab" / "abcd.json")
+    start = ctx.Event()
+    procs = [
+        ctx.Process(target=_race_writer, args=(path, v, 200, start))
+        for v in (1, 2)
+    ]
+    for p in procs:
+        p.start()
+    start.set()
+    for p in procs:
+        p.join(timeout=120)
+        assert p.exitcode == 0
+    entry = json.load(open(path))  # valid JSON, from one writer or the other
+    assert entry["v"] in (1, 2) and len(entry["pad"]) == 4096
+    leftovers = [f for f in os.listdir(os.path.dirname(path))
+                 if f.endswith(".lock") or ".tmp." in f]
+    assert leftovers == []
+
+
+def test_remote_store_from_url():
+    from repro.core.plan_cache import (
+        SharedFSStore,
+        remote_store_from_url,
+    )
+
+    assert isinstance(remote_store_from_url("/fleet/plans"), SharedFSStore)
+    fs = remote_store_from_url("file:///fleet/plans")
+    assert isinstance(fs, SharedFSStore) and fs.root == "/fleet/plans"
+    stub = remote_store_from_url("s3://bucket/plans")
+    with pytest.raises(NotImplementedError):
+        stub.fetch("00" * 32)
+    with pytest.raises(NotImplementedError):
+        stub.push("00" * 32, {})
+    with pytest.raises(ValueError):
+        remote_store_from_url("ftp://nope")
+
+
+def test_read_through_plan_without_local_dp(tmp_path, rng, monkeypatch):
+    """ISSUE-8 acceptance: a second process with EMPTY local tiers but a
+    populated fleet store serves the plan via read-through — zero local DP
+    work, asserted by the miss counters and a poisoned DP entry point."""
+    import repro.core.planner as planner_mod
+    from repro.core.plan_cache import SharedFSStore
+
+    g = random_dag(rng, 6)
+    B = _budget(g)
+    fleet = str(tmp_path / "fleet")
+    # process 1: solves cold, pushes through to the fleet store
+    c1 = PlanCache(remote=SharedFSStore(fleet))
+    first = Planner(cache=c1).solve(g, B, "exact_dp")
+    assert c1.stats()["misses"] >= 1  # it really ran the DP
+
+    # process 2: fresh planner, fresh cache, no disk tier — remote only
+    c2 = PlanCache(remote=SharedFSStore(fleet))
+    p2 = Planner(cache=c2)
+
+    def poisoned(*a, **k):  # any DP call here fails the test
+        raise AssertionError("read-through path ran a local DP solve")
+
+    monkeypatch.setattr(planner_mod, "solve", poisoned)
+    monkeypatch.setattr(planner_mod.dp_mod, "min_feasible_budget_exact",
+                        poisoned)
+    again = p2.solve(g, B, "exact_dp")
+    assert again.sequence == first.sequence
+    assert again.overhead == first.overhead
+    assert again.peak_memory == first.peak_memory
+    st = c2.stats()
+    assert st["misses"] == 0 and st["remote_hits"] == 1
+    assert c2.last_tier == "remote"
+    # the hit was back-filled: a repeat is a memory-tier hit
+    p2.solve(g, B, "exact_dp")
+    assert c2.last_tier == "memory" and c2.stats()["remote_hits"] == 1
+
+
+def test_read_through_sweep_and_minbudget(tmp_path, rng, monkeypatch):
+    """A cached fleet sweep answers budget queries AND min_feasible_budget
+    in a cold process without any DP."""
+    import repro.core.planner as planner_mod
+    from repro.core.plan_cache import SharedFSStore
+
+    g = random_dag(rng, 6)
+    fleet = str(tmp_path / "fleet")
+    p1 = Planner(cache=PlanCache(remote=SharedFSStore(fleet)))
+    B = p1.min_feasible_budget(g, "exact_dp") * 1.5
+    grid1 = p1.solve_grid(g, [B, B * 1.5], "exact_dp")  # builds + pushes sweep
+
+    c2 = PlanCache(remote=SharedFSStore(fleet))
+    p2 = Planner(cache=c2)
+
+    def poisoned(*a, **k):
+        raise AssertionError("read-through path ran a local DP")
+
+    for name in ("solve", "exact_dp"):
+        if hasattr(planner_mod, name):
+            monkeypatch.setattr(planner_mod, name, poisoned)
+    monkeypatch.setattr(planner_mod.dp_mod, "sweep", poisoned)
+    monkeypatch.setattr(planner_mod.dp_mod, "min_feasible_budget_exact",
+                        poisoned)
+    assert p2.solve(g, B, "exact_dp").sequence == grid1[0].sequence
+    assert c2.stats()["remote_hits"] >= 1
+    assert p2.min_feasible_budget(g, "exact_dp") * 1.5 == B
+
+
+def test_remote_transport_failure_degrades_to_miss(rng):
+    from repro.core.plan_cache import RemoteStore
+
+    class Broken(RemoteStore):
+        def fetch(self, h):
+            raise OSError("transport down")
+
+        def push(self, h, entry):
+            raise OSError("transport down")
+
+    g = random_dag(rng, 5)
+    B = _budget(g)
+    c = PlanCache(remote=Broken())
+    p = Planner(cache=c)
+    res = p.solve(g, B, "exact_dp")  # fetch+push both fail — still plans
+    assert res.feasible
+    assert c.stats()["remote_errors"] >= 2
+    p.solve(g, B, "exact_dp")
+    assert c.stats()["hits"] == 1  # local tiers unaffected
+
+
+def test_last_tier_provenance(tmp_path, rng):
+    g = random_dag(rng, 5)
+    B = _budget(g)
+    store = str(tmp_path / "plans")
+    c1 = PlanCache(cache_dir=store)
+    p1 = Planner(cache=c1)
+    p1.solve(g, B, "exact_dp")
+    assert c1.last_tier is None  # miss → solved fresh
+    p1.solve(g, B, "exact_dp")
+    assert c1.last_tier == "memory"
+    c2 = PlanCache(cache_dir=store)  # restarted process
+    Planner(cache=c2).solve(g, B, "exact_dp")
+    assert c2.last_tier == "disk"
+
+
+def test_default_remote_store_attach_detach():
+    from repro.core.plan_cache import (
+        SharedFSStore,
+        default_cache,
+        set_default_remote_store,
+    )
+
+    try:
+        c = set_default_remote_store("/tmp/fleet-xyz")
+        assert c is default_cache()
+        assert isinstance(c.remote, SharedFSStore)
+    finally:
+        set_default_remote_store(None)
+    assert default_cache().remote is None
+
+
+# ------------------------------------------------------------------ prewarm
+
+
+def test_prewarm_builds_then_reports_warm(rng):
+    g = random_dag(rng, 6)
+    p = Planner(cache=PlanCache())
+    assert p.prewarm(g, "exact_dp") is False  # cold: built the sweep
+    assert p.prewarm(g, "exact_dp") is True  # now hot
+    # every later budget query is a frontier lookup — no new cache misses
+    misses = p.cache.stats()["misses"]
+    B = p.min_feasible_budget(g, "exact_dp")
+    res = p.solve(g, B * 1.3, "exact_dp")
+    assert res.feasible
+    assert p.cache.stats()["misses"] == misses
+
+
+def test_prewarm_reads_through_fleet_store(tmp_path, rng, monkeypatch):
+    """Replica #2's pre-warm is a read-through of replica #1's pushed sweep
+    — no DP in the second process."""
+    import repro.core.planner as planner_mod
+    from repro.core.plan_cache import SharedFSStore
+
+    g = random_dag(rng, 6)
+    fleet = str(tmp_path / "fleet")
+    assert Planner(cache=PlanCache(remote=SharedFSStore(fleet))).prewarm(
+        g, "exact_dp") is False
+
+    p2 = Planner(cache=PlanCache(remote=SharedFSStore(fleet)))
+
+    def poisoned(*a, **k):
+        raise AssertionError("prewarm read-through ran a local DP")
+
+    monkeypatch.setattr(planner_mod.dp_mod, "sweep", poisoned)
+    assert p2.prewarm(g, "exact_dp") is True

@@ -239,6 +239,7 @@ def analyze_twin(
     vanilla_grad: Optional[Callable[..., Any]] = None,
     rel: float = DRIFT_REL,
     abs_slack: float = DRIFT_ABS_SLACK,
+    donate_argnums: Optional[Tuple[int, ...]] = None,
 ) -> HloAnalysis:
     """Run all HLO checks on an explicitly lowered value_and_grad twin.
 
@@ -250,7 +251,10 @@ def analyze_twin(
     number of heavy (dot/conv) nodes in V \\ U_k; ``analytic_peak`` the
     plan's liveness-tight peak *in the twin's byte units*.  With
     ``vanilla_grad`` (the unplanned twin) the drift gate gains the vanilla
-    ceiling and the record a reference compile.
+    ceiling and the record a reference compile.  ``donate_argnums``
+    compiles the twin with donation hints (``lowering.donation``) — the
+    gate then verifies the hinted lowering, whose values are unchanged but
+    whose buffer assignment may alias donated inputs.
     """
     report = Report(checker="hlo")
     record: Dict[str, Any] = {"analytic_peak_bytes": float(analytic_peak)}
@@ -320,7 +324,10 @@ def analyze_twin(
 
     # ---- compile ------------------------------------------------------------
     try:
-        lowered = jax.jit(fn_grad).lower(*args)
+        jit_kw: Dict[str, Any] = {}
+        if donate_argnums:
+            jit_kw["donate_argnums"] = donate_argnums
+        lowered = jax.jit(fn_grad, **jit_kw).lower(*args)
         stable_text = lowered.as_text()
         compiled = lowered.compile()
         hlo_text = compiled.as_text()
@@ -467,6 +474,7 @@ def analyze_hlo(
     rel: float = DRIFT_REL,
     abs_slack: float = DRIFT_ABS_SLACK,
     use_vanilla_ceiling: bool = True,
+    donate: bool = False,
 ) -> HloAnalysis:
     """HLO checks for a ``TracedCarrier`` + plan (the front-door hook).
 
@@ -476,7 +484,10 @@ def analyze_hlo(
     :func:`analyze_twin` with the plan's own tag sets and analytic peak.
     ``use_vanilla_ceiling=False`` makes the drift gate strict — no
     remat-elision allowance — which is what corruption regression tests
-    want.
+    want.  ``donate=True`` compiles with the donation hints the ``"jaxpr"``
+    backend's ``donate=True`` lowering would attach
+    (``lowering.donation.donatable_argnums``) — the drift gate then
+    verifies the hinted twin.
     """
     from ..core.lowering.carriers import TracedCarrier
     from ..core.lowering.policy import traced_value_and_grad
@@ -508,6 +519,11 @@ def analyze_hlo(
     flat = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in carrier.flat_avals]
     args = jax.tree_util.tree_unflatten(carrier.in_tree, flat)
     fn_grad = traced_value_and_grad(carrier, plan)
+    dargs: Optional[Tuple[int, ...]] = None
+    if donate:
+        from ..core.lowering.donation import donatable_argnums
+
+        dargs = donatable_argnums(carrier)
     vanilla = None
     if use_vanilla_ceiling:
         vanilla = jax.value_and_grad(carrier.fn, argnums=carrier.argnums)
@@ -521,6 +537,7 @@ def analyze_hlo(
         vanilla_grad=vanilla,
         rel=rel,
         abs_slack=abs_slack,
+        donate_argnums=dargs,
     )
 
 
@@ -531,6 +548,7 @@ def check_hlo(
     rel: float = DRIFT_REL,
     abs_slack: float = DRIFT_ABS_SLACK,
     use_vanilla_ceiling: bool = True,
+    donate: bool = False,
 ) -> Report:
     """Report-only wrapper over :func:`analyze_hlo` (same contract)."""
     return analyze_hlo(
@@ -539,6 +557,7 @@ def check_hlo(
         rel=rel,
         abs_slack=abs_slack,
         use_vanilla_ceiling=use_vanilla_ceiling,
+        donate=donate,
     ).report
 
 

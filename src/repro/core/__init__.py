@@ -69,12 +69,14 @@ from .lowering import (
     register_lowering,
 )
 from .plan_cache import (
+    CallableStore,
     PlanCache,
     PlanKey,
     RemoteStore,
     SharedFSStore,
     SweepKey,
     default_cache,
+    register_transport,
     remote_store_from_url,
     set_default_cache_dir,
     set_default_remote_store,
@@ -86,6 +88,13 @@ from .planner import (
     get_default_planner,
     min_feasible_budget,
     plan,
+)
+from .replay import (
+    ReplayResult,
+    SegmentTiming,
+    rank_by_replay,
+    replay,
+    window_peaks,
 )
 from .schedule import ExecutionPlan, Segment, make_plan, plan_summary
 
@@ -120,6 +129,12 @@ __all__ = [
     "simulate",
     "transition_excess",
     "vanilla_peak",
+    # discrete-event replay (wall-clock pricing)
+    "ReplayResult",
+    "SegmentTiming",
+    "replay",
+    "rank_by_replay",
+    "window_peaks",
     "ExecutionPlan",
     "Segment",
     "make_plan",
@@ -136,8 +151,10 @@ __all__ = [
     "PlanKey",
     "RemoteStore",
     "SharedFSStore",
+    "CallableStore",
     "SweepKey",
     "default_cache",
+    "register_transport",
     "remote_store_from_url",
     "set_default_cache_dir",
     "set_default_remote_store",

@@ -67,7 +67,7 @@ from __future__ import annotations
 import dataclasses
 import weakref
 from bisect import bisect_left, bisect_right
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 from numpy.typing import NDArray
@@ -82,6 +82,9 @@ from .liveness import (
     transition_excess_row,
 )
 from .lower_sets import all_lower_sets, pruned_lower_sets
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
+    from .cost_model import OpProfile
 
 # Version tag of the DP's memory functional, content-addressed into every
 # plan-cache key (core.plan_cache) so plans solved under an older functional
@@ -537,6 +540,12 @@ def solve(
     objective:
       * "time_centric"   — minimize overhead (line 15: min)   §4.2/§4.3
       * "memory_centric" — maximize overhead (line 15: max)   §4.4
+      * "wallclock"      — minimize *replayed step time* under the budget:
+        the time-centric Pareto surface is swept, every feasible terminal
+        overhead is lowered to a plan and priced by the discrete-event
+        replay (``core.replay``), and the wall-clock winner is returned.
+        Requires the liveness functional (the replay's overlap windows are
+        its backward-window decomposition).
 
     functional:
       * "liveness" — 𝓜⁽ⁱ⁾ priced by ``liveness.transition_excess`` (the
@@ -544,6 +553,12 @@ def solve(
       * "eq2"      — the paper's original eq. 2 charge (Appendix C
         ablation / benchmarks only).
     """
+    if objective == "wallclock":
+        if functional != "liveness":
+            raise ValueError(
+                "objective='wallclock' requires functional='liveness'"
+            )
+        return solve_wallclock(g, budget, family)
     if objective not in ("time_centric", "memory_centric"):
         raise ValueError(f"unknown objective {objective!r}")
     _check_functional(functional, g)
@@ -650,6 +665,26 @@ def solve(
         feasible=True,
         states_visited=states,
     )
+
+
+def solve_wallclock(
+    g: Graph,
+    budget: float,
+    family: Sequence[NodeSet],
+    profile: Optional["OpProfile"] = None,
+    **replay_kw: Any,
+) -> DPResult:
+    """Wall-clock plan selection: sweep the surface, replay the terminals.
+
+    Every feasible terminal overhead of the (time-centric-shaped) sweep is
+    a distinct Pareto plan at ``budget``; each is lowered via ``make_plan``
+    and priced by :func:`repro.core.replay.replay`, and the minimal
+    replayed-seconds candidate wins (deterministic tie-break on analytic
+    peak, then overhead).  ``replay_kw`` is forwarded to the replay
+    (``mesh=``, ``comm_bytes=``, ``segment_costs=``, ...).
+    """
+    sw = sweep(g, family, "wallclock", cap=budget)
+    return sw.extract_wallclock(g, budget, profile=profile, **replay_kw)
 
 
 def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
@@ -1040,7 +1075,7 @@ class Sweep:
         ts = [t for t, cell in term.items() if cell.min_peak() <= budget]
         if not ts:
             return None
-        return min(ts) if self.objective == "time_centric" else max(ts)
+        return max(ts) if self.objective == "memory_centric" else min(ts)
 
     def extract(self, budget: float) -> Tuple[bool, float, List[int]]:
         """Budget-B projection: ``(feasible, overhead, sequence-of-masks)``.
@@ -1055,6 +1090,10 @@ class Sweep:
         t_star = self._terminal_t(budget)
         if t_star is None:
             return False, INF, []
+        return True, t_star, self._traceback(budget, t_star)
+
+    def _traceback(self, budget: float, t_star: float) -> List[int]:
+        """Mask sequence of the budget-B winner ending at terminal t_star."""
         masks: List[int] = []
         pid, pt = self.full_id, t_star
         while pid >= 0:
@@ -1064,7 +1103,63 @@ class Sweep:
                 masks.append(self.family_masks[pid])
             pid, pt = cell.parent_ids[k], cell.parent_ts[k]
         masks.reverse()
-        return True, t_star, masks
+        return masks
+
+    def terminal_candidates(self, budget: float) -> List[float]:
+        """Every feasible terminal overhead at ``budget``, ascending.
+
+        Each entry is a distinct Pareto plan the budget admits —
+        ``extract_at(budget, t)`` materializes any of them, and the
+        wall-clock objective ranks them all by replayed time instead of
+        taking the min/max one.
+        """
+        if not self.covers(budget):
+            raise ValueError(
+                f"budget {budget!r} beyond this sweep's cap {self.cap!r}"
+            )
+        term = self.cells[self.full_id]
+        return sorted(
+            t for t, cell in term.items() if cell.min_peak() <= budget
+        )
+
+    def extract_at(self, budget: float, t: float) -> List[int]:
+        """Mask sequence of the plan ending at terminal overhead ``t``."""
+        cell = self.cells[self.full_id].get(t)
+        if cell is None or cell.min_peak() > budget:
+            raise ValueError(
+                f"terminal t={t!r} is not feasible at budget {budget!r}"
+            )
+        return self._traceback(budget, t)
+
+    def extract_wallclock(
+        self, g: Graph, budget: float,
+        profile: Optional["OpProfile"] = None, **replay_kw: Any,
+    ) -> DPResult:
+        """Replay-ranked extraction: the minimal replayed-seconds terminal.
+
+        ``g`` must be labeled in the sweep's coordinates.  Feasibility is
+        unchanged from the other objectives (peak-based); only the choice
+        among feasible terminals differs.  ``replay_kw`` forwards to
+        :func:`repro.core.replay.replay` (``mesh=``, ``comm_bytes=``, ...).
+        """
+        from .replay import rank_by_replay
+
+        ts = self.terminal_candidates(budget)
+        if not ts:
+            return DPResult([], INF, INF, feasible=False,
+                            states_visited=self.states_visited)
+        seqs = [
+            [from_mask(mk) for mk in self._traceback(budget, t)] for t in ts
+        ]
+        replay_kw.setdefault("budget", budget)
+        idx, plan, _res = rank_by_replay(g, seqs, profile=profile, **replay_kw)
+        return DPResult(
+            sequence=seqs[idx],
+            overhead=ts[idx],
+            peak_memory=plan.peak_memory,
+            feasible=True,
+            states_visited=self.states_visited,
+        )
 
     def solve(self, g: Graph, budget: float) -> DPResult:
         """``solve(g, budget, family, objective)`` via frontier lookup.
@@ -1072,6 +1167,8 @@ class Sweep:
         ``g`` must be labeled in the sweep's coordinates (i.e. the graph the
         sweep was built from); the planner handles relabeled graphs itself.
         """
+        if self.objective == "wallclock":
+            return self.extract_wallclock(g, budget)
         ok, t_star, masks = self.extract(budget)
         if not ok:
             return DPResult([], INF, INF, feasible=False,
@@ -1111,8 +1208,8 @@ class Sweep:
             (cell.min_peak(), t) for t, cell in term.items() if cell.peaks
         )
         out: List[Tuple[float, float]] = []
-        better = (lambda a, b: a < b) if self.objective == "time_centric" else (
-            lambda a, b: a > b)
+        better = (lambda a, b: a > b) if self.objective == "memory_centric" else (
+            lambda a, b: a < b)
         for peak, t in pts:
             if not out or better(t, out[-1][1]):
                 if out and out[-1][0] == peak:
@@ -1161,7 +1258,7 @@ def decode_sweep(entry: dict) -> Optional[Sweep]:
     """Inverse of ``Sweep.encode``; returns None on any malformed input."""
     try:
         objective = entry["objective"]
-        if objective not in ("time_centric", "memory_centric"):
+        if objective not in ("time_centric", "memory_centric", "wallclock"):
             return None
         n = int(entry["n"])
         family_masks = [to_mask(members) for members in entry["family"]]
@@ -1281,7 +1378,7 @@ def _sweep_vec(g: Graph, family: Sequence[NodeSet], objective: str,
     min-reduce).  Small graphs are dominated by per-call overhead, so the
     kernel touches numpy O(sources) times, not O(source cells) times.
     """
-    tc = objective == "time_centric"
+    tc = objective != "memory_centric"  # "wallclock" sweeps the TC surface
     vp = _vec_prep(g, family)
     _require_terminals(vp)
     n_infos = len(vp.infos)
@@ -1512,11 +1609,13 @@ def sweep(g: Graph, family: Sequence[NodeSet],
     cap costs the new band, not a rebuild.  ``states_visited`` then counts
     the prior's work plus this pass's *new* expansion work only.
     """
-    if objective not in ("time_centric", "memory_centric"):
+    if objective not in ("time_centric", "memory_centric", "wallclock"):
         raise ValueError(f"unknown objective {objective!r}")
     if not scalar_only():
         return _sweep_vec(g, family, objective, max_states, cap, prior)
-    tc = objective == "time_centric"
+    # "wallclock" shares the time-centric transition structure bit-for-bit
+    # (the surface is objective-agnostic; only extraction ranks by replay).
+    tc = objective != "memory_centric"
 
     infos = _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)

@@ -62,6 +62,12 @@ class Lowering(abc.ABC):
 
     ``track_live=True`` (interpreter only) appends a live-byte trace:
     ``f(...) -> (loss, grads, [(tag, bytes), ...])``.
+
+    ``donate=True`` (XLA backends that support it: ``"jaxpr"``,
+    ``"segment"``) jits the twin with donation hints for the
+    non-differentiated arguments and attaches the per-segment
+    dead-at-peak hints (see ``lowering.donation``); values and gradients
+    are unchanged.
     """
 
     #: registry name, e.g. "interpreter"
@@ -73,9 +79,18 @@ class Lowering(abc.ABC):
 
     @abc.abstractmethod
     def lower(
-        self, carrier: Any, plan: ExecutionPlan, track_live: bool = False
+        self, carrier: Any, plan: ExecutionPlan, track_live: bool = False,
+        donate: bool = False,
     ) -> Callable[..., Any]:
         """Lower ``plan`` over ``carrier`` into a value_and_grad callable."""
+
+
+def reject_donate(backend_name: str) -> None:
+    """Shared guard for backends without an XLA jit boundary to hint."""
+    raise ValueError(
+        f"donate=True needs an XLA jit boundary; the {backend_name!r} "
+        f"backend has none (use 'jaxpr' or 'segment')"
+    )
 
 
 _REGISTRY: Dict[str, Lowering] = {}

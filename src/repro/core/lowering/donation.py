@@ -1,0 +1,92 @@
+"""Donation/alias hints: XLA buffer assignment realizing the analytic peak.
+
+The interpreter backend *audits* the liveness-tight peak; the XLA backends
+should *realize* it.  Two levers, both derived from the same functional:
+
+* **Per-segment dead-at-peak hints** — the backward-window decomposition
+  (``liveness.transition_excess``) prices window ``i`` as
+  ``M(U_{i-1}) + excess(L_{i-1}, L_i)``: the only cached residuals charged
+  are those of *earlier* segments (``U_{i-1}``) plus the window's own
+  interior.  Every cached residual of a **later** segment
+  (``U_k \\ U_i``) is provably dead at window ``i``'s peak — its VJP
+  window already ran (backward processes segments last → first).
+  :func:`donation_hints` names these per segment; the drift gate
+  (``analysis.hlo.check_hlo``) confirms XLA's buffer assignment agrees.
+
+* **Argument donation** — the planned twin's non-differentiated positional
+  arguments (the batch, auxiliary inputs) are dead once their last
+  (re)computation consumes them; ``jax.jit(donate_argnums=...)`` is the
+  public surface that lets XLA alias their buffers into temps/outputs.
+  Differentiated arguments are never donated (their values feed the VJP
+  and callers keep them across steps).
+
+Donation never changes values — gradients stay bit-identical to vanilla
+``jax.value_and_grad`` — it only widens XLA's aliasing freedom; the
+``check_hlo`` memory-drift gate is the acceptance test.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+from ..graph import Graph
+from ..schedule import ExecutionPlan
+
+
+def donation_hints(g: Graph, plan: ExecutionPlan) -> Dict[int, Tuple[str, ...]]:
+    """Names of cached buffers provably dead at each window's in-peak.
+
+    ``hints[i]`` lists the cached residuals **not** charged by the
+    functional while segment ``i``'s backward window runs: exactly
+    ``U_k \\ L_i`` — cached nodes of later segments, whose windows were
+    already consumed when window ``i`` executes.  Sorted for determinism.
+    """
+    hints: Dict[int, Tuple[str, ...]] = {}
+    for seg in plan.segments:
+        dead = plan.cached - seg.lower_set
+        hints[seg.index] = tuple(sorted(g.nodes[v].name for v in dead))
+    return hints
+
+
+def donatable_argnums(carrier: Any) -> Tuple[int, ...]:
+    """Positional arguments of the lowered twin that are safe to donate.
+
+    Traced carriers: every positional arg **not** differentiated
+    (``carrier.argnums``) — grads are returned for the others, and the VJP
+    rule may hold their values, so they stay caller-owned.  BlockGraph
+    carriers: the ``inputs`` dict (arg 1; ``params`` is differentiated).
+    """
+    slices = getattr(carrier, "arg_slices", None)
+    if slices is None:
+        return (1,)  # BlockGraph convention: f(params, inputs)
+    argnums = carrier.argnums
+    diff = {argnums} if isinstance(argnums, int) else set(argnums)
+    return tuple(i for i in range(len(slices)) if i not in diff)
+
+
+def donate_lowered(
+    fn_grad: Callable[..., Any],
+    carrier: Any,
+    g: Graph,
+    plan: ExecutionPlan,
+) -> Callable[..., Any]:
+    """Wrap a lowered value_and_grad twin with donation-hinted ``jax.jit``.
+
+    The returned callable carries ``donate_argnums`` (the donated
+    positions) and ``donation_hints`` (the per-segment dead-at-peak names)
+    as attributes for introspection and the drift-gate tests.  With no
+    donatable positions, the twin is returned jitted but unhinted.
+    """
+    import jax
+
+    dargs = donatable_argnums(carrier)
+    jitted = (
+        jax.jit(fn_grad, donate_argnums=dargs) if dargs else jax.jit(fn_grad)
+    )
+
+    def run(*args: Any) -> Any:
+        return jitted(*args)
+
+    run.donate_argnums = dargs  # type: ignore[attr-defined]
+    run.donation_hints = donation_hints(g, plan)  # type: ignore[attr-defined]
+    return run

@@ -64,6 +64,7 @@ class PlannedFunction:
         analyze_effects: bool = False,
         verify: bool = False,
         verify_hlo: bool = False,
+        donate: bool = False,
     ):
         self.fn = fn
         self.budget = budget
@@ -80,6 +81,7 @@ class PlannedFunction:
         self.analyze_effects = analyze_effects
         self.verify = verify
         self.verify_hlo = verify_hlo
+        self.donate = donate
         self._memo: Dict[Tuple, LoweredPlan] = {}
 
     # ------------------------------------------------------------------ plan
@@ -213,7 +215,8 @@ class PlannedFunction:
             if not hrep.ok:
                 raise PlanVerificationError(str(hrep))
         backend = resolve_backend(self.backend, carrier)
-        run = backend.lower(carrier, report.plan, track_live=self.track_live)
+        run = backend.lower(carrier, report.plan, track_live=self.track_live,
+                            donate=self.donate)
         lowered = LoweredPlan(
             carrier=carrier, report=report, plan=report.plan,
             backend=backend.name, run=run,
@@ -242,6 +245,7 @@ def plan_function(
     analyze_effects: bool = False,
     verify: bool = False,
     verify_hlo: bool = False,
+    donate: bool = False,
 ) -> PlannedFunction:
     """Plan ``fn``'s recomputation under ``budget`` bytes; return its
     value_and_grad twin.
@@ -278,7 +282,12 @@ def plan_function(
         ``"jaxpr"``.
     method / objective:
         Planner knobs (§4): ``"approx_dp"``/``"exact_dp"`` ×
-        ``"time_centric"``/``"memory_centric"``.
+        ``"time_centric"``/``"memory_centric"``/``"wallclock"``.
+        ``"wallclock"`` ranks every budget-feasible Pareto candidate by
+        replayed step time (``core.replay``: recompute/backward overlap
+        within the budget's liveness headroom, collectives priced from the
+        mesh) instead of summed eq. (1) overhead; the chosen plan's
+        replayed seconds land in ``PlanReport.replayed_seconds``.
     argnums:
         Which positional args to differentiate (``jax.value_and_grad``
         semantics; traced carrier only).
@@ -308,6 +317,15 @@ def plan_function(
         ``compiled.memory_analysis()``.  Traced carriers only (BlockGraph
         carriers report ``not-applicable``).
 
+    donate:
+        Jit the lowered twin with donation hints (``jaxpr``/``segment``
+        backends): non-differentiated positional args are marked
+        ``donate_argnums`` so XLA's buffer assignment may alias them, and
+        the per-segment dead-at-peak hints (``lowering.donation``) are
+        attached to the returned callable.  Values and gradients are
+        unchanged; callers must not reuse donated arrays after the call on
+        backends that implement donation (CPU warns and ignores).
+
     The ``REPRO_VERIFY_PLANS`` environment variable overrides both flags at
     the launch layer: any truthy value enables ``verify``; the value
     ``"hlo"`` enables ``verify`` *and* ``verify_hlo``.
@@ -326,7 +344,7 @@ def plan_function(
         loss_fn=loss_fn, planner=planner, track_live=track_live,
         mesh=mesh, in_shardings=in_shardings,
         analyze_effects=analyze_effects, verify=verify,
-        verify_hlo=verify_hlo,
+        verify_hlo=verify_hlo, donate=donate,
     )
 
 

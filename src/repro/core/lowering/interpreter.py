@@ -394,7 +394,12 @@ class InterpreterLowering(Lowering):
     def supports(self, carrier) -> bool:
         return isinstance(carrier, (BlockGraphCarrier, TracedCarrier))
 
-    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False,
+              donate: bool = False):
+        if donate:
+            from .base import reject_donate
+
+            reject_donate(self.name)
         if isinstance(carrier, BlockGraphCarrier):
             return planned_value_and_grad(
                 carrier.bg, plan, carrier.loss_fn, track_live=track_live

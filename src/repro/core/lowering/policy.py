@@ -29,6 +29,7 @@ from .base import (
     Lowering,
     blockgraph_value_and_grad,
     register_lowering,
+    reject_donate,
     reject_track_live,
 )
 from .carriers import BlockGraphCarrier, TracedCarrier, is_drop_var as _is_drop
@@ -156,9 +157,12 @@ class PolicyLowering(Lowering):
     def supports(self, carrier) -> bool:
         return isinstance(carrier, BlockGraphCarrier)
 
-    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False,
+              donate: bool = False):
         if track_live:
             reject_track_live(self.name)
+        if donate:
+            reject_donate(self.name)
         return blockgraph_value_and_grad(
             lambda p, x, _bg=carrier.bg, _plan=plan, _m=carrier.mesh:
                 apply_with_policy(_bg, p, x, _plan, mesh=_m),
@@ -174,10 +178,16 @@ class JaxprLowering(Lowering):
     def supports(self, carrier) -> bool:
         return isinstance(carrier, TracedCarrier)
 
-    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False,
+              donate: bool = False):
         if track_live:
             reject_track_live(self.name)
-        return traced_value_and_grad(carrier, plan)
+        fn = traced_value_and_grad(carrier, plan)
+        if donate:
+            from .donation import donate_lowered
+
+            fn = donate_lowered(fn, carrier, carrier.to_graph(), plan)
+        return fn
 
 
 register_lowering(PolicyLowering())

@@ -155,14 +155,20 @@ class SegmentLowering(Lowering):
     def supports(self, carrier) -> bool:
         return isinstance(carrier, BlockGraphCarrier)
 
-    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False):
+    def lower(self, carrier, plan: ExecutionPlan, track_live: bool = False,
+              donate: bool = False):
         if track_live:
             reject_track_live(self.name)
-        return blockgraph_value_and_grad(
+        fn = blockgraph_value_and_grad(
             lambda p, x, _bg=carrier.bg, _plan=plan, _m=carrier.mesh:
                 apply_segmented(_bg, p, x, _plan, mesh=_m),
             carrier.loss_fn,
         )
+        if donate:
+            from .donation import donate_lowered
+
+            fn = donate_lowered(fn, carrier, carrier.to_graph(), plan)
+        return fn
 
 
 register_lowering(SegmentLowering())

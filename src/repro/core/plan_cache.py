@@ -57,7 +57,7 @@ import os
 import threading
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.checkpointing.store import atomic_write_json, read_json
 
@@ -116,6 +116,46 @@ def _locked_write_json(path: str, obj: object,
             pass
 
 
+def _locked_unlink(path: str, stale_s: float = STALE_LOCK_SECONDS) -> bool:
+    """Cross-process exclusive delete; returns True when this call removed.
+
+    The GC sweep's counterpart of :func:`_locked_write_json`: deleting an
+    entry takes the same ``<path>.lock`` sidecar, so a sweep never yanks a
+    file out from under an in-flight write (the writer holds the lock for
+    the whole temp-file + rename).  A held live lock means someone is
+    *refreshing* this digest — skip it, it is not garbage.  Stale locks are
+    broken with the same age rule as writes.
+    """
+    lock = path + ".lock"
+    try:
+        fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        try:
+            age = time.time() - os.path.getmtime(lock)
+        except OSError:
+            return False  # holder finished between our open and stat
+        if age < stale_s:
+            return False  # live writer — the entry is being refreshed
+        try:
+            os.unlink(lock)
+            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except OSError:
+            return False
+    except OSError:
+        return False  # e.g. shard directory already swept away
+    try:
+        os.unlink(path)
+        return True
+    except OSError:
+        return False
+    finally:
+        os.close(fd)
+        try:
+            os.unlink(lock)
+        except OSError:  # pragma: no cover — lock vanished under us
+            pass
+
+
 # ---------------------------------------------------------------------------
 # Remote (fleet-shared) stores: the third tier under LRU + disk.
 # ---------------------------------------------------------------------------
@@ -148,12 +188,29 @@ class SharedFSStore(RemoteStore):
     be seeded by simply copying a warm node's cache directory.  Pushes go
     through :func:`_locked_write_json` — concurrent read-through writers on
     one digest across *hosts* are serialized by the O_EXCL lock.
+
+    **Bounded** when constructed with ``max_bytes`` and/or ``max_age_s``:
+    a fleet store accretes one entry per (graph, budget/sweep) signature
+    forever — re-profiling, functional bumps and model churn all mint new
+    digests and orphan the old ones.  :meth:`gc` sweeps the object tree:
+    entries older than ``max_age_s`` go first, then oldest-first until the
+    tree fits ``max_bytes``.  Deletions take each entry's O_EXCL ``.lock``
+    (``_locked_unlink``), so a sweep never races an in-flight writer, and
+    any entry it does remove is merely re-solvable — content addressing
+    means eviction can never serve a *wrong* plan, only cost a re-solve.
+    Every ``gc_every``-th push triggers an opportunistic sweep so
+    long-running pushers keep the store bounded without a cron job.
     """
 
     scheme = "file"
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, max_bytes: Optional[int] = None,
+                 max_age_s: Optional[float] = None, gc_every: int = 64):
         self.root = root
+        self.max_bytes = max_bytes
+        self.max_age_s = max_age_s
+        self.gc_every = max(int(gc_every), 1)
+        self._pushes = 0
 
     def _path(self, content_hash: str) -> str:
         return os.path.join(
@@ -166,13 +223,107 @@ class SharedFSStore(RemoteStore):
 
     def push(self, content_hash: str, entry: dict) -> None:
         _locked_write_json(self._path(content_hash), entry)
+        self._pushes += 1
+        if (self.max_bytes is not None or self.max_age_s is not None) \
+                and self._pushes % self.gc_every == 0:
+            self.gc()
+
+    def _scan(self) -> List[Tuple[float, int, str]]:
+        """All entry files as ``(mtime, size, path)``, oldest first."""
+        out: List[Tuple[float, int, str]] = []
+        plans = os.path.join(self.root, "plans")
+        try:
+            shards = sorted(os.scandir(plans), key=lambda d: d.name)
+        except OSError:
+            return out
+        for shard in shards:
+            if not shard.is_dir():
+                continue
+            try:
+                files = os.scandir(shard.path)
+            except OSError:
+                continue
+            for f in files:
+                if not f.name.endswith(".json"):
+                    continue  # .lock sidecars and foreign files
+                try:
+                    st = f.stat()
+                except OSError:
+                    continue  # deleted under us by a concurrent sweep
+                out.append((st.st_mtime, st.st_size, f.path))
+        out.sort()
+        return out
+
+    def gc(self, now: Optional[float] = None) -> Dict[str, int]:
+        """One sweep; returns ``{scanned, removed, bytes, bytes_freed}``.
+
+        Age rule first (anything older than ``max_age_s``), then the size
+        rule (evict oldest-first until the surviving tree is ≤
+        ``max_bytes``).  Entries whose lock is held by a live writer are
+        skipped — they are being refreshed, not garbage.
+        """
+        entries = self._scan()
+        total = sum(size for _, size, _ in entries)
+        scanned = len(entries)
+        removed = 0
+        freed = 0
+        t0 = time.time() if now is None else now
+        survivors: List[Tuple[float, int, str]] = []
+        for mtime, size, path in entries:
+            if self.max_age_s is not None and t0 - mtime > self.max_age_s:
+                if _locked_unlink(path):
+                    removed += 1
+                    freed += size
+                    continue
+            survivors.append((mtime, size, path))
+        if self.max_bytes is not None:
+            live = total - freed
+            for mtime, size, path in survivors:  # oldest first
+                if live <= self.max_bytes:
+                    break
+                if _locked_unlink(path):
+                    removed += 1
+                    freed += size
+                    live -= size
+        return {"scanned": scanned, "removed": removed,
+                "bytes": total - freed, "bytes_freed": freed}
+
+
+class CallableStore(RemoteStore):
+    """User-supplied transport as two callables — no subclassing needed.
+
+    ``fetch(content_hash) -> Optional[dict]`` and
+    ``push(content_hash, entry: dict) -> None`` over any blob client
+    (boto3, google-cloud-storage, an internal KV service…).  The adapter
+    normalizes non-dict fetch results to ``None`` (a miss) so a sloppy
+    transport can't feed the decoder garbage; transport exceptions follow
+    the :class:`RemoteStore` contract (raise ``OSError`` to be counted and
+    degraded to a miss).
+    """
+
+    def __init__(
+        self,
+        fetch: Callable[[str], Optional[dict]],
+        push: Callable[[str, dict], None],
+        scheme: str = "callable",
+    ):
+        self._fetch = fetch
+        self._push = push
+        self.scheme = scheme
+
+    def fetch(self, content_hash: str) -> Optional[dict]:
+        entry = self._fetch(content_hash)
+        return entry if isinstance(entry, dict) else None
+
+    def push(self, content_hash: str, entry: dict) -> None:
+        self._push(content_hash, entry)
 
 
 class _ObjectStoreStub(RemoteStore):
-    """Placeholder for bucket transports (s3:// / gs://): constructing one
-    names the URL it would serve; using it raises with a pointer to the
-    interface to implement.  Kept importable so launcher configs can carry
-    bucket URLs before the blob client lands."""
+    """Placeholder for unregistered bucket transports (s3:// / gs://):
+    constructing one names the URL it would serve; using it raises with a
+    pointer to :func:`register_transport`.  Kept importable so launcher
+    configs can carry bucket URLs before the blob client is wired up."""
 
     def __init__(self, scheme: str, url: str):
         self.scheme = scheme
@@ -180,9 +331,10 @@ class _ObjectStoreStub(RemoteStore):
 
     def _unimplemented(self) -> "NotImplementedError":
         return NotImplementedError(
-            f"{self.scheme}:// plan stores are stubbed: implement "
-            f"RemoteStore.fetch/push over your object-store client and pass "
-            f"the instance to PlanCache(remote=...) (url: {self.url!r})"
+            f"no transport registered for {self.scheme}:// plan stores: "
+            f"register_transport({self.scheme!r}, factory) with a factory "
+            f"returning a RemoteStore/CallableStore over your object-store "
+            f"client (url: {self.url!r})"
         )
 
     def fetch(self, content_hash: str) -> Optional[dict]:
@@ -192,12 +344,41 @@ class _ObjectStoreStub(RemoteStore):
         raise self._unimplemented()
 
 
+#: URL-scheme → factory taking the full URL and returning the transport.
+_TRANSPORTS: Dict[str, Callable[[str], RemoteStore]] = {}
+
+
+def register_transport(
+    scheme: str, factory: Callable[[str], RemoteStore]
+) -> None:
+    """Register (or replace) the transport factory for a URL scheme.
+
+    Lets deployments route ``s3://`` / ``gs://`` (or any custom scheme) plan
+    stores through their own client without forking this module::
+
+        register_transport("s3", lambda url: CallableStore(
+            fetch=lambda h: my_get_json(url, h),
+            push=lambda h, e: my_put_json(url, h, e),
+            scheme="s3"))
+
+    Every URL-configured entry point then resolves through it —
+    ``PlanCache(remote="s3://bucket/plans")``, ``set_default_remote_store``,
+    the ``REPRO_PLAN_REMOTE_DIR`` env var, the serving engine's
+    ``plan_remote=``.  Registering ``"file"`` overrides the built-in
+    :class:`SharedFSStore` resolution (e.g. to attach GC bounds).
+    """
+    _TRANSPORTS[scheme] = factory
+
+
 def remote_store_from_url(url: str) -> RemoteStore:
-    """``/dir``, ``file:///dir`` → :class:`SharedFSStore`; ``s3://…`` /
-    ``gs://…`` → the object-store stub (raises on first use)."""
+    """``/dir``, ``file:///dir`` → :class:`SharedFSStore`; a registered
+    scheme (``register_transport``) → its factory; unregistered ``s3://`` /
+    ``gs://`` → the object-store stub (raises on first use)."""
     if "://" not in url:
         return SharedFSStore(url)
     scheme, _, rest = url.partition("://")
+    if scheme in _TRANSPORTS:
+        return _TRANSPORTS[scheme](url)
     if scheme == "file":
         return SharedFSStore("/" + rest.lstrip("/") if rest else "/")
     if scheme in ("s3", "gs"):

@@ -51,17 +51,31 @@ class PlanReport:
     """Everything the framework (and the benchmarks) need about one plan."""
 
     method: str  # "exact_dp" | "approx_dp" | "chen" | "vanilla"
-    objective: str  # "time_centric" | "memory_centric" | "-"
+    objective: str  # "time_centric" | "memory_centric" | "wallclock" | "-"
     budget: float
     result: DPResult
     plan: Optional[ExecutionPlan]
     peak_with_liveness: float
     peak_without_liveness: float
     plan_seconds: float
+    # Replayed step time (core.replay, overlap on, budget-headroom overlap
+    # stream) — filled for objective="wallclock" plans, None otherwise.
+    replayed_seconds: Optional[float] = None
 
     @property
     def feasible(self) -> bool:
         return self.result.feasible
+
+
+def _surface_objective(objective: str) -> str:
+    """Sweep-surface key for an objective.
+
+    "wallclock" shares the time-centric transition surface bit-for-bit
+    (only *extraction* differs: replay ranking instead of min-t), so it
+    reuses — and warms — the ``time_centric`` cache entry instead of
+    storing a duplicate.
+    """
+    return "time_centric" if objective == "wallclock" else objective
 
 
 def _family(g: Graph, method: str) -> Sequence[NodeSet]:
@@ -315,6 +329,53 @@ class Planner:
             states_visited=sw.states_visited,
         )
 
+    def _extract_wallclock(
+        self, sw: dp_mod.Sweep, gp: Graph, budget: float
+    ) -> Optional[DPResult]:
+        """Replay-ranked budget-B extraction (``objective="wallclock"``).
+
+        The sweep is stored in canonical coordinates; remap to the graph's
+        own labels first, then rank every feasible terminal by replayed
+        step time (``dp.Sweep.extract_wallclock``).  ``gp`` is already
+        calibrated by :meth:`prepare`, so the replay reads its ``T_v``
+        directly — the ranking is profile-aware through the calibration.
+        """
+        _, from_pos = canonical_maps(gp)
+        try:
+            res = sw.remap(from_pos).extract_wallclock(gp, budget)
+        except (KeyError, IndexError, TypeError, ValueError):
+            return None
+        if res.feasible:
+            try:
+                gp.check_increasing_sequence(res.sequence)
+            except (ValueError, IndexError, KeyError):
+                return None
+        return res
+
+    def _solve_wallclock(
+        self, gp: Graph, budget: float, method: str
+    ) -> DPResult:
+        """Wall-clock plan selection over the shared time-centric surface.
+
+        The "wallclock" objective needs the whole candidate set at
+        ``budget``, not one extraction — and its transition surface is
+        bit-identical to the time-centric one — so it reuses (and warms)
+        the *time_centric* sweep cache entry rather than storing a
+        duplicate surface under its own key.  On sweep overflow the
+        objective degrades to plain time-centric selection (logged).
+        """
+        sw = self._cached_sweep(gp, method, "time_centric", count_miss=True)
+        if sw is None or not sw.covers(budget):
+            sw = self._build_sweep(gp, method, "time_centric", cap=budget,
+                                   prior=sw)
+        if sw is not None:
+            res = self._extract_wallclock(sw, gp, budget)
+            if res is not None:
+                return res
+        _LOG.info("wallclock selection unavailable for %r (sweep overflow "
+                  "or corrupt entry); degrading to time_centric", gp)
+        return self.solve(gp, budget, method, "time_centric", prepared=True)
+
     def prewarm(
         self,
         g: Graph,
@@ -334,6 +395,7 @@ class Planner:
         the per-budget DP as usual).
         """
         gp = self.prepare(g)
+        objective = _surface_objective(objective)
         sw = self._cached_sweep(gp, method, objective, count_miss=False)
         if sw is not None and sw.cap is None:
             return True
@@ -356,6 +418,7 @@ class Planner:
         explicit budgets (a capped, much cheaper sweep) in that case.
         """
         gp = g if prepared else self.prepare(g)
+        objective = _surface_objective(objective)
         sw = self._cached_sweep(gp, method, objective, count_miss=True)
         if sw is None or sw.cap is not None:
             sw = self._build_sweep(gp, method, objective, cap=None,
@@ -384,14 +447,20 @@ class Planner:
         gp = g if prepared else self.prepare(g)
         if method in self.CACHEABLE_METHODS:
             b_max = max(budgets)
-            sw = self._cached_sweep(gp, method, objective, count_miss=True)
+            surface = _surface_objective(objective)
+            sw = self._cached_sweep(gp, method, surface, count_miss=True)
             if sw is None or not sw.covers(b_max):
                 # lazy refinement: an existing capped surface grows to the
                 # new largest budget instead of being rebuilt
-                sw = self._build_sweep(gp, method, objective, cap=b_max,
+                sw = self._build_sweep(gp, method, surface, cap=b_max,
                                        prior=sw)
             if sw is not None:
-                out = [self._extract(sw, gp, b) for b in budgets]
+                out = [
+                    self._extract_wallclock(sw, gp, b)
+                    if objective == "wallclock"
+                    else self._extract(sw, gp, b)
+                    for b in budgets
+                ]
                 if all(r is not None for r in out):
                     return out
         return [
@@ -423,6 +492,8 @@ class Planner:
             return solve(gp, budget, list(family), objective)
         if method not in self.CACHEABLE_METHODS:
             return solve(gp, budget, self._family_for(gp, method), objective)
+        if objective == "wallclock":
+            return self._solve_wallclock(gp, budget, method)
         sw = self._cached_sweep(gp, method, objective)
         if sw is not None and sw.covers(budget):
             res = self._extract(sw, gp, budget)
@@ -530,6 +601,11 @@ class Planner:
         ep = make_plan(gp, res.sequence)
         sim_live = simulate(gp, res.sequence, liveness=True)
         sim_nolive = simulate(gp, res.sequence, liveness=False)
+        replayed = None
+        if objective == "wallclock" and method.endswith("dp"):
+            from .replay import replay as _replay
+
+            replayed = _replay(gp, ep, budget=budget).seconds
         return PlanReport(
             method=method,
             objective=objective if method.endswith("dp") else "-",
@@ -539,6 +615,7 @@ class Planner:
             peak_with_liveness=sim_live.peak_memory,
             peak_without_liveness=sim_nolive.peak_memory,
             plan_seconds=dt,
+            replayed_seconds=replayed,
         )
 
 

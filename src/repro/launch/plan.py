@@ -460,6 +460,14 @@ def plan_with_microbatching(
     budget) against the fixed per-microbatch cost ``MICRO_STEP_TAX``.  The
     best feasible factor wins; ties break toward fewer microbatches.
     Infeasible-everywhere falls back to the largest factor (old behavior).
+
+    With ``objective="wallclock"`` each candidate factor is priced by the
+    discrete-event replay simulator (``core.replay``) instead of the
+    additive model: recompute that hides under the next segment's backward
+    window (budget headroom permitting) is not charged, so a factor whose
+    overhead overlaps away can beat a nominally lower-overhead one.  The
+    early-exit guard is unchanged — overlap only shrinks a factor's step
+    time, so the overhead bound on potential savings still holds.
     """
     b_loc = max(1, shape.global_batch // max(dp_shards, 1))
     planner = get_default_planner()
@@ -472,7 +480,19 @@ def plan_with_microbatching(
         res = planner.solve_grid(g, [pi.budget], "exact_dp", objective)[0]
         if res.feasible:
             oh_frac = res.overhead / g.total_time
-            t_model = 3.0 + oh_frac + (n_micro - 1) * MICRO_STEP_TAX
+            if objective == "wallclock":
+                # Price the candidate with the replay simulator instead of
+                # the additive overhead model: replayed seconds (with the
+                # budget's headroom spent on overlap) normalized by forward
+                # time is directly comparable to 3 + oh_frac across factors.
+                from repro.core.replay import replay
+                from repro.core.schedule import make_plan
+
+                rr = replay(g, make_plan(g, res.sequence), budget=pi.budget)
+                t_model = (rr.seconds / g.total_time
+                           + (n_micro - 1) * MICRO_STEP_TAX)
+            else:
+                t_model = 3.0 + oh_frac + (n_micro - 1) * MICRO_STEP_TAX
             if best is None or t_model < best[0]:
                 best = (t_model, n_micro)
             # sound early exit: a larger factor k' ≥ 2k pays ≥ k·tax extra

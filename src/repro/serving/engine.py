@@ -137,7 +137,7 @@ class Engine:
         )
 
     def plan_scoring(self, loss_fn, budget: float, in_shardings: Any = None,
-                     **kw):
+                     objective: str = "wallclock", **kw):
         """A planned value_and_grad over ``(params, batch)`` sharing this
         engine's mesh and plan cache.
 
@@ -146,11 +146,20 @@ class Engine:
         *leftover* per-device memory: the returned twin is
         ``repro.plan_function(loss_fn, budget, mesh=self.mesh, ...)`` — one
         pipeline, one store, per-device budget semantics.
+
+        Scoring steps steal cycles from decode, so the default objective is
+        ``"wallclock"``: candidate plans at the budget are ranked by the
+        replay simulator's step time (recompute hidden under backward slack
+        is free), and the chosen plan's predicted step seconds are surfaced
+        as ``report.replayed_seconds`` on each lowered twin — the number an
+        admission controller budgets scoring traffic with.  Pass
+        ``objective="time_centric"`` for the plain eq. (1) objective.
         """
         from repro.core.lowering import plan_function
 
         return plan_function(loss_fn, budget, mesh=self.mesh,
-                             in_shardings=in_shardings, **kw)
+                             in_shardings=in_shardings, objective=objective,
+                             **kw)
 
     # ------------------------------------------------------------ admission
 

@@ -1,0 +1,202 @@
+"""Donation-hinted lowerings (ISSUE 9 satellite): hints name exactly the
+dead-at-window buffers, donated twins change no values, the interpreter's
+live-byte audit is untouched, and the drift gate stays green."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core import PlanCache, Planner, make_plan
+from repro.core.lowering import plan_function
+from repro.core.lowering.carriers import BlockGraphCarrier, TracedCarrier
+from repro.core.lowering.donation import donatable_argnums, donation_hints
+
+DN = (((1,), (0,)), ((), ()))
+D = 8
+
+
+def _mlp(depth=6):
+    def fn(params, x):
+        h = x
+        for w in params:
+            h = lax.tanh(lax.dot_general(h, w, DN))
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [jax.random.normal(jax.random.fold_in(key, i), (D, D)) * 0.3
+              for i in range(depth)]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, D))
+    return fn, (params, x)
+
+
+def _halved_budget(fn, args):
+    from repro.core.jaxpr_graph import trace as jtrace
+    from repro.core.liveness import vanilla_peak
+
+    return vanilla_peak(jtrace(fn, *args).graph, liveness=False) / 2
+
+
+def _planned(fn, args, **kw):
+    planner = Planner(cache=PlanCache())
+    pf = plan_function(fn, _halved_budget(fn, args), planner=planner, **kw)
+    return pf.lowered_for(*args)
+
+
+def _assert_bits(got, ref):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    for a, b in zip(jax.tree_util.tree_leaves(got[1]),
+                    jax.tree_util.tree_leaves(ref[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------- hint shape
+
+
+def test_donation_hints_are_dead_at_window(rng):
+    from conftest import random_dag
+    from repro.core import dp as dp_mod
+    from repro.core.lower_sets import all_lower_sets
+
+    for trial in range(20):
+        g = random_dag(rng, rng.randint(2, 8))
+        fam = all_lower_sets(g)
+        B = dp_mod.min_feasible_budget_exact(g, fam)
+        res = dp_mod.solve(g, B, fam)
+        if not res.feasible:
+            continue
+        plan = make_plan(g, res.sequence)
+        hints = donation_hints(g, plan)
+        cached_names = {g.nodes[v].name for v in plan.cached}
+        assert set(hints) == {seg.index for seg in plan.segments}
+        for seg in plan.segments:
+            names = set(hints[seg.index])
+            # exactly the cached residuals outside this window's lower set
+            assert names == {
+                g.nodes[v].name for v in plan.cached - seg.lower_set
+            }, trial
+            assert names <= cached_names
+            assert not names & {g.nodes[v].name for v in seg.lower_set}
+        # the last window holds every cached residual: nothing is dead
+        assert hints[plan.segments[-1].index] == ()
+
+
+def test_donatable_argnums_skip_differentiated():
+    fn, args = _mlp(3)
+    c0 = TracedCarrier.trace(fn, args)  # argnums=0 (params)
+    assert donatable_argnums(c0) == (1,)
+    c_all = TracedCarrier.trace(fn, args, argnums=(0, 1))
+    assert donatable_argnums(c_all) == ()
+    # BlockGraph convention: f(params, inputs) — inputs donatable
+    assert donatable_argnums(object()) == (1,)
+
+
+# ----------------------------------------------------- values are unchanged
+
+
+def test_donated_jaxpr_grads_bit_identical():
+    """The donated twin == the jitted planned twin == jitted vanilla
+    jax.value_and_grad, bit for bit (donation is a buffer hint, not a
+    numeric change; the jit boundary itself is shared by all three)."""
+    fn, args = _mlp()
+    plain = _planned(fn, args, backend="jaxpr")
+    donated = _planned(fn, args, backend="jaxpr", donate=True)
+    assert donated.run.donate_argnums == (1,)
+    assert set(donated.run.donation_hints) == {
+        seg.index for seg in donated.plan.segments
+    }
+    with warnings.catch_warnings():
+        # CPU backends warn that donation is unimplemented and ignore it
+        warnings.simplefilter("ignore")
+        out_donated = donated.run(*args)
+    _assert_bits(out_donated, jax.jit(plain.run)(*args))
+    _assert_bits(out_donated, jax.jit(jax.value_and_grad(fn))(*args))
+
+
+def test_donated_segment_backend_bit_identical():
+    from repro.core.blockgraph import Block, BlockGraph
+
+    def lin_init(rng, *in_shapes):
+        return {"w": jax.random.normal(rng, (D, D)) * 0.3}
+
+    def lin(p, *xs):
+        h = xs[0]
+        for x in xs[1:]:
+            h = lax.add(h, x)
+        return lax.tanh(lax.dot_general(h, p["w"], DN))
+
+    blocks = [Block("b0", lin, ("x",), lin_init)]
+    for i in range(1, 5):
+        blocks.append(Block(f"b{i}", lin, (f"b{i-1}",), lin_init))
+    bg = BlockGraph(blocks, ["x"], ["b4"])
+    params = bg.init(jax.random.PRNGKey(3), {"x": (4, D)})
+    inputs = {"x": jax.random.normal(jax.random.PRNGKey(4), (4, D))}
+    loss_fn = lambda o: jnp.sum(o * o)
+
+    planner = Planner(cache=PlanCache())
+    carrier = BlockGraphCarrier(bg, loss_fn, params, inputs)
+    budget = planner.min_feasible_budget(carrier.to_graph(), "exact_dp")
+    plain = plan_function(bg, budget, loss_fn=loss_fn, backend="segment",
+                          planner=planner).lowered_for(params, inputs)
+    donated = plan_function(bg, budget, loss_fn=loss_fn, backend="segment",
+                            donate=True, planner=planner
+                            ).lowered_for(params, inputs)
+    assert donated.run.donate_argnums == (1,)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        out_donated = donated.run(params, inputs)
+    _assert_bits(out_donated, jax.jit(plain.run)(params, inputs))
+
+
+def test_donate_rejected_without_jit_boundary():
+    fn, args = _mlp(3)
+    for backend in ("interpreter",):
+        pf = plan_function(fn, backend=backend, donate=True,
+                           planner=Planner(cache=PlanCache()))
+        with pytest.raises(ValueError, match="jit boundary"):
+            pf.lowered_for(*args)
+    from repro.core.lowering.base import reject_donate
+
+    with pytest.raises(ValueError, match="jit boundary"):
+        reject_donate("policy")
+
+
+# --------------------------------------------------- audit + drift unchanged
+
+
+def test_interpreter_audit_unchanged_by_donation():
+    """Donation is lowering-local: the same plan's interpreter live-byte
+    trace is identical before and after a donated lowering exists."""
+    fn, args = _mlp()
+    planner = Planner(cache=PlanCache())
+    budget = _halved_budget(fn, args)
+    pf_audit = plan_function(fn, budget, backend="interpreter",
+                             track_live=True, planner=planner)
+    _, _, live_before = pf_audit(*args)
+    donated = plan_function(fn, budget, backend="jaxpr", donate=True,
+                            planner=planner).lowered_for(*args)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        donated.run(*args)
+    _, _, live_after = pf_audit(*args)
+    assert live_before == live_after
+    peak_live = max(b for _, b in live_after)
+    assert peak_live <= donated.plan.peak_memory
+
+
+def test_drift_gate_green_on_donated_twin():
+    """check_hlo with donate=True: the donation-hinted compile passes the
+    same conformance + memory-drift gate as the plain lowering."""
+    from repro.analysis import check_hlo
+
+    fn, args = _mlp(4)
+    carrier = TracedCarrier.trace(fn, args)
+    planner = Planner(cache=PlanCache())
+    g = carrier.to_graph()
+    rep = planner.plan(g, planner.min_feasible_budget(g))
+    assert rep.plan is not None
+    r = check_hlo(carrier, rep.plan, donate=True)
+    assert r.ok, str(r.findings)

@@ -601,3 +601,166 @@ def test_prewarm_reads_through_fleet_store(tmp_path, rng, monkeypatch):
 
     monkeypatch.setattr(planner_mod.dp_mod, "sweep", poisoned)
     assert p2.prewarm(g, "exact_dp") is True
+
+
+# ------------------------------------------------------- store GC (ISSUE 9)
+
+
+def _fill_store(store, n=8, pad=40):
+    for i in range(n):
+        store.push(f"{i:02x}" + "a" * 62, {"v": i, "pad": "x" * pad})
+
+
+def test_shared_fs_store_gc_size_bound(tmp_path):
+    import os
+
+    from repro.core.plan_cache import SharedFSStore
+
+    store = SharedFSStore(str(tmp_path), max_bytes=200)
+    _fill_store(store, n=8)
+    stats = store.gc()
+    assert stats["bytes"] <= 200
+    assert stats["removed"] >= 1
+    assert stats["bytes_freed"] > 0
+    # newest entries survive, oldest were evicted
+    survivors = {
+        f for _, d, fs in os.walk(tmp_path) for f in fs
+        if f.endswith(".json")
+    }
+    assert ("07" + "a" * 62 + ".json") in survivors
+    # no lock litter after the sweep
+    locks = [f for _, d, fs in os.walk(tmp_path) for f in fs
+             if f.endswith(".lock")]
+    assert locks == []
+
+
+def test_shared_fs_store_gc_age_bound(tmp_path):
+    import time
+
+    from repro.core.plan_cache import SharedFSStore
+
+    store = SharedFSStore(str(tmp_path), max_age_s=3600.0)
+    _fill_store(store, n=4)
+    assert store.gc()["removed"] == 0  # everything is fresh
+    # pretend an hour passed
+    stats = store.gc(now=time.time() + 3601.0)
+    assert stats["removed"] == 4 and stats["bytes"] == 0
+
+
+def test_shared_fs_store_gc_skips_locked_entries(tmp_path):
+    import os
+    import time
+
+    from repro.core.plan_cache import SharedFSStore
+
+    store = SharedFSStore(str(tmp_path))
+    h = "ab" + "c" * 62
+    store.push(h, {"v": 1})
+    path = store._path(h)
+    open(path + ".lock", "w").close()  # a live writer owns this digest
+    bounded = SharedFSStore(str(tmp_path), max_age_s=0.0)
+    time.sleep(0.02)
+    stats = bounded.gc()
+    assert os.path.exists(path)  # refreshing entry survived the sweep
+    assert stats["removed"] == 0
+    os.unlink(path + ".lock")
+    assert bounded.gc()["removed"] == 1
+
+
+def test_shared_fs_store_gc_triggers_on_push(tmp_path):
+    from repro.core.plan_cache import SharedFSStore
+
+    store = SharedFSStore(str(tmp_path), max_bytes=150, gc_every=4)
+    _fill_store(store, n=8)  # 8 pushes → 2 opportunistic sweeps
+    assert store.gc()["bytes"] <= 150
+    # an unbounded store never sweeps on push (gc() stays a manual call)
+    unbounded = SharedFSStore(str(tmp_path))
+    _fill_store(unbounded, n=4)
+    assert unbounded.gc(now=0.0)["removed"] == 0  # no bounds → no rule fires
+
+
+def test_gc_evicted_plan_is_resolvable(tmp_path, rng):
+    """Eviction costs a re-solve, never a wrong plan: after a full sweep the
+    same planner query re-solves and re-pushes."""
+    from repro.core.plan_cache import SharedFSStore
+
+    g = random_dag(rng, 6)
+    fleet = str(tmp_path / "fleet")
+    store = SharedFSStore(fleet, max_age_s=0.0)
+    p1 = Planner(cache=PlanCache(remote=store))
+    B = p1.min_feasible_budget(g, "exact_dp")
+    res1 = p1.solve(g, B, "exact_dp")
+    import time
+
+    time.sleep(0.02)
+    store.gc()  # everything evicted
+    p2 = Planner(cache=PlanCache(remote=SharedFSStore(fleet)))
+    res2 = p2.solve(g, B, "exact_dp")
+    assert res2.sequence == res1.sequence
+    assert res2.overhead == res1.overhead
+
+
+# ------------------------------------------- pluggable transports (ISSUE 9)
+
+
+def test_callable_store_roundtrip_and_none_normalization():
+    from repro.core.plan_cache import CallableStore
+
+    blob = {}
+    store = CallableStore(fetch=blob.get,
+                          push=lambda h, e: blob.__setitem__(h, e),
+                          scheme="mem")
+    store.push("aa", {"k": 1})
+    assert store.fetch("aa") == {"k": 1}
+    assert store.fetch("missing") is None
+    # non-dict fetch results normalize to a miss
+    blob["bad"] = "not-a-dict"
+    assert store.fetch("bad") is None
+
+
+def test_register_transport_routes_bucket_urls(rng):
+    from repro.core.plan_cache import (
+        CallableStore,
+        _TRANSPORTS,
+        register_transport,
+        remote_store_from_url,
+    )
+
+    blob = {}
+    register_transport("s3", lambda url: CallableStore(
+        fetch=blob.get,
+        push=lambda h, e: blob.__setitem__(h, e),
+        scheme="s3"))
+    try:
+        store = remote_store_from_url("s3://bucket/plans")
+        assert store.scheme == "s3"
+        # the full cache pipeline pushes through and reads through it
+        g = random_dag(rng, 5)
+        c1 = PlanCache(remote="s3://bucket/plans")
+        p1 = Planner(cache=c1)
+        B = p1.min_feasible_budget(g, "exact_dp")
+        res1 = p1.solve(g, B, "exact_dp")
+        assert blob  # pushed through the registered transport
+        c2 = PlanCache(remote="s3://bucket/plans")
+        res2 = Planner(cache=c2).solve(g, B, "exact_dp")
+        assert res2.sequence == res1.sequence
+        assert c2.stats()["remote_hits"] >= 1
+    finally:
+        del _TRANSPORTS["s3"]
+    # unregistered again: back to the stub
+    with pytest.raises(NotImplementedError, match="register_transport"):
+        remote_store_from_url("s3://bucket/plans").fetch("00" * 32)
+
+
+def test_transport_exceptions_degrade_to_miss(rng):
+    from repro.core.plan_cache import CallableStore
+
+    def boom(*a):
+        raise OSError("transport down")
+
+    c = PlanCache(remote=CallableStore(fetch=boom, push=boom))
+    g = random_dag(rng, 5)
+    p = Planner(cache=c)
+    res = p.solve(g, p.min_feasible_budget(g, "exact_dp"), "exact_dp")
+    assert res.feasible  # planning never fails on a broken transport
+    assert c.stats()["remote_errors"] >= 1

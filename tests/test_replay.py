@@ -1,0 +1,279 @@
+"""Discrete-event replay: determinism, peak/overlap properties, wallclock
+plan selection through dp / Planner / plan_function (ISSUE 9)."""
+
+import pytest
+
+from repro.core import (
+    PlanCache,
+    Planner,
+    chain,
+    make_plan,
+    rank_by_replay,
+    replay,
+    window_peaks,
+)
+from repro.core import dp as dp_mod
+from repro.core.lower_sets import all_lower_sets
+
+from conftest import random_dag
+
+
+def _feasible_plans(g, n_budgets=4):
+    """A few (budget, plan) pairs across the graph's feasible range."""
+    fam = all_lower_sets(g)
+    b_min = dp_mod.min_feasible_budget_exact(g, fam)
+    b_max = g.total_memory
+    out = []
+    for i in range(n_budgets):
+        B = b_min + (b_max - b_min) * i / max(n_budgets - 1, 1)
+        res = dp_mod.solve(g, B, fam)
+        if res.feasible:
+            out.append((B, make_plan(g, res.sequence)))
+    return out
+
+
+# ----------------------------------------------------------- core properties
+
+
+def test_replay_deterministic(rng):
+    g = random_dag(rng, 7)
+    for B, plan in _feasible_plans(g):
+        a = replay(g, plan, budget=B)
+        b = replay(g, plan, budget=B)
+        assert a == b
+
+
+def test_window_peaks_match_analytic_peak(rng):
+    """max over backward windows == dp.peak_memory_live, bit for bit."""
+    for trial in range(30):
+        g = random_dag(rng, rng.randint(2, 8))
+        for _, plan in _feasible_plans(g, 3):
+            assert max(window_peaks(g, plan)) == plan.peak_memory, trial
+
+
+def test_simulated_peak_le_analytic_on_random_dags(rng):
+    """Acceptance property: simulated peak ≤ the plan's analytic peak
+    (default budget: the overlap stream may only fill the plan's own
+    headroom)."""
+    for trial in range(30):
+        g = random_dag(rng, rng.randint(2, 8))
+        for _, plan in _feasible_plans(g, 3):
+            res = replay(g, plan)
+            assert res.simulated_peak <= plan.peak_memory, trial
+
+
+def test_simulated_peak_le_budget_when_given(rng):
+    for trial in range(20):
+        g = random_dag(rng, rng.randint(3, 8))
+        for B, plan in _feasible_plans(g, 3):
+            res = replay(g, plan, budget=B)
+            assert res.simulated_peak <= max(B, plan.peak_memory), trial
+
+
+def test_overlap_le_serial_for_every_plan(rng):
+    """Acceptance property: replayed time with overlap ≤ without, and the
+    no-overlap replay equals its own serial sum."""
+    for trial in range(30):
+        g = random_dag(rng, rng.randint(2, 8))
+        for B, plan in _feasible_plans(g, 3):
+            on = replay(g, plan, budget=B)
+            off = replay(g, plan, overlap=False, budget=B)
+            assert on.seconds <= off.seconds, trial
+            assert off.seconds == off.serial_seconds == on.serial_seconds
+            assert on.seconds == on.serial_seconds - on.hidden_seconds
+
+
+def test_more_budget_never_slower(rng):
+    """Headroom is monotone in the budget, so replayed seconds are
+    non-increasing as the budget grows."""
+    for trial in range(20):
+        g = random_dag(rng, rng.randint(3, 8))
+        plans = _feasible_plans(g, 2)
+        if not plans:
+            continue
+        _, plan = plans[0]
+        base = plan.peak_memory
+        prev = None
+        for mult in (1.0, 1.5, 2.0, 4.0):
+            s = replay(g, plan, budget=base * mult).seconds
+            if prev is not None:
+                assert s <= prev + 1e-12, trial
+            prev = s
+
+
+def test_replay_prices_the_whole_step():
+    """The serial sum decomposes exactly: one forward pass + per-segment
+    (recompute + backward_factor·forward + comm)."""
+    g = chain(6)
+    plan = make_plan(g, [frozenset(range(i + 1)) for i in range(6)])
+    res = replay(g, plan, overlap=False)
+    assert res.forward_seconds == g.total_time
+    expected = res.forward_seconds + sum(
+        s.recompute_seconds + s.backward_seconds + s.comm_seconds
+        for s in res.segments
+    )
+    assert res.seconds == res.serial_seconds == expected
+    for seg, timing in zip(plan.segments, res.segments):
+        assert timing.backward_seconds == pytest.approx(
+            2.0 * sum(g.time_v[v] for v in seg.nodes))
+        assert timing.recompute_seconds == pytest.approx(
+            sum(g.time_v[v] for v in seg.recompute))
+    assert res.hidden_seconds == 0.0
+
+
+def test_overlap_hides_recompute_with_headroom():
+    """A plan with real recompute + a budget above its peak must hide a
+    positive amount of replay time."""
+    g = chain(10)
+    fam = all_lower_sets(g)
+    b_min = dp_mod.min_feasible_budget_exact(g, fam)
+    res = dp_mod.solve(g, b_min, fam)
+    plan = make_plan(g, res.sequence)
+    assert any(seg.recompute for seg in plan.segments)
+    roomy = replay(g, plan, budget=g.total_memory)
+    assert roomy.hidden_seconds > 0.0
+    assert roomy.seconds < roomy.serial_seconds
+
+
+def test_comm_bytes_extend_step_time():
+    g = chain(6)
+    plan = make_plan(g, [frozenset(range(i + 1)) for i in range(6)])
+    quiet = replay(g, plan)
+    chatty = replay(g, plan, comm_bytes=4.5e10)  # 1 s at the default fabric
+    assert chatty.serial_seconds == pytest.approx(quiet.serial_seconds + 1.0)
+    assert sum(s.comm_seconds for s in chatty.segments) == pytest.approx(1.0)
+
+
+def test_segment_costs_override_forward_seconds():
+    g = chain(4)
+    plan = make_plan(g, [frozenset(range(i + 1)) for i in range(4)])
+    doubled = {seg.index: 2.0 * sum(g.time_v[v] for v in seg.nodes)
+               for seg in plan.segments}
+    res = replay(g, plan, segment_costs=doubled)
+    assert res.forward_seconds == pytest.approx(2.0 * g.total_time)
+
+
+def test_rank_by_replay_deterministic_tie_break(rng):
+    g = random_dag(rng, 6)
+    seqs = [[s.lower_set for s in pl.segments]
+            for _, pl in _feasible_plans(g, 4)]
+    if not seqs:
+        pytest.skip("no feasible plans on this draw")
+    i1, p1, r1 = rank_by_replay(g, seqs, budget=g.total_memory)
+    i2, p2, r2 = rank_by_replay(g, seqs, budget=g.total_memory)
+    assert (i1, r1.seconds) == (i2, r2.seconds)
+    # identical duplicate candidates resolve to the earlier index
+    i3, _, _ = rank_by_replay(g, [seqs[0], seqs[0]], budget=g.total_memory)
+    assert i3 == 0
+
+
+# ------------------------------------------------- wallclock through the DP
+
+
+def test_dp_solve_wallclock_feasible_and_no_worse(rng):
+    """The wallclock winner replays no slower than the overhead-optimal
+    plan at the same budget (the tc plan is one of its candidates)."""
+    for trial in range(15):
+        g = random_dag(rng, rng.randint(3, 8))
+        fam = all_lower_sets(g)
+        B = dp_mod.min_feasible_budget_exact(g, fam) * 1.3
+        tc = dp_mod.solve(g, B, fam, "time_centric")
+        wc = dp_mod.solve(g, B, fam, "wallclock")
+        if not tc.feasible:
+            assert not wc.feasible
+            continue
+        assert wc.feasible
+        assert wc.peak_memory <= B
+        assert wc.overhead >= tc.overhead  # tc is overhead-minimal
+        r_tc = replay(g, make_plan(g, tc.sequence), budget=B)
+        r_wc = replay(g, make_plan(g, wc.sequence), budget=B)
+        assert r_wc.seconds <= r_tc.seconds + 1e-12, trial
+
+
+def test_dp_solve_wallclock_requires_liveness():
+    g = chain(4)
+    with pytest.raises(ValueError, match="liveness"):
+        dp_mod.solve(g, 4.0, all_lower_sets(g), "wallclock",
+                     functional="eq2")
+
+
+def test_dp_solve_wallclock_infeasible_budget():
+    g = chain(8)
+    res = dp_mod.solve(g, 1.0, all_lower_sets(g), "wallclock")
+    assert not res.feasible
+
+
+# -------------------------------------------- wallclock through the Planner
+
+
+def test_planner_wallclock_solve_and_report():
+    g = chain(12)
+    planner = Planner(cache=PlanCache())
+    B = planner.min_feasible_budget(g, "exact_dp") * 1.2
+    res = planner.solve(g, B, "exact_dp", "wallclock")
+    assert res.feasible and res.peak_memory <= B
+    rep = planner.plan(g, B, "exact_dp", "wallclock")
+    assert rep.plan is not None
+    assert rep.replayed_seconds is not None
+    assert rep.replayed_seconds == pytest.approx(
+        replay(g, rep.plan, budget=B).seconds)
+    # non-wallclock reports carry no replay figure
+    assert planner.plan(g, B, "exact_dp").replayed_seconds is None
+
+
+def test_planner_wallclock_shares_tc_sweep_surface():
+    """wallclock warms/reuses the time_centric sweep entry — no second
+    cached surface for the same graph+family."""
+    g = chain(10)
+    planner = Planner(cache=PlanCache())
+    planner.prewarm(g, "exact_dp", "wallclock")
+    misses_before = planner.cache.stats()["misses"]
+    B = planner.min_feasible_budget(g, "exact_dp") * 1.5
+    wc = planner.solve(g, B, "exact_dp", "wallclock")
+    tc = planner.solve(g, B, "exact_dp", "time_centric")
+    assert wc.feasible and tc.feasible
+    r_wc = replay(g, make_plan(g, wc.sequence), budget=B)
+    r_tc = replay(g, make_plan(g, tc.sequence), budget=B)
+    assert r_wc.seconds <= r_tc.seconds + 1e-12
+    assert planner.cache.stats()["misses"] == misses_before
+
+
+def test_planner_wallclock_solve_grid(rng):
+    g = random_dag(rng, 7)
+    planner = Planner(cache=PlanCache())
+    b_min = planner.min_feasible_budget(g, "exact_dp")
+    budgets = [b_min, b_min * 1.5, b_min * 3.0]
+    grid = planner.solve_grid(g, budgets, "exact_dp", "wallclock")
+    assert len(grid) == len(budgets)
+    for B, res in zip(budgets, grid):
+        assert res.feasible
+        assert res.peak_memory <= B + 1e-9
+        tc = planner.solve(g, B, "exact_dp")
+        assert res.overhead >= tc.overhead - 1e-12
+
+
+# ------------------------------------------------------- front-door surface
+
+
+def test_plan_function_wallclock_report():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.lowering import plan_function
+
+    def fn(params, x):
+        h = x
+        for w in params:
+            h = jnp.tanh(h @ w)
+        return jnp.sum(h * h)
+
+    key = jax.random.PRNGKey(0)
+    params = [jax.random.normal(jax.random.fold_in(key, i), (8, 8)) * 0.3
+              for i in range(4)]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    planner = Planner(cache=PlanCache())
+    pf = plan_function(fn, budget=None, planner=planner,
+                       objective="wallclock", method="exact_dp")
+    lowered = pf.lowered_for(params, x)
+    assert lowered.report.replayed_seconds is not None
+    assert lowered.report.replayed_seconds > 0.0

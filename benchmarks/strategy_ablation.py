@@ -1,0 +1,220 @@
+"""Joint memory-strategy DP ablation on the benchmark nets (PR 10).
+
+For each network the planner runs with nested strategy sets —
+
+  recompute   {store, recompute}              (the paper's binary)
+  +offload    {store, recompute, offload}
+  +quantize   {store, recompute, quantize}
+  joint       {store, recompute, offload, quantize}
+
+— and reports two columns per set: the **exact minimal feasible budget**
+(``dp.min_feasible_budget_exact``) and the **replayed step time** of the
+time-centric plan at a fixed budget (1.25 × the recompute-only minimum),
+priced by the discrete-event replay (``core.replay``) with the
+strategies' transfer/codec streams.
+
+Guards (exit 1 under ``--smoke`` on any violation):
+
+* **budget monotonicity** — enabling a strategy never raises the minimal
+  feasible budget (exact: the extended feasibility problem is the binary
+  one over ``StrategyConfig.min_device_bytes``, a pointwise-smaller byte
+  vector), and the joint set is ≤ each single extension;
+* **overhead monotonicity** — at the fixed budget, the joint DP's taxed
+  t-axis objective never exceeds the recompute-only overhead (exact: the
+  legacy all-store assignment stays in the option set);
+* **step-time regression** — the replayed step time of each extended
+  plan stays within ``REPLAY_TOL`` of the recompute-only plan (the
+  time-centric objective is a proxy for replay, so a noise-sized
+  tolerance applies; ``objective="wallclock"`` ranks the joint candidate
+  pool by replayed seconds directly and is never-slower by construction
+  — property-tested in ``tests/test_strategies.py``, too slow to sweep
+  here);
+* **strict wins** — on ≥ ``MIN_STRICT_WINS`` nets the joint DP finds a
+  *strictly* lower feasible budget, or a strictly lower replayed step
+  time at the fixed budget (the PR's acceptance criterion).
+
+Every run writes ``BENCH_strategies.json`` (per-net columns + guard
+verdicts); ``--smoke`` trims the net set and is wired into CI with the
+artifact uploaded per commit.
+
+The benchmark graphs carry the paper's abstract 10/1 time axis; one unit
+is taken as ~1 ms of compute (``SECONDS_PER_TIME_UNIT``) so the PCIe and
+int8-codec taxes land on the same axis as ``T_v`` and the DP actually
+trades transfer time against recomputation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.core import dp as dp_mod
+from repro.core import make_plan
+from repro.core.lower_sets import pruned_lower_sets
+from repro.core.replay import replay
+from repro.core.strategies import StrategyConfig
+
+from .networks import NETWORKS
+
+SMOKE_NETS = ("vgg19", "unet")
+BUDGET_MULT = 1.25  # fixed budget = 1.25 × recompute-only minimal feasible
+REPLAY_TOL = 0.02  # extended plans: replayed step within 2 % of recompute-only
+MIN_STRICT_WINS = 2  # acceptance: ≥ 2 nets strictly improved by the joint DP
+#: One abstract T unit ≈ 1 ms of compute (vgg-scale conv ≈ 10 ms).
+SECONDS_PER_TIME_UNIT = 1e-3
+
+
+def _cfg(*extra: str) -> StrategyConfig:
+    return StrategyConfig(
+        strategies=("store", "recompute") + extra,
+        seconds_per_time_unit=SECONDS_PER_TIME_UNIT,
+    )
+
+
+#: Ablation cells, in nesting order ("recompute" is the legacy baseline).
+STRATEGY_SETS: Dict[str, Optional[StrategyConfig]] = {
+    "recompute": None,
+    "+offload": _cfg("offload"),
+    "+quantize": _cfg("quantize"),
+    "joint": _cfg("offload", "quantize"),
+}
+
+
+# ------------------------------------------------------------------ per net
+
+
+def bench_net(name: str) -> Dict[str, Any]:
+    g = NETWORKS[name]()
+    fam = pruned_lower_sets(g)
+    row: Dict[str, Any] = {"nodes": g.n, "family": len(fam)}
+
+    cells: Dict[str, Dict[str, Any]] = {}
+    for tag, cfg in STRATEGY_SETS.items():
+        cells[tag] = {
+            "min_feasible_budget": dp_mod.min_feasible_budget_exact(
+                g, fam, strategies=cfg
+            )
+        }
+
+    budget = cells["recompute"]["min_feasible_budget"] * BUDGET_MULT
+    row["budget_bytes"] = budget
+    for tag, cfg in STRATEGY_SETS.items():
+        res = dp_mod.solve(
+            g, budget, fam, objective="time_centric", strategies=cfg
+        )
+        assert res.feasible, (name, tag)
+        plan = make_plan(g, res.sequence, assignment=res.assignment,
+                         strategies=cfg)
+        rr = replay(g, plan, budget=budget, strategies=cfg)
+        asg = res.assignment or {}
+        cells[tag].update(
+            overhead=res.overhead,
+            replayed_step_s=rr.seconds * SECONDS_PER_TIME_UNIT,
+            plan_peak_bytes=plan.peak_memory,
+            segments=len(plan.segments),
+            offloaded=sum(1 for c in asg.values() if c == "offload"),
+            quantized=sum(1 for c in asg.values() if c == "quantize"),
+        )
+    row["cells"] = cells
+    base = cells["recompute"]
+    joint = cells["joint"]
+    row["strict_budget_win"] = (
+        joint["min_feasible_budget"] < base["min_feasible_budget"]
+    )
+    row["strict_step_win"] = joint["replayed_step_s"] < base["replayed_step_s"]
+    return row
+
+
+# -------------------------------------------------------------------- guards
+
+
+def check_rows(rows: Dict[str, Dict[str, Any]]) -> List[str]:
+    failures: List[str] = []
+    for name, r in rows.items():
+        c = r["cells"]
+        base = c["recompute"]
+        for tag in ("+offload", "+quantize", "joint"):
+            if c[tag]["min_feasible_budget"] > base["min_feasible_budget"]:
+                failures.append(
+                    f"{name}/{tag}: min feasible budget rose "
+                    f"({c[tag]['min_feasible_budget']:.3e} > "
+                    f"{base['min_feasible_budget']:.3e})")
+            if c[tag]["overhead"] > base["overhead"] * (1 + 1e-12):
+                failures.append(
+                    f"{name}/{tag}: taxed overhead rose "
+                    f"({c[tag]['overhead']:.4f} > {base['overhead']:.4f})")
+            if (c[tag]["replayed_step_s"]
+                    > base["replayed_step_s"] * (1 + REPLAY_TOL)):
+                failures.append(
+                    f"{name}/{tag}: replayed step regressed "
+                    f"({c[tag]['replayed_step_s']:.4e}s vs "
+                    f"{base['replayed_step_s']:.4e}s, > {REPLAY_TOL:.0%})")
+        for tag in ("+offload", "+quantize"):
+            if c["joint"]["min_feasible_budget"] > c[tag]["min_feasible_budget"]:
+                failures.append(
+                    f"{name}: joint min feasible budget above {tag}'s")
+    wins = sum(
+        r["strict_budget_win"] or r["strict_step_win"] for r in rows.values()
+    )
+    if wins < min(MIN_STRICT_WINS, len(rows)):
+        failures.append(
+            f"joint DP strictly improved only {wins} net(s) "
+            f"(budget or replayed step) — need "
+            f"{min(MIN_STRICT_WINS, len(rows))}")
+    return failures
+
+
+# ---------------------------------------------------------------------- main
+
+
+def main(smoke: bool = False,
+         out_json: str = "BENCH_strategies.json") -> Dict[str, Any]:
+    nets = SMOKE_NETS if smoke else tuple(NETWORKS)
+    print(f"== joint memory-strategy DP ablation ({', '.join(nets)}) ==")
+    print(f"{'network':12s} {'set':>10s} {'min_budget':>11s} "
+          f"{'step_s':>10s} {'overhead':>9s} {'off':>4s} {'qz':>4s}")
+    rows: Dict[str, Dict[str, Any]] = {}
+    for name in nets:
+        rows[name] = bench_net(name)
+        for tag, cell in rows[name]["cells"].items():
+            print(f"{name:12s} {tag:>10s} {cell['min_feasible_budget']:11.3e} "
+                  f"{cell['replayed_step_s']:10.4e} {cell['overhead']:9.3f} "
+                  f"{cell['offloaded']:4d} {cell['quantized']:4d}")
+        print(f"{'':12s} strict win: budget={rows[name]['strict_budget_win']} "
+              f"step={rows[name]['strict_step_win']}")
+    failures = check_rows(rows)
+    out = {
+        "nets": rows,
+        "thresholds": {
+            "budget_mult": BUDGET_MULT,
+            "replay_tol": REPLAY_TOL,
+            "min_strict_wins": MIN_STRICT_WINS,
+            "seconds_per_time_unit": SECONDS_PER_TIME_UNIT,
+        },
+        "failures": failures,
+    }
+    if out_json:
+        import json
+
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"\nwrote {out_json}")
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(f"  - {f}")
+        if smoke:
+            sys.exit(1)
+    else:
+        print("\nall strategy-ablation guards passed")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="trimmed net set; exit 1 on guard violations")
+    ap.add_argument("--out-json", default="BENCH_strategies.json")
+    a = ap.parse_args()
+    main(smoke=a.smoke, out_json=a.out_json)

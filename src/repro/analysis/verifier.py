@@ -46,6 +46,7 @@ def check_plan(
     budget: Optional[float] = None,
     effects: Optional["EffectAnalysis"] = None,
     jg: Optional[JaxprGraph] = None,
+    strategies: Optional[object] = None,
 ) -> Report:
     """Statically verify ``plan`` against ``g`` (see module docstring).
 
@@ -56,6 +57,18 @@ def check_plan(
     replays deterministically once its storable frontier is cached, so it is
     not flagged).  ``jg``: the traced carrier's jaxpr graph, enabling the
     per-device ``M_v`` consistency check.
+
+    Strategy-annotated plans (``plan.strategy`` non-empty) additionally
+    check: every assigned node is cached, codes are known, ``must_store``
+    pins / storable-tainted nodes are never quantized (the round-trip is
+    lossy, so a pinned node's replay would not be bit-identical; offload is
+    legal — host copies are exact), the simulated peak prices offloaded
+    residuals at zero device bytes and quantized ones at int8+scale bytes,
+    and — when the pricing ``strategies``
+    :class:`~repro.core.strategies.StrategyConfig` is supplied — the
+    declared overhead equals eq. (1) plus the assignment's transfer/codec
+    taxes.  Without the config the tax term cannot be re-derived and only
+    ``overhead ≥ T(V \\ U_k)`` is enforced.
     """
     from ..core import liveness
 
@@ -174,13 +187,60 @@ def check_plan(
                 node=v,
             )
 
+    # ---- 4b. storage-strategy validity ---------------------------------
+    strategy = dict(plan.strategy or {})
+    if strategy:
+        from ..core.strategies import OFFLOAD, QUANTIZE, STORE
+
+        known = {STORE, OFFLOAD, QUANTIZE}
+        for v in sorted(strategy):
+            code = strategy[v]
+            if code not in known:
+                report.add(
+                    "error",
+                    "unknown-strategy",
+                    f"node {g.nodes[v].name} carries unknown storage "
+                    f"strategy {code!r}",
+                    node=v,
+                )
+            if v not in plan.cached:
+                report.add(
+                    "error",
+                    "strategy-uncached-node",
+                    f"node {g.nodes[v].name} has strategy {code!r} but is "
+                    "not in the plan's cache set — strategies only apply to "
+                    "cached residuals",
+                    node=v,
+                )
+        lossy = frozenset(
+            v for v, code in strategy.items() if code == QUANTIZE
+        )
+        no_quantize = pins
+        if effects is not None:
+            no_quantize = no_quantize | frozenset(
+                v for v in effects.tainted if effects.effects[v].storable
+            ) | effects.pins
+        for v in sorted(lossy & no_quantize):
+            report.add(
+                "error",
+                "pinned-node-quantized",
+                f"must_store / effect-tainted node {g.nodes[v].name} is "
+                "quantized — the int8 round-trip is lossy, so its replayed "
+                "value would not be bit-identical (offload it instead)",
+                node=v,
+            )
+
     # stop before the quantitative checks if the schedule itself is broken —
     # the simulator requires a structurally valid plan
     if not report.ok:
         return report
 
     # ---- 5. analytic peak (event-level, DP-independent) ----------------
-    sim = liveness.simulate(g, seq, liveness=True)
+    # For strategy plans the simulator reprices cached residuals at their
+    # device footprint — offloaded bytes never count against the device
+    # peak, quantized ones count at int8+scale bytes.
+    sim = liveness.simulate(g, seq, liveness=True,
+                            assignment=strategy or None)
     if not _close(sim.peak_memory, plan.peak_memory):
         report.add(
             "error",
@@ -196,14 +256,34 @@ def check_plan(
             f"{budget:.6g}",
         )
 
-    # ---- 6. overhead (eq. 1) -------------------------------------------
+    # ---- 6. overhead (eq. 1, plus strategy taxes) ----------------------
     want_overhead = g.T(full - U_k)
-    if not _close(want_overhead, plan.overhead):
+    if strategy and strategies is not None:
+        from ..core.strategies import assignment_taxes
+
+        try:
+            want_overhead += assignment_taxes(g, strategy, strategies)
+        except ValueError as e:
+            report.add("error", "illegal-assignment", str(e))
+            return report
+    if strategy and strategies is None:
+        # without the pricing config the transfer/codec tax term can't be
+        # re-derived; the declared overhead must still dominate eq. (1)
+        if plan.overhead < want_overhead * (1 - _REL_TOL):
+            report.add(
+                "error",
+                "overhead-mismatch",
+                f"declared overhead {plan.overhead:.6g} is below eq. (1)'s "
+                f"T(V \\ U_k) = {want_overhead:.6g} — strategy taxes can "
+                "only add time",
+            )
+    elif not _close(want_overhead, plan.overhead):
         report.add(
             "error",
             "overhead-mismatch",
-            f"declared overhead {plan.overhead:.6g} != T(V \\ U_k) = "
-            f"{want_overhead:.6g}",
+            f"declared overhead {plan.overhead:.6g} != T(V \\ U_k) "
+            + ("+ strategy taxes " if strategy else "")
+            + f"= {want_overhead:.6g}",
         )
 
     # ---- 7. per-device M_v vs the declared mesh ------------------------

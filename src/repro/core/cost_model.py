@@ -51,6 +51,15 @@ from .dp import quantize_times
 from .graph import Graph, Node
 from .prims import ATTENTION_KINDS, MATMUL_KINDS  # shared tables (core.prims)
 
+# Host-link (PCIe-gen4-x16-class) and int8 block-codec throughputs pricing
+# the "offload"/"quantize" storage strategies.  Defined in core.strategies
+# (import-light) and re-exported here as the cost-model surface; a measured
+# OpProfile can override them per backend.
+from .strategies import (  # noqa: F401  (re-export)
+    DEFAULT_HOST_BYTES_PER_SEC,
+    DEFAULT_QUANTIZE_BYTES_PER_SEC,
+)
+
 PROFILE_VERSION = 1
 
 
@@ -63,6 +72,11 @@ class OpProfile:
     sec_per_byte_elementwise: float
     backend: str = "unknown"
     jax_version: str = "unknown"
+    #: Host-link (PCIe/ICI) bandwidth for offloaded residuals; defaulted so
+    #: profiles serialized before the strategy lattice existed still load.
+    host_bytes_per_sec: float = DEFAULT_HOST_BYTES_PER_SEC
+    #: int8 block-codec throughput for quantized residuals.
+    quantize_bytes_per_sec: float = DEFAULT_QUANTIZE_BYTES_PER_SEC
     #: Where the rates came from: "measured" (microbenchmarks, the default),
     #: "analytic" (DEFAULT_PROFILE's roofline constants), or "compiled"
     #: (XLA cost_analysis per-segment numbers, see

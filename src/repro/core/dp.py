@@ -82,6 +82,12 @@ from .liveness import (
     transition_excess_row,
 )
 from .lower_sets import all_lower_sets, pruned_lower_sets
+from .strategies import (
+    StrategyConfig,
+    assignment_of,
+    device_bytes,
+    transition_options,
+)
 
 if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
     from .cost_model import OpProfile
@@ -126,6 +132,9 @@ class DPResult:
         the paper's eq. 2 instead, see :func:`peak_memory`).
       feasible: False if no sequence satisfies the budget ("Impossible").
       states_visited: DP work counter (for the §5.1 runtime comparison).
+      assignment: per-cached-node storage strategy (node id → "store" /
+        "offload" / "quantize") when the solve ran over an extended
+        strategy lattice (``strategies=``); None for the paper's binary.
     """
 
     sequence: List[NodeSet]
@@ -133,6 +142,7 @@ class DPResult:
     peak_memory: float
     feasible: bool
     states_visited: int = 0
+    assignment: Optional[Dict[int, str]] = None
 
     @property
     def num_segments(self) -> int:
@@ -187,6 +197,15 @@ def _prepare(g: Graph, family: Sequence[NodeSet]) -> List[_LowerSetInfo]:
 
 def _mask_M(g: Graph, mask: int) -> float:
     return sum(g.mem_v[v] for v in mask_iter(mask))
+
+
+def _mask_M_w(weights: Sequence[float], mask: int) -> float:
+    """Ascending-id left fold of arbitrary per-node byte weights.
+
+    The strategy lattice's analogue of :func:`_mask_M` — same fold shape,
+    so an all-store weight vector reproduces ``_mask_M`` bit-for-bit.
+    """
+    return sum(weights[v] for v in mask_iter(mask))
 
 
 def _mask_T(g: Graph, mask: int) -> float:
@@ -250,8 +269,16 @@ _VEC_PREP: "weakref.WeakKeyDictionary[Graph, Dict[Tuple[int, ...], _VecPrep]]" =
 )
 
 
-def _vec_prep(g: Graph, family: Sequence[NodeSet]) -> _VecPrep:
-    key = tuple(to_mask(L) for L in family)
+def _vec_prep(
+    g: Graph,
+    family: Sequence[NodeSet],
+    mem_w: Optional[Sequence[float]] = None,
+    tag: str = "",
+) -> _VecPrep:
+    """``mem_w``/``tag`` override the cache-mass weights (strategy lattice:
+    the ``mem_eff`` minimal-device-bytes vector for feasibility/mfb); the
+    tag keys the cache so differently weighted preps never alias."""
+    key: Tuple[Any, ...] = (tag,) + tuple(to_mask(L) for L in family)
     per_g = _VEC_PREP.setdefault(g, {})
     cached = per_g.get(key)
     if cached is not None:
@@ -276,7 +303,7 @@ def _vec_prep(g: Graph, family: Sequence[NodeSet]) -> _VecPrep:
     # byte-packed family rows: the superset filter compares n/8 bytes
     # instead of n bools per candidate
     fam_p = np.packbits(fam_b, axis=1, bitorder="little")
-    mem = np.asarray(g.mem_v, dtype=np.float64)
+    mem = np.asarray(g.mem_v if mem_w is None else mem_w, dtype=np.float64)
     tim = np.asarray(g.time_v, dtype=np.float64)
     t_of = np.array([info.T for info in infos], dtype=np.float64)
     order_arr = np.asarray(order, dtype=np.int64)
@@ -397,6 +424,299 @@ def _pareto_keep(
     pm = np.minimum.accumulate(ps)
     keep[1:] = ps[1:] < pm[:-1]
     return keep
+
+
+# ---------------------------------------------------------------------------
+# Strategy-lattice solve (per-node {store, offload, quantize} choice)
+# ---------------------------------------------------------------------------
+#
+# The joint memory-strategy DP keeps the legacy state (L, t) → minimal m
+# and expands each transition once *per strategy option* of its newly
+# cached set (core.strategies.transition_options — the Pareto frontier of
+# the per-node Minkowski sum).  The strategy affects only the carried
+# cache mass (m2 = m + option.m_add) and, for the time-centric and
+# wallclock objectives, the t axis (t2 = t + (t_step + option.tax)); the
+# transition's 𝓜⁽ⁱ⁾ = m + transition_excess stays strategy-independent
+# because a node occupies full bytes during its own forward window and is
+# compressed/offloaded only when the segment retires (see
+# core.strategies).  Exactness over (sequence × assignment) follows from
+# the legacy argument plus: each node is charged once (m_step counts
+# cache(L')\L), smaller m weakly dominates, and the per-option folds are
+# additive so intermediate Pareto pruning of options is lossless.
+#
+# Ordering contract (scalar ↔ vectorized bit-identity): the scalar loop
+# iterates, per source, targets in jpos order with *options outer and
+# entries inner*; the vectorized path flattens candidate rows
+# target-major, option-minor, so the arrival sequence numbers
+# (target, option, entry) reproduce the scalar first-writer-wins
+# tie-break exactly.
+
+
+def _strat_traceback(
+    infos: List[_LowerSetInfo],
+    chain: List[Tuple[int, float, Optional[Tuple[int, Tuple[str, ...]]]]],
+) -> Tuple[List[NodeSet], Dict[int, str]]:
+    """Masks (∅ dropped) + merged per-node assignment of a traceback chain.
+
+    ``chain`` is in full → ∅ order; each element carries the lower-set id,
+    its table t, and the arriving transition's (new_mask, codes) — None
+    for the ∅ seed.
+    """
+    assignment: Dict[int, str] = {}
+    masks: List[int] = []
+    for cid, _t, opt in chain:
+        if infos[cid].mask:
+            masks.append(infos[cid].mask)
+        if opt is not None:
+            assignment.update(assignment_of(opt[0], opt[1]))
+    masks.reverse()
+    return [from_mask(mk) for mk in masks], assignment
+
+
+def _solve_strat_scalar(
+    g: Graph, budget: float, family: Sequence[NodeSet], objective: str,
+    cfg: StrategyConfig,
+) -> DPResult:
+    """Scalar oracle of the joint memory-strategy DP (liveness functional)."""
+    tc = objective == "time_centric"
+    infos = _prepare(g, family)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    sizes = [infos[i].size for i in order]
+    full_mask = (1 << g.n) - 1
+    empty_id = full_id = -1
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            empty_id = i
+        if info.mask == full_mask:
+            full_id = i
+    if empty_id < 0 or full_id < 0:
+        raise ValueError("family must contain ∅ and V")
+
+    # t → (m, parent=(id, t) | None, (new_mask, codes) | None)
+    table: List[Dict[float, Tuple[float, Any, Any]]] = [{} for _ in infos]
+    table[empty_id][0.0] = (0.0, None, None)
+    states = 0
+    n_fam = len(order)
+    for pos, i in enumerate(order):
+        info_L = infos[i]
+        entries = table[i]
+        if not entries:
+            continue
+        pruned = _prune_generic(entries, reverse=not tc)
+        table[i] = pruned
+        pruned_items = list(pruned.items())
+        mask_L = info_L.mask
+        start = bisect_right(sizes, info_L.size)
+        for jpos in range(start, n_fam):
+            j = order[jpos]
+            info_Lp = infos[j]
+            if mask_L & ~info_Lp.mask:
+                continue  # L ⊄ L'
+            Vp_mask = info_Lp.mask & ~mask_L
+            inter = Vp_mask & info_Lp.cache_mask
+            t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
+            new_mask = info_Lp.cache_mask & ~mask_L
+            m_fixed = transition_excess(
+                g, mask_L, info_Lp.mask, info_Lp.boundary_mask
+            )
+            row = table[j]
+            for opt in transition_options(g, cfg, new_mask, tc):
+                t_step_o = t_step + opt.tax if tc else t_step
+                for t, (m, _p, _o) in pruned_items:
+                    states += 1
+                    Mi = m + m_fixed  # 𝓜⁽ⁱ⁾, strategy-independent
+                    if Mi > budget:
+                        continue
+                    t2 = t + t_step_o
+                    m2 = m + opt.m_add
+                    cur = row.get(t2)
+                    if cur is None or cur[0] > m2:
+                        row[t2] = (m2, (i, t), (new_mask, opt.codes))
+
+    final = table[full_id]
+    if not final:
+        return DPResult([], INF, INF, feasible=False, states_visited=states)
+    t_star = min(final) if tc else max(final)
+    chain: List[Tuple[int, float, Any]] = []
+    cur_id, cur_t = full_id, t_star
+    while cur_id >= 0:
+        m, parent, opt = table[cur_id][cur_t]
+        chain.append((cur_id, cur_t, opt))
+        if parent is None:
+            break
+        cur_id, cur_t = parent
+    sequence, assignment = _strat_traceback(infos, chain)
+    return DPResult(
+        sequence=sequence,
+        overhead=t_star,
+        peak_memory=peak_memory_live(g, sequence, assignment),
+        feasible=True,
+        states_visited=states,
+        assignment=assignment,
+    )
+
+
+def _prune_generic(
+    entries: Dict[float, Tuple[float, Any, Any]], reverse: bool
+) -> Dict[float, Tuple[float, Any, Any]]:
+    """:func:`_pareto` / :func:`_pareto_mc` over value tuples of any width
+    (index 0 is m)."""
+    out: Dict[float, Tuple[float, Any, Any]] = {}
+    best = INF
+    for t in sorted(entries, reverse=reverse):
+        val = entries[t]
+        if val[0] < best:
+            out[t] = val
+            best = val[0]
+    return out
+
+
+def _solve_strat_vec(
+    g: Graph, budget: float, family: Sequence[NodeSet], objective: str,
+    cfg: StrategyConfig,
+) -> DPResult:
+    """Vectorized joint memory-strategy DP.
+
+    The legacy :func:`_solve_vec` with each source row's (target × option)
+    pairs flattened target-major / option-minor — the arrival-sequence
+    lexsort key then reproduces the scalar loop's first-writer-wins
+    tie-break (options outer, entries inner) exactly.
+    """
+    tc = objective == "time_centric"
+    vp = _vec_prep(g, family)
+    _require_terminals(vp)
+    n_infos = len(vp.infos)
+    # pending chunks: (t2, m2, parent_id, parent_t, arrival seq, opt ref)
+    pend: List[List[Tuple[NDArray[np.float64], NDArray[np.float64],
+                          NDArray[np.int64], NDArray[np.float64],
+                          NDArray[np.int64], NDArray[np.int64]]]] = [
+        [] for _ in range(n_infos)
+    ]
+    zero = np.zeros(1, dtype=np.float64)
+    neg1 = np.full(1, -1, dtype=np.int64)
+    pend[vp.empty_id].append((zero, zero, neg1, zero, neg1, neg1))
+    rows: List[Optional[Tuple[NDArray[np.float64], NDArray[np.float64],
+                              NDArray[np.int64], NDArray[np.float64],
+                              NDArray[np.int64]]]] = [None] * n_infos
+    opt_tab: List[Tuple[int, Tuple[str, ...]]] = []  # ref → (new_mask, codes)
+    states = 0
+    seq_base = 0
+    for pos, i in enumerate(vp.order):
+        chunks = pend[i]
+        pend[i] = []
+        if not chunks:
+            continue
+        t2 = np.concatenate([c[0] for c in chunks])
+        m2 = np.concatenate([c[1] for c in chunks])
+        pid = np.concatenate([c[2] for c in chunks])
+        pt = np.concatenate([c[3] for c in chunks])
+        seq = np.concatenate([c[4] for c in chunks])
+        oc = np.concatenate([c[5] for c in chunks])
+        o = np.lexsort((seq, m2, t2))
+        t2, m2, pid, pt, oc = t2[o], m2[o], pid[o], pt[o], oc[o]
+        first = np.empty(len(t2), dtype=bool)
+        first[0] = True
+        first[1:] = t2[1:] != t2[:-1]
+        t2, m2, pid, pt, oc = (
+            t2[first], m2[first], pid[first], pt[first], oc[first]
+        )
+        if not tc:
+            t2, m2, pid, pt, oc = (
+                t2[::-1], m2[::-1], pid[::-1], pt[::-1], oc[::-1]
+            )
+        keepb = np.empty(len(m2), dtype=bool)
+        keepb[0] = True
+        pm = np.minimum.accumulate(m2)
+        keepb[1:] = m2[1:] < pm[:-1]
+        t_e, m_e, pid_e, pt_e, oc_e = (
+            t2[keepb], m2[keepb], pid[keepb], pt[keepb], oc[keepb]
+        )
+        rows[i] = (t_e, m_e, pid_e, pt_e, oc_e)
+        tg = vp.targets[pos]
+        j_cnt, e_cnt = len(tg), len(t_e)
+        if j_cnt == 0 or e_cnt == 0:
+            continue
+        mf = _price_row(g, vp, pos)
+        t_stepv = vp.t_step[pos]
+        mask_L = vp.infos[i].mask
+        # flatten (target, option) rows: target-major, option-minor
+        flat_j: List[int] = []
+        flat_m: List[float] = []
+        flat_t: List[float] = []
+        flat_oc: List[int] = []
+        for jj in range(j_cnt):
+            j = int(tg[jj])
+            new_mask = vp.infos[j].cache_mask & ~mask_L
+            for opt in transition_options(g, cfg, new_mask, tc):
+                flat_j.append(jj)
+                flat_m.append(opt.m_add)
+                flat_t.append(
+                    float(t_stepv[jj]) + opt.tax if tc else float(t_stepv[jj])
+                )
+                flat_oc.append(len(opt_tab))
+                opt_tab.append((new_mask, opt.codes))
+        r_cnt = len(flat_j)
+        states += r_cnt * e_cnt
+        fj = np.asarray(flat_j, dtype=np.int64)
+        fm = np.asarray(flat_m, dtype=np.float64)
+        ft = np.asarray(flat_t, dtype=np.float64)
+        foc = np.asarray(flat_oc, dtype=np.int64)
+        t2m = t_e[None, :] + ft[:, None]
+        m2m = m_e[None, :] + fm[:, None]
+        ok = (m_e[None, :] + mf[fj][:, None]) <= budget
+        seqm = seq_base + np.arange(r_cnt, dtype=np.int64)[:, None] * e_cnt + \
+            np.arange(e_cnt, dtype=np.int64)
+        seq_base += r_cnt * e_cnt
+        pid_i = np.full(e_cnt, i, dtype=np.int64)
+        cnt = ok.sum(axis=1)
+        for rr, c in zip(range(r_cnt), cnt.tolist()):
+            if c == 0:
+                continue
+            ocr = np.full(e_cnt, foc[rr], dtype=np.int64)
+            if c == e_cnt:
+                pend[int(tg[fj[rr]])].append(
+                    (t2m[rr], m2m[rr], pid_i, t_e, seqm[rr], ocr)
+                )
+            else:
+                okr = ok[rr]
+                pend[int(tg[fj[rr]])].append(
+                    (t2m[rr][okr], m2m[rr][okr], pid_i[okr], t_e[okr],
+                     seqm[rr][okr], ocr[okr])
+                )
+    final = rows[vp.full_id]
+    if final is None or len(final[0]) == 0:
+        return DPResult([], INF, INF, feasible=False, states_visited=states)
+    t_star = float(final[0][0])
+    chain: List[Tuple[int, float, Any]] = []
+    id_chain: List[int] = []
+    cur_id, cur_t = vp.full_id, t_star
+    while cur_id >= 0:
+        row = rows[cur_id]
+        assert row is not None
+        k = int(np.nonzero(row[0] == cur_t)[0][0])
+        ref = int(row[4][k])
+        chain.append((cur_id, cur_t, opt_tab[ref] if ref >= 0 else None))
+        id_chain.append(cur_id)
+        cur_id, cur_t = int(row[2][k]), float(row[3][k])
+    _seed_chain_excess(g, vp, id_chain)
+    sequence, assignment = _strat_traceback(vp.infos, chain)
+    return DPResult(
+        sequence=sequence,
+        overhead=t_star,
+        peak_memory=peak_memory_live(g, sequence, assignment),
+        feasible=True,
+        states_visited=states,
+        assignment=assignment,
+    )
+
+
+def _solve_strat(
+    g: Graph, budget: float, family: Sequence[NodeSet], objective: str,
+    cfg: StrategyConfig,
+) -> DPResult:
+    if scalar_only():
+        return _solve_strat_scalar(g, budget, family, objective, cfg)
+    return _solve_strat_vec(g, budget, family, objective, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -534,6 +854,7 @@ def solve(
     family: Sequence[NodeSet],
     objective: str = "time_centric",
     functional: str = "liveness",
+    strategies: Optional[StrategyConfig] = None,
 ) -> DPResult:
     """Algorithm 1 (Appendix A) over an arbitrary lower-set family.
 
@@ -552,7 +873,25 @@ def solve(
         framework default; see the module docstring);
       * "eq2"      — the paper's original eq. 2 charge (Appendix C
         ablation / benchmarks only).
+
+    strategies:
+      an extended :class:`~repro.core.strategies.StrategyConfig` switches
+      to the joint memory-strategy DP (per-node {store, offload,
+      quantize} choice; liveness functional only) and the result carries
+      ``assignment``.  ``None`` or a non-extended config routes through
+      the untouched legacy paths — bit-identical to the pre-lattice
+      solver by construction.
     """
+    if strategies is not None and strategies.extended:
+        if functional != "liveness":
+            raise ValueError(
+                "the strategy lattice requires functional='liveness'"
+            )
+        if objective == "wallclock":
+            return solve_wallclock(g, budget, family, strategies=strategies)
+        if objective not in ("time_centric", "memory_centric"):
+            raise ValueError(f"unknown objective {objective!r}")
+        return _solve_strat(g, budget, family, objective, strategies)
     if objective == "wallclock":
         if functional != "liveness":
             raise ValueError(
@@ -672,6 +1011,7 @@ def solve_wallclock(
     budget: float,
     family: Sequence[NodeSet],
     profile: Optional["OpProfile"] = None,
+    strategies: Optional[StrategyConfig] = None,
     **replay_kw: Any,
 ) -> DPResult:
     """Wall-clock plan selection: sweep the surface, replay the terminals.
@@ -682,26 +1022,83 @@ def solve_wallclock(
     replayed-seconds candidate wins (deterministic tie-break on analytic
     peak, then overhead).  ``replay_kw`` is forwarded to the replay
     (``mesh=``, ``comm_bytes=``, ``segment_costs=``, ...).
+
+    With an extended ``strategies`` config the candidate pool is the
+    *union* of the legacy (all-store) sweep's terminals and the strategy
+    sweep's terminals, ranked jointly by replayed seconds — so enabling
+    strategies can never select a plan that replays slower than the
+    legacy winner at the same budget (the legacy winner stays in the
+    pool), which is the monotonicity the strategy-ablation benchmark
+    guards.
     """
+    from .replay import rank_by_replay
+
     sw = sweep(g, family, "wallclock", cap=budget)
-    return sw.extract_wallclock(g, budget, profile=profile, **replay_kw)
+    if strategies is None or not strategies.extended:
+        return sw.extract_wallclock(g, budget, profile=profile, **replay_kw)
+
+    ssw = sweep(g, family, "wallclock", cap=budget, strategies=strategies)
+    ts = sw.terminal_candidates(budget)
+    cands: List[Tuple[float, List[NodeSet], Optional[Dict[int, str]]]] = [
+        (t, [from_mask(mk) for mk in sw._traceback(budget, t)], None)
+        for t in ts
+    ]
+    assert isinstance(ssw, StrategySweep)
+    for t in ssw.terminal_candidates(budget):
+        masks, assignment = ssw.traceback_with_assignment(budget, t)
+        cands.append((t, [from_mask(mk) for mk in masks], assignment))
+    if not cands:
+        return DPResult([], INF, INF, feasible=False,
+                        states_visited=sw.states_visited + ssw.states_visited)
+    replay_kw.setdefault("budget", budget)
+    idx, plan, _res = rank_by_replay(
+        g,
+        [c[1] for c in cands],
+        assignments=[c[2] for c in cands],
+        strategies=strategies,
+        profile=profile,
+        **replay_kw,
+    )
+    t_win, seq_win, asg_win = cands[idx]
+    return DPResult(
+        sequence=seq_win,
+        overhead=t_win,
+        peak_memory=plan.peak_memory,
+        feasible=True,
+        states_visited=sw.states_visited + ssw.states_visited,
+        assignment=asg_win,  # None ⇒ the legacy all-store candidate won
+    )
 
 
 def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
              infos: Optional[List[_LowerSetInfo]] = None,
-             functional: str = "liveness") -> bool:
+             functional: str = "liveness",
+             strategies: Optional[StrategyConfig] = None) -> bool:
     """Fast feasibility oracle for the budget binary search (§5.1).
 
     For feasibility the t axis is irrelevant and smaller cache mass m is
     always at least as good, so one min-m entry per lower set suffices —
     O(#𝓛²) instead of O(T(V)·#𝓛²).
+
+    With an extended ``strategies`` config the same argument collapses the
+    strategy lattice: only each node's minimal legal device bytes matter
+    (taxes never affect feasibility), so the joint problem is the binary
+    one with ``mem_v`` replaced by ``StrategyConfig.min_device_bytes``.
     """
     import bisect
 
     _check_functional(functional, g)
     live = functional == "liveness"
+    ext = strategies is not None and strategies.extended
+    if ext and not live:
+        raise ValueError("the strategy lattice requires functional='liveness'")
+    mem_eff = strategies.min_device_bytes(g) if ext else None
+    if ext and scalar_only():
+        return _feasible_strat_scalar(g, budget, family, mem_eff)
     if live and not scalar_only():
-        vp = _vec_prep(g, family)
+        vp = (_vec_prep(g, family) if not ext else
+              _vec_prep(g, family, mem_w=mem_eff,
+                        tag=strategies.digest_token()))
         if vp.full_id < 0:
             return False
         best = np.full(len(vp.infos), INF, dtype=np.float64)
@@ -754,6 +1151,46 @@ def feasible(g: Graph, budget: float, family: Sequence[NodeSet],
             if Mi > budget:
                 continue
             m2 = m + _mask_M(g, info_Lp.cache_mask & ~mask_L)
+            if m2 < best[j]:
+                best[j] = m2
+    for i, info in enumerate(infos):
+        if info.mask == full_mask:
+            return best[i] < INF
+    return False
+
+
+def _feasible_strat_scalar(
+    g: Graph, budget: float, family: Sequence[NodeSet],
+    mem_eff: Sequence[float],
+) -> bool:
+    """Scalar strategy-lattice feasibility: min-m per set over mem_eff."""
+    infos = _prepare(g, family)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    sizes = [infos[i].size for i in order]
+    full_mask = (1 << g.n) - 1
+    best: List[float] = [INF] * len(infos)
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            best[i] = 0.0
+    n_fam = len(order)
+    for pos, i in enumerate(order):
+        m = best[i]
+        if m == INF:
+            continue
+        info_L = infos[i]
+        mask_L = info_L.mask
+        start = bisect_right(sizes, info_L.size)
+        for jpos in range(start, n_fam):
+            j = order[jpos]
+            info_Lp = infos[j]
+            if mask_L & ~info_Lp.mask:
+                continue
+            m_fixed = transition_excess(
+                g, mask_L, info_Lp.mask, info_Lp.boundary_mask
+            )
+            if m + m_fixed > budget:
+                continue
+            m2 = m + _mask_M_w(mem_eff, info_Lp.cache_mask & ~mask_L)
             if m2 < best[j]:
                 best[j] = m2
     for i, info in enumerate(infos):
@@ -882,15 +1319,17 @@ class SweepOverflow(RuntimeError):
     """
 
 
-def _mfb_vec(g: Graph, family: Sequence[NodeSet]) -> float:
+def _mfb_vec(g: Graph, family: Sequence[NodeSet],
+             vp: Optional[_VecPrep] = None) -> float:
     """Vectorized :func:`min_feasible_budget_exact` (liveness functional).
 
     Gather formulation: candidates pushed into a lower set are buffered as
     raw (m, peak) chunks and canonically Pareto-filtered once, when the
     set's turn comes as a source — the scalar insert loop maintains the
-    same order-independent set incrementally.
+    same order-independent set incrementally.  ``vp`` lets the strategy
+    lattice substitute its ``mem_eff``-weighted prep.
     """
-    vp = _vec_prep(g, family)
+    vp = vp if vp is not None else _vec_prep(g, family)
     _require_terminals(vp)
     # Incoming candidates accumulate as flat python float lists — 130k
     # tiny per-(source, target) ndarrays cost more to concatenate than the
@@ -934,7 +1373,9 @@ def _mfb_vec(g: Graph, family: Sequence[NodeSet]) -> float:
 
 
 def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
-                              functional: str = "liveness") -> float:
+                              functional: str = "liveness",
+                              strategies: Optional[StrategyConfig] = None,
+                              ) -> float:
     """Exact minimal feasible budget in one forward pass (no search).
 
     min over canonical strategies of max_i 𝓜⁽ⁱ⁾ (the liveness-tight
@@ -954,10 +1395,29 @@ def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
     return a budget the DP rejects; the liveness functional sidesteps this
     by having all four entry points read the same memoized
     ``transition_excess`` value per pair).
+
+    With an extended ``strategies`` config the lattice collapses exactly
+    as in :func:`feasible` — a chain's peak only falls when carried bytes
+    fall, so every node takes its minimal legal device bytes
+    (``mem_eff``) and the legacy algorithm runs over that weight vector.
+    The result sits on the joint DP's own float threshold:
+    ``solve(..., strategies=cfg)`` is feasible at the returned budget and
+    infeasible one ulp below, because the DP's all-min-bytes transition
+    option folds the identical floats.
     """
     _check_functional(functional, g)
     live = functional == "liveness"
+    ext = strategies is not None and strategies.extended
+    if ext and not live:
+        raise ValueError("the strategy lattice requires functional='liveness'")
+    mem_eff = strategies.min_device_bytes(g) if ext else None
     if live and not scalar_only():
+        if ext:
+            return _mfb_vec(
+                g, family,
+                vp=_vec_prep(g, family, mem_w=mem_eff,
+                             tag=strategies.digest_token()),
+            )
         return _mfb_vec(g, family)
     infos = _prepare(g, family)
     order = sorted(range(len(infos)), key=lambda i: infos[i].size)
@@ -991,7 +1451,11 @@ def min_feasible_budget_exact(g: Graph, family: Sequence[NodeSet],
             info_Lp = infos[j]
             if mask_L & ~info_Lp.mask:
                 continue  # L ⊄ L'
-            m_step = _mask_M(g, info_Lp.cache_mask & ~mask_L)
+            m_step = (
+                _mask_M(g, info_Lp.cache_mask & ~mask_L)
+                if mem_eff is None
+                else _mask_M_w(mem_eff, info_Lp.cache_mask & ~mask_L)
+            )
             m_fixed = (
                 transition_excess(g, mask_L, info_Lp.mask, info_Lp.boundary_mask)
                 if live
@@ -1254,9 +1718,323 @@ class Sweep:
         }
 
 
+class _SCell(_Cell):
+    """A sweep cell that additionally remembers each candidate's strategy
+    option (index into ``StrategySweep.opt_tab``)."""
+
+    __slots__ = ("opt_ids",)
+
+    def __init__(self):
+        super().__init__()
+        self.opt_ids: List[int] = []
+
+    def insert_opt(self, m: float, peak: float, pos: int, pid: int,
+                   pt: float, oc: int) -> None:
+        """:meth:`_Cell.insert` with the option id carried alongside."""
+        peaks = self.peaks
+        ms = self.ms
+        poss = self.poss
+        i = bisect_left(peaks, peak)
+        if i > 0:
+            pm = ms[i - 1]
+            if pm < m or (pm == m and poss[i - 1] <= pos):
+                return
+        j = i
+        n = len(peaks)
+        while j < n:
+            jm = ms[j]
+            if jm > m or (jm == m and poss[j] >= pos):
+                j += 1
+            else:
+                break
+        if j < n and peaks[j] == peak:
+            return
+        del peaks[i:j], ms[i:j], poss[i:j]
+        del self.parent_ids[i:j], self.parent_ts[i:j], self.opt_ids[i:j]
+        peaks.insert(i, peak)
+        ms.insert(i, m)
+        poss.insert(i, pos)
+        self.parent_ids.insert(i, pid)
+        self.parent_ts.insert(i, pt)
+        self.opt_ids.insert(i, oc)
+
+    def copy(self) -> "_SCell":
+        out = _SCell()
+        out.peaks = list(self.peaks)
+        out.ms = list(self.ms)
+        out.poss = list(self.poss)
+        out.parent_ids = list(self.parent_ids)
+        out.parent_ts = list(self.parent_ts)
+        out.opt_ids = list(self.opt_ids)
+        return out
+
+
+@dataclasses.dataclass
+class StrategySweep(Sweep):
+    """Budget-free surface of the joint memory-strategy DP.
+
+    ``opt_tab[k]`` is the ``(new_mask, codes)`` of one transition option;
+    each cell candidate's ``opt_ids`` entry points into it, so a traceback
+    recovers the per-node strategy assignment alongside the sequence.
+    Strategy sweeps are in-memory objects: :meth:`encode` marks them with
+    the config's digest token and ``decode_sweep`` refuses such entries,
+    so they never alias a legacy surface in the plan cache.
+
+    Tie-break note: when two strategy assignments reach a cell with the
+    exact same carried mass ``m``, the cell keeps the lower-peak one while
+    the per-budget ``_solve_strat`` table keeps the first writer — so
+    :meth:`solve` here may return a *different equally-optimal* assignment
+    than :func:`solve` (identical overhead and feasibility; both within
+    budget).  The quantize byte ratio makes such exact ties more common
+    than in the binary DP.
+    """
+
+    config: Optional[StrategyConfig] = None
+    opt_tab: List[Tuple[int, Tuple[str, ...]]] = dataclasses.field(
+        default_factory=list
+    )
+
+    def extend(self, g: Graph, cap: Optional[float] = None,
+               max_states: Optional[int] = None) -> "Sweep":
+        if self.cap is None or (cap is not None and cap <= self.cap):
+            return self
+        family = [from_mask(mk) for mk in self.family_masks]
+        return sweep(g, family, self.objective, max_states=max_states,
+                     cap=cap, strategies=self.config)
+
+    def traceback_with_assignment(
+        self, budget: float, t_star: float
+    ) -> Tuple[List[int], Dict[int, str]]:
+        """(mask sequence, merged node → strategy map) of the budget-B winner."""
+        masks: List[int] = []
+        assignment: Dict[int, str] = {}
+        pid, pt = self.full_id, t_star
+        while pid >= 0:
+            cell = self.cells[pid][pt]
+            assert isinstance(cell, _SCell)
+            k = cell.winner(budget)
+            if self.family_masks[pid]:
+                masks.append(self.family_masks[pid])
+            oc = cell.opt_ids[k]
+            if oc >= 0:
+                new_mask, codes = self.opt_tab[oc]
+                assignment.update(assignment_of(new_mask, codes))
+            pid, pt = cell.parent_ids[k], cell.parent_ts[k]
+        masks.reverse()
+        return masks, assignment
+
+    def solve(self, g: Graph, budget: float) -> DPResult:
+        if self.objective == "wallclock":
+            return self.extract_wallclock(g, budget)
+        ok, t_star, _masks = self.extract(budget)
+        if not ok:
+            return DPResult([], INF, INF, feasible=False,
+                            states_visited=self.states_visited)
+        masks, assignment = self.traceback_with_assignment(budget, t_star)
+        sequence = [from_mask(mk) for mk in masks]
+        return DPResult(
+            sequence=sequence,
+            overhead=t_star,
+            peak_memory=peak_memory_live(g, sequence, assignment),
+            feasible=True,
+            states_visited=self.states_visited,
+            assignment=assignment,
+        )
+
+    def extract_wallclock(
+        self, g: Graph, budget: float,
+        profile: Optional["OpProfile"] = None, **replay_kw: Any,
+    ) -> DPResult:
+        """Replay-ranked extraction over this surface's own candidates.
+
+        Joint ranking against the legacy all-store surface lives in
+        :func:`solve_wallclock` — that is the entry point that guarantees
+        never-worse-than-legacy step time.
+        """
+        from .replay import rank_by_replay
+
+        ts = self.terminal_candidates(budget)
+        if not ts:
+            return DPResult([], INF, INF, feasible=False,
+                            states_visited=self.states_visited)
+        pairs = [self.traceback_with_assignment(budget, t) for t in ts]
+        seqs = [[from_mask(mk) for mk in masks] for masks, _a in pairs]
+        replay_kw.setdefault("budget", budget)
+        idx, plan, _res = rank_by_replay(
+            g, seqs, assignments=[a for _m, a in pairs],
+            strategies=self.config, profile=profile, **replay_kw,
+        )
+        return DPResult(
+            sequence=seqs[idx],
+            overhead=ts[idx],
+            peak_memory=plan.peak_memory,
+            feasible=True,
+            states_visited=self.states_visited,
+            assignment=pairs[idx][1],
+        )
+
+    def remap(self, mapping: Dict[int, int]) -> "StrategySweep":
+        out = super().remap(mapping)
+        tab = []
+        for mask, codes in self.opt_tab:
+            m2 = 0
+            for v in mask_iter(mask):
+                m2 |= 1 << mapping[v]
+            tab.append((m2, codes))
+        return dataclasses.replace(out, opt_tab=tab)
+
+    def encode(self) -> dict:
+        out = super().encode()
+        out["strategy"] = self.config.digest_token() if self.config else ""
+        return out
+
+
+def _sweep_strat(g: Graph, family: Sequence[NodeSet], objective: str,
+                 max_states: Optional[int], cap: Optional[float],
+                 cfg: StrategyConfig) -> StrategySweep:
+    """Budget-free joint memory-strategy sweep (scalar in both modes).
+
+    One implementation serves vectorized and ``REPRO_DP_SCALAR=1``
+    sessions alike — trivially bit-identical across modes; the strategy
+    surface's option fan-out is frontier-bounded on the segment-structured
+    graphs the planner sweeps, so the scalar loop is not the bottleneck.
+    Candidate floats are folded exactly as :func:`_solve_strat_scalar`
+    does (``m + option.m_add``, ``t + (t_step + option.tax)``,
+    ``max(peak, m + m_fixed)``), so projecting the surface at a budget
+    lands on the same feasibility thresholds the per-budget joint DP
+    filters on.
+    """
+    tc = objective != "memory_centric"  # "wallclock" sweeps the TC surface
+    infos = _prepare(g, family)
+    order = sorted(range(len(infos)), key=lambda i: infos[i].size)
+    pos_of = [0] * len(order)
+    for p, i in enumerate(order):
+        pos_of[i] = p
+    sizes = [infos[i].size for i in order]
+    full_mask = (1 << g.n) - 1
+    empty_id = full_id = -1
+    for i, info in enumerate(infos):
+        if info.mask == 0:
+            empty_id = i
+        if info.mask == full_mask:
+            full_id = i
+    if empty_id < 0 or full_id < 0:
+        raise ValueError("family must contain ∅ and V")
+
+    cells: List[Dict[float, _Cell]] = [{} for _ in infos]
+    seed = _SCell()
+    seed.insert_opt(0.0, 0.0, -1, -1, 0.0, -1)
+    cells[empty_id][0.0] = seed
+    opt_tab: List[Tuple[int, Tuple[str, ...]]] = []
+
+    states = 0
+    state_cap = max_states if max_states is not None else INF
+    budget_cap = cap if cap is not None else INF
+    n_fam = len(order)
+
+    for pos, i in enumerate(order):
+        info_L = infos[i]
+        cdict = cells[i]
+        if not cdict:
+            continue
+        # Source-side (m, peak) frontier over cells in t order — identical
+        # dominance rule to the legacy scalar sweep.
+        fr_m: List[float] = []
+        fr_p: List[float] = []
+        expansions: List[Tuple[float, List[float], List[float]]] = []
+        for t in sorted(cdict, reverse=not tc):
+            cell = cdict[t]
+            kms: List[float] = []
+            kpeaks: List[float] = []
+            for k in range(len(cell.peaks) - 1, -1, -1):  # m asc / peak desc
+                m, peak = cell.ms[k], cell.peaks[k]
+                idx = bisect_right(fr_m, m) - 1
+                if idx >= 0 and fr_p[idx] <= peak:
+                    continue
+                kms.append(m)
+                kpeaks.append(peak)
+            if kms:
+                expansions.append((t, kms, kpeaks))
+            for m, peak in zip(kms, kpeaks):
+                idx = bisect_right(fr_m, m) - 1
+                if idx >= 0 and fr_p[idx] <= peak:
+                    continue
+                lo = bisect_left(fr_m, m)
+                hi = lo
+                while hi < len(fr_m) and fr_p[hi] >= peak:
+                    hi += 1
+                del fr_m[lo:hi], fr_p[lo:hi]
+                fr_m.insert(lo, m)
+                fr_p.insert(lo, peak)
+
+        if not expansions:
+            continue
+        mask_L = info_L.mask
+        src_pos = pos_of[i]
+        start = bisect_right(sizes, info_L.size)
+        for jpos in range(start, n_fam):
+            j = order[jpos]
+            info_Lp = infos[j]
+            if mask_L & ~info_Lp.mask:
+                continue  # L ⊄ L'
+            Vp_mask = info_Lp.mask & ~mask_L
+            inter = Vp_mask & info_Lp.cache_mask
+            t_step = (info_Lp.T - info_L.T) - _mask_T(g, inter)
+            new_mask = info_Lp.cache_mask & ~mask_L
+            m_fixed = transition_excess(
+                g, mask_L, info_Lp.mask, info_Lp.boundary_mask
+            )
+            target = cells[j]
+            for opt in transition_options(g, cfg, new_mask, tc):
+                t_step_o = t_step + opt.tax if tc else t_step
+                oc = len(opt_tab)
+                oc_used = False
+                for t, kms, kpeaks in expansions:
+                    t2 = t + t_step_o
+                    cell2 = target.get(t2)
+                    for k in range(len(kms)):
+                        m = kms[k]
+                        peak = kpeaks[k]
+                        Mi = m + m_fixed  # same floats as the joint DP
+                        if Mi > peak:
+                            peak = Mi
+                        if peak > budget_cap:
+                            continue
+                        states += 1
+                        if cell2 is None:
+                            cell2 = target[t2] = _SCell()
+                        assert isinstance(cell2, _SCell)
+                        cell2.insert_opt(
+                            m + opt.m_add, peak, src_pos, i, t, oc
+                        )
+                        oc_used = True
+                if oc_used:
+                    opt_tab.append((new_mask, opt.codes))
+        if states > state_cap:
+            raise SweepOverflow(
+                f"strategy sweep exceeded max_states={max_states} "
+                f"({states} transitions; family of {n_fam})"
+            )
+
+    return StrategySweep(
+        objective=objective,
+        n=g.n,
+        family_masks=[info.mask for info in infos],
+        cells=cells,
+        empty_id=empty_id,
+        full_id=full_id,
+        states_visited=states,
+        cap=cap,
+        config=cfg,
+        opt_tab=opt_tab,
+    )
+
+
 def decode_sweep(entry: dict) -> Optional[Sweep]:
     """Inverse of ``Sweep.encode``; returns None on any malformed input."""
     try:
+        if entry.get("strategy"):
+            return None  # strategy surfaces are in-memory only
         objective = entry["objective"]
         if objective not in ("time_centric", "memory_centric", "wallclock"):
             return None
@@ -1570,7 +2348,8 @@ def sweep(g: Graph, family: Sequence[NodeSet],
           objective: str = "time_centric",
           max_states: Optional[int] = None,
           cap: Optional[float] = None,
-          prior: Optional[Sweep] = None) -> Sweep:
+          prior: Optional[Sweep] = None,
+          strategies: Optional[StrategyConfig] = None) -> Sweep:
     """One budget-free DP pass carrying ``(t, m, peak)`` frontiers.
 
     Identical transition structure to :func:`solve` (liveness functional —
@@ -1611,6 +2390,13 @@ def sweep(g: Graph, family: Sequence[NodeSet],
     """
     if objective not in ("time_centric", "memory_centric", "wallclock"):
         raise ValueError(f"unknown objective {objective!r}")
+    if strategies is not None and strategies.extended:
+        if prior is not None:
+            raise ValueError(
+                "strategy sweeps do not support lazy extension from a "
+                "prior surface; rebuild with the larger cap"
+            )
+        return _sweep_strat(g, family, objective, max_states, cap, strategies)
     if not scalar_only():
         return _sweep_vec(g, family, objective, max_states, cap, prior)
     # "wallclock" shares the time-centric transition structure bit-for-bit
@@ -1898,7 +2684,8 @@ def peak_memory(g: Graph, sequence: Sequence[NodeSet]) -> float:
     return peak
 
 
-def peak_memory_live(g: Graph, sequence: Sequence[NodeSet]) -> float:
+def peak_memory_live(g: Graph, sequence: Sequence[NodeSet],
+                     assignment: Optional[Dict[int, str]] = None) -> float:
     """Liveness-tight analytic peak: max_i (M(U_{i-1}) + transition excess).
 
     The strategy evaluator of the DP's memory functional
@@ -1908,11 +2695,19 @@ def peak_memory_live(g: Graph, sequence: Sequence[NodeSet]) -> float:
     property test in tests/test_liveness.py pins this), and it is the value
     every feasible ``DPResult.peak_memory`` reports, so
     ``result.peak_memory ≤ budget`` holds exactly.
+
+    ``assignment`` prices a strategy-annotated plan: the carried cache
+    mass folds each node's *device* bytes (offloaded → 0, quantized →
+    int8+scales; ``strategies.device_bytes``) while the per-transition
+    excess stays at full bytes — a node lives on device at full precision
+    during its own forward window (see ``core.strategies``).  The fold is
+    float-identical to the joint DP's ``m + option.m_add``.
     """
     pins = g.store_pins_mask
     prev_mask = 0
     m = 0.0
     peak = 0.0
+    w = device_bytes(g, assignment) if assignment else None
     for L in sequence:
         mask_Lp = to_mask(L)
         bd_mask = to_mask(g.boundary(L))
@@ -1921,7 +2716,8 @@ def peak_memory_live(g: Graph, sequence: Sequence[NodeSet]) -> float:
         Mi = m + transition_excess(g, prev_mask, mask_Lp, bd_mask)
         if Mi > peak:
             peak = Mi
-        m = m + _mask_M(g, (bd_mask | (pins & mask_Lp)) & ~prev_mask)
+        new_mask = (bd_mask | (pins & mask_Lp)) & ~prev_mask
+        m = m + (_mask_M(g, new_mask) if w is None else _mask_M_w(w, new_mask))
         prev_mask = mask_Lp
     return peak
 

@@ -74,11 +74,22 @@ def _topo_within(g: Graph, nodes: NodeSet) -> List[int]:
     return [v for v in order if v in nodes]
 
 
-def build_events(g: Graph, sequence: Sequence[NodeSet]) -> List[_Event]:
-    """Expand a lower-set sequence into the canonical-strategy event list."""
+def build_events(
+    g: Graph, sequence: Sequence[NodeSet], with_marks: bool = False
+):
+    """Expand a lower-set sequence into the canonical-strategy event list.
+
+    With ``with_marks`` returns ``(events, fwd_end, bwd_start)`` where
+    ``fwd_end[i]``/``bwd_start[i]`` are the event index of segment ``i``'s
+    last forward event and first backward-window event — the two boundaries
+    the storage-strategy repricing in :func:`simulate_events` splits cached
+    buffers' live intervals at.
+    """
     g.check_increasing_sequence(sequence)
     events: List[_Event] = []
     k = len(sequence)
+    fwd_end: List[int] = [0] * k
+    bwd_start: List[int] = [0] * k
     prev: NodeSet = EMPTY
     segs: List[NodeSet] = []
     bounds: List[NodeSet] = []
@@ -113,10 +124,12 @@ def build_events(g: Graph, sequence: Sequence[NodeSet]) -> List[_Event]:
         drop = Vi - U_k
         if drop and events:
             events[-1].frees_after.extend(("f", v) for v in drop)
+        fwd_end[i] = len(events) - 1
 
     # ---------------- backward ----------------
     for i in range(k - 1, -1, -1):
         Vi = segs[i]
+        bwd_start[i] = len(events)
         # recompute uncached forward values of V_i
         for v in _topo_within(g, Vi):
             if v in U_k:
@@ -148,6 +161,8 @@ def build_events(g: Graph, sequence: Sequence[NodeSet]) -> List[_Event]:
         frees = [("f", v) for v in Vi] + [("g", v) for v in Vi]
         if events:
             events[-1].frees_after.extend(frees)
+    if with_marks:
+        return events, fwd_end, bwd_start
     return events
 
 
@@ -174,13 +189,25 @@ def build_vanilla_events(g: Graph) -> List[_Event]:
 
 
 def simulate_events(
-    g: Graph, events: List[_Event], liveness: bool
+    g: Graph, events: List[_Event], liveness: bool,
+    reprice: Optional[Dict[Buffer, Tuple[int, int, float]]] = None,
 ) -> SimResult:
     """Peak live bytes over an event list, with versioned buffer intervals.
 
     A buffer *version* opens at its first write (or lazy-read for gradient
     seeds) and closes at the strategy's explicit discard.  liveness=True
     shrinks each version to end at its last use instead.
+
+    ``reprice`` prices the joint memory-strategy DP's reduced footprints:
+    it maps a cached f-buffer to ``(retire_idx, bwd_start_idx, carried)``
+    — full bytes from the forward write through the end of its segment's
+    forward window (the value exists on device before it is offloaded /
+    quantized), ``carried`` bytes while the cache holds it (0 for
+    offloaded, int8+scale for quantized; reads by *later* backward windows
+    are streamed and stay at the carried price), and full bytes again from
+    its own backward window's first event (the VJP sweep needs the
+    materialized value) to the version's end.  Only the version spanning
+    the retire point — the forward-computed cached one — is repriced.
     """
 
     def size(buf: Buffer) -> float:
@@ -219,8 +246,20 @@ def simulate_events(
     for key, s_idx in start.items():
         e_idx = last_touch[key] if liveness else end[key]
         e_idx = min(e_idx, end.get(key, e_idx))
-        delta[s_idx] += size(key[0])
-        delta[e_idx + 1] -= size(key[0])
+        full = size(key[0])
+        if reprice is not None and key[0] in reprice:
+            retire, bstart, carried = reprice[key[0]]
+            if s_idx <= retire < e_idx:
+                delta[s_idx] += full
+                delta[retire + 1] += carried - full
+                if retire < bstart <= e_idx:
+                    delta[bstart] += full - carried
+                    delta[e_idx + 1] -= full
+                else:
+                    delta[e_idx + 1] -= carried
+                continue
+        delta[s_idx] += full
+        delta[e_idx + 1] -= full
     peak = 0.0
     cur = 0.0
     for idx in range(n_events):
@@ -237,10 +276,37 @@ def simulate_events(
 
 
 def simulate(
-    g: Graph, sequence: Sequence[NodeSet], liveness: bool = True
+    g: Graph, sequence: Sequence[NodeSet], liveness: bool = True,
+    assignment: Optional[Dict[int, str]] = None,
 ) -> SimResult:
-    """Simulate the canonical strategy for a lower-set sequence."""
-    return simulate_events(g, build_events(g, sequence), liveness)
+    """Simulate the canonical strategy for a lower-set sequence.
+
+    ``assignment`` (node → ``core.strategies`` code) prices cached
+    residuals at their storage strategy's device bytes between their
+    forward window and their own backward window — the event-level
+    counterpart of ``dp.peak_memory_live(g, sequence, assignment)``, and
+    the oracle ``analysis.verifier`` replays strategy-annotated plans
+    against.
+    """
+    from .strategies import STORE, device_bytes
+
+    live = {v: c for v, c in (assignment or {}).items() if c != STORE}
+    if not live:
+        return simulate_events(g, build_events(g, sequence), liveness)
+    events, fwd_end, bwd_start = build_events(g, sequence, with_marks=True)
+    w = device_bytes(g, live)
+    seg_of: Dict[int, int] = {}
+    prev: NodeSet = EMPTY
+    for i, L in enumerate(sequence):
+        for v in L - prev:
+            seg_of[v] = i
+        prev = L
+    reprice: Dict[Buffer, Tuple[int, int, float]] = {
+        ("f", v): (fwd_end[seg_of[v]], bwd_start[seg_of[v]], w[v])
+        for v in live
+        if v in seg_of
+    }
+    return simulate_events(g, events, liveness, reprice=reprice)
 
 
 # ---------------------------------------------------------------------------

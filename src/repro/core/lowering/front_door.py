@@ -65,6 +65,7 @@ class PlannedFunction:
         verify: bool = False,
         verify_hlo: bool = False,
         donate: bool = False,
+        strategies: Any = None,
     ):
         self.fn = fn
         self.budget = budget
@@ -82,6 +83,7 @@ class PlannedFunction:
         self.verify = verify
         self.verify_hlo = verify_hlo
         self.donate = donate
+        self.strategies = strategies
         self._memo: Dict[Tuple, LoweredPlan] = {}
 
     # ------------------------------------------------------------------ plan
@@ -154,6 +156,20 @@ class PlannedFunction:
         carrier = self._carrier_for(args)
         g = carrier.to_graph()
         pl = self.planner or get_default_planner()
+        if self.strategies is not None:
+            # Joint memory-strategy planning: wrap the base planner in one
+            # configured with the requested strategy set, sharing its plan
+            # cache/profile so legacy and strategy plans coexist under
+            # distinct content addresses.
+            from ..planner import Planner
+
+            pl = Planner(
+                cache=pl.cache,
+                profile=pl.profile,
+                quantize_levels=pl.quantize_levels,
+                sweep_max_states=pl.sweep_max_states,
+                strategies=self.strategies,
+            )
         report = pl.plan(g, self.budget, self.method, self.objective)
         if report.plan is None:
             hint = ""
@@ -204,6 +220,7 @@ class PlannedFunction:
                 g, report.plan, budget=self.budget,
                 effects=getattr(carrier, "effects", None),
                 jg=getattr(carrier, "jg", None),
+                strategies=getattr(pl, "strategies", None),
             )
             if not vrep.ok:
                 raise PlanVerificationError(str(vrep))
@@ -246,6 +263,7 @@ def plan_function(
     verify: bool = False,
     verify_hlo: bool = False,
     donate: bool = False,
+    strategies: Any = None,
 ) -> PlannedFunction:
     """Plan ``fn``'s recomputation under ``budget`` bytes; return its
     value_and_grad twin.
@@ -326,6 +344,18 @@ def plan_function(
         unchanged; callers must not reuse donated arrays after the call on
         backends that implement donation (CPU warns and ignores).
 
+    strategies:
+        Joint memory-strategy planning (§ strategy lattice): a
+        ``core.strategies.StrategyConfig`` or a tuple of strategy names
+        drawn from ``{"store", "recompute", "offload", "quantize"}``.
+        The planner then picks a per-node storage strategy for every
+        cached residual — offloaded nodes cost host-transfer time but
+        zero device bytes; quantized nodes cost codec time and int8+scale
+        bytes — and the lowered twin realizes the assignment (host
+        placement / ``optim.compression`` round-trip).  ``None`` (or a
+        set enabling nothing beyond store+recompute) is the paper's
+        binary planning, bit-identical to previous releases.
+
     The ``REPRO_VERIFY_PLANS`` environment variable overrides both flags at
     the launch layer: any truthy value enables ``verify``; the value
     ``"hlo"`` enables ``verify`` *and* ``verify_hlo``.
@@ -344,7 +374,7 @@ def plan_function(
         loss_fn=loss_fn, planner=planner, track_live=track_live,
         mesh=mesh, in_shardings=in_shardings,
         analyze_effects=analyze_effects, verify=verify,
-        verify_hlo=verify_hlo, donate=donate,
+        verify_hlo=verify_hlo, donate=donate, strategies=strategies,
     )
 
 

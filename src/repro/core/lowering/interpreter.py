@@ -21,6 +21,13 @@ Two granularities, one semantics:
 the *intermediate forward values* held at each step (function inputs and
 parameters are excluded, as in §2), which the tests assert stays within
 the plan's ``peak_memory``.
+
+Strategy plans (``plan.strategy``): the traced path boxes each cached
+value per its storage strategy — offloaded residuals are host-placed and
+audit at **0 device bytes**, quantized ones hold the int8 payload + block
+scales and audit at the compressed size — so the live-byte trace charges
+exactly what the joint DP priced.  The block-granularity path rejects
+strategy plans (use ``backend="segment"`` for BlockGraphs).
 """
 
 from __future__ import annotations
@@ -37,6 +44,69 @@ from .carriers import BlockGraphCarrier, TracedCarrier, is_drop_var as _is_drop
 
 def _nbytes(x) -> int:
     return int(x.size * x.dtype.itemsize) if hasattr(x, "dtype") else 0
+
+
+# ---------------------------------------------------------------------------
+# Storage-strategy boxes (joint memory-strategy plans, traced path)
+# ---------------------------------------------------------------------------
+
+
+class _QuantizedBox:
+    """A cached residual held as int8 payload + per-block scales."""
+
+    __slots__ = ("c", "dtype")
+
+    def __init__(self, c, dtype):
+        self.c = c
+        self.dtype = dtype
+
+    def device_bytes(self) -> int:
+        return _nbytes(self.c.q) + _nbytes(self.c.scale)
+
+
+class _HostBox:
+    """A cached residual placed in host memory (zero device bytes)."""
+
+    __slots__ = ("x",)
+
+    def __init__(self, x):
+        self.x = x
+
+    def device_bytes(self) -> int:
+        return 0
+
+
+def _box(val, code):
+    """Box one cached array per its storage strategy (raw for ``store``)."""
+    if code == "quantize" and hasattr(val, "dtype") and jnp.issubdtype(
+        val.dtype, jnp.inexact
+    ):
+        from repro.optim.compression import compress
+
+        return _QuantizedBox(compress(val), val.dtype)
+    if code == "offload":
+        from .segment import _memory_kind_put
+
+        return _HostBox(_memory_kind_put(val, "pinned_host"))
+    return val
+
+
+def _unbox(val):
+    if isinstance(val, _QuantizedBox):
+        from repro.optim.compression import decompress
+
+        return decompress(val.c).astype(val.dtype)
+    if isinstance(val, _HostBox):
+        from .segment import _memory_kind_put
+
+        return _memory_kind_put(val.x, "device")
+    return val
+
+
+def _stored_nbytes(val) -> int:
+    if isinstance(val, (_QuantizedBox, _HostBox)):
+        return val.device_bytes()
+    return _nbytes(val)
 
 
 # ---------------------------------------------------------------------------
@@ -212,11 +282,17 @@ def traced_planned_value_and_grad(
     eqns = jaxpr.eqns
     outvar = jaxpr.outvars[0]
     cached = plan.cached
+    # joint memory-strategy plans: cached residuals of quantize/offload
+    # nodes are *boxed* in the env (int8+scale / host placement) and
+    # decompressed / brought back on every read — forward cross-segment
+    # consumers and backward recomputes both see the replay-from-storage
+    # value, and the live-byte audit charges only the stored footprint
+    strategy = plan.strategy or {}
 
     def read(v, local, env):
         if isinstance(v, jcore.Literal):
             return v.val
-        return local[v] if v in local else env[v]
+        return local[v] if v in local else _unbox(env[v])
 
     # ---- static per-segment structure -------------------------------------
     consumer_segs: Dict[Any, set] = {}  # var -> segment indices reading it
@@ -276,7 +352,7 @@ def traced_planned_value_and_grad(
                     if v in base or v in seen_vars:
                         continue
                     seen_vars.add(v)
-                    nbytes += _nbytes(val)
+                    nbytes += _stored_nbytes(val)
             live_trace.append((tag, nbytes))
 
         def eval_segment(seg, env_like):
@@ -295,11 +371,16 @@ def traced_planned_value_and_grad(
             local = eval_segment(seg, env)
             for v_idx in seg.nodes:
                 keep = v_idx in cached
+                code = strategy.get(v_idx)
                 for ov in eqns[v_idx].outvars:
                     if _is_drop(ov):
                         continue
-                    if keep or ov is outvar:
-                        env[ov] = local[ov]
+                    if ov is outvar:
+                        env[ov] = local[ov]  # the loss is never boxed
+                    elif keep:
+                        env[ov] = (
+                            _box(local[ov], code) if code else local[ov]
+                        )
             snapshot(f"fwd_seg{seg.index}", env)
 
         if isinstance(outvar, jcore.Literal):
@@ -330,7 +411,7 @@ def traced_planned_value_and_grad(
                     inner = eval_segment(_seg, dict(zip(_ext, ext_vals)))
                     return tuple(inner[o] for o in _outs)
 
-                ext_vals = [env[v] for v in ext]
+                ext_vals = [_unbox(env[v]) for v in ext]
                 _primals, vjp = jax.vjp(seg_fn, *ext_vals)
                 cts = tuple(
                     ct_env.pop(o)
@@ -401,6 +482,14 @@ class InterpreterLowering(Lowering):
 
             reject_donate(self.name)
         if isinstance(carrier, BlockGraphCarrier):
+            if plan.strategy:
+                raise NotImplementedError(
+                    "the block-granularity interpreter does not realize "
+                    "storage strategies; lower strategy plans over "
+                    "BlockGraphs with backend='segment', or trace the "
+                    "function (backend='interpreter'/'jaxpr' on a "
+                    "TracedCarrier)"
+                )
             return planned_value_and_grad(
                 carrier.bg, plan, carrier.loss_fn, track_live=track_live
             )

@@ -39,9 +39,29 @@ def plan_policy(plan: ExecutionPlan, names: Sequence[str]):
     """``save_only_these_names`` over the plan's cache set U_k.
 
     ``names[v]`` is the checkpoint-name of node v (block name or jaxpr
-    equation name).
+    equation name).  Strategy plans lower their ``offload`` nodes through
+    ``save_and_offload_only_these_names`` — XLA saves those residuals in
+    host memory (``pinned_host``) and streams them back for the backward
+    pass.  Quantized nodes stay in the *saved* list: their name tags the
+    int8 payload + scales (see :func:`quantized_checkpoint`), not the full
+    tensor, so the device keeps only the compressed bytes.
     """
-    keep = tuple(sorted(names[v] for v in plan.cached))
+    from ..strategies import OFFLOAD
+
+    strategy = plan.strategy or {}
+    offloaded = tuple(sorted(
+        names[v] for v in plan.cached if strategy.get(v) == OFFLOAD
+    ))
+    keep = tuple(sorted(
+        names[v] for v in plan.cached if strategy.get(v) != OFFLOAD
+    ))
+    if offloaded:
+        return _cp.save_and_offload_only_these_names(
+            names_which_can_be_saved=list(keep),
+            names_which_can_be_offloaded=list(offloaded),
+            offload_src="device",
+            offload_dst="pinned_host",
+        )
     return _cp.save_only_these_names(*keep)
 
 
@@ -86,11 +106,32 @@ def _taggable(x) -> bool:
     return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
 
 
-def tagged_eval(closed, names: Sequence[str], *flat_args):
+def quantized_checkpoint(o, name: str):
+    """Checkpoint ``o`` as int8 payload + per-block scales under ``name``.
+
+    The *compressed representation* carries the checkpoint name, so a
+    ``save_only_these_names`` policy materializes q (int8) and scales (f32)
+    — ~0.25+1/256 of the full bytes — and the backward remat rebuilds the
+    dequantized value from them.  The returned value is the round-trip with
+    a straight-through gradient (``optim.compression``), so downstream
+    consumers see exactly what a replay-from-storage would.
+    """
+    from repro.optim.compression import Compressed, compress, decompress
+
+    c = compress(jax.lax.stop_gradient(o))
+    q = checkpoint_name(c.q, name)
+    s = checkpoint_name(c.scale, name)
+    rt = decompress(Compressed(q, s, c.shape)).astype(o.dtype)
+    return o + jax.lax.stop_gradient(rt - o)
+
+
+def tagged_eval(closed, names: Sequence[str], *flat_args, quantized=frozenset()):
     """Evaluate a ClosedJaxpr with each equation's outputs named.
 
     ``names[idx]`` tags equation ``idx``'s (inexact) outputs via
     ``checkpoint_name`` — the hook ``save_only_these_names`` keys on.
+    ``quantized`` equations route through :func:`quantized_checkpoint`
+    instead: the name tags their int8+scale form.
     """
     from jax.extend import core as jcore
 
@@ -111,7 +152,13 @@ def tagged_eval(closed, names: Sequence[str], *flat_args):
         )
         outs = list(ans) if eqn.primitive.multiple_results else [ans]
         outs = [
-            checkpoint_name(o, names[idx]) if _taggable(o) else o
+            (
+                quantized_checkpoint(o, names[idx])
+                if idx in quantized
+                else checkpoint_name(o, names[idx])
+            )
+            if _taggable(o)
+            else o
             for o in outs
         ]
         for ov, o in zip(eqn.outvars, outs):
@@ -130,18 +177,31 @@ def traced_value_and_grad(carrier: TracedCarrier, plan: ExecutionPlan):
     partitions exactly like the vanilla pjit'd function, and the constraint
     transposes to itself so gradients come back in the input layout.
     """
+    from ..strategies import OFFLOAD, QUANTIZE
+
     names = carrier.node_names()
     policy = plan_policy(plan, names)
     closed = carrier.closed
+    strategy = plan.strategy or {}
+    quantized = frozenset(
+        v for v, code in strategy.items() if code == QUANTIZE
+    )
 
     ckpt_flat = jax.checkpoint(
-        lambda *flat: tagged_eval(closed, names, *flat), policy=policy
+        lambda *flat: tagged_eval(closed, names, *flat, quantized=quantized),
+        policy=policy,
     )
 
     def scalar_fn(*args):
         return ckpt_flat(*carrier.constrain(carrier.flatten_args(args)))
 
-    return jax.value_and_grad(scalar_fn, argnums=carrier.argnums)
+    vag = jax.value_and_grad(scalar_fn, argnums=carrier.argnums)
+    if any(code == OFFLOAD for code in strategy.values()):
+        # the offload policy's host device_puts (TransferToMemoryKind) are
+        # only legal under jit — eager twins with offloaded residuals would
+        # raise at the first call
+        vag = jax.jit(vag)
+    return vag
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +223,14 @@ class PolicyLowering(Lowering):
             reject_track_live(self.name)
         if donate:
             reject_donate(self.name)
+        if plan.strategy:
+            raise NotImplementedError(
+                "the block-granularity 'policy' backend does not realize "
+                "storage strategies (block outputs are pytrees under one "
+                "checkpoint name); lower strategy plans with "
+                "backend='segment' (BlockGraphs) or backend='jaxpr' "
+                "(traced functions)"
+            )
         return blockgraph_value_and_grad(
             lambda p, x, _bg=carrier.bg, _plan=plan, _m=carrier.mesh:
                 apply_with_policy(_bg, p, x, _plan, mesh=_m),

@@ -25,6 +25,41 @@ from .base import (
 from .carriers import BlockGraphCarrier
 
 
+def _memory_kind_put(x, kind: str):
+    """Best-effort ``device_put`` to a memory kind (``pinned_host`` /
+    ``device``).  Backends without host memory spaces — or eager execution,
+    where ``TransferToMemoryKind`` is jit-only — fall back to the identity:
+    the value stays on device, which is numerically exact (offload is a
+    placement hint, never a value change)."""
+    if not hasattr(x, "dtype"):
+        return x
+    try:
+        from jax._src.sharding_impls import TransferToMemoryKind
+
+        return jax.device_put(x, TransferToMemoryKind(kind))
+    except Exception:
+        return x
+
+
+def _apply_storage_strategy(val, code):
+    """Realize one cached value's storage strategy (pytree-wide)."""
+    from repro.optim.compression import straight_through_roundtrip
+    import jax.numpy as jnp
+
+    if code == "offload":
+        return jax.tree_util.tree_map(
+            lambda x: _memory_kind_put(x, "pinned_host"), val
+        )
+    if code == "quantize":
+        return jax.tree_util.tree_map(
+            lambda x: straight_through_roundtrip(x)
+            if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
+            else x,
+            val,
+        )
+    return val
+
+
 def constrain_block_output(out, block, mesh):
     """Pin an annotated block output to its sharding (no-op without a
     concrete Mesh — abstract ``{axis: size}`` meshes only drive accounting)."""
@@ -60,6 +95,23 @@ def apply_segmented(bg, params: Dict[str, Any], inputs: Dict[str, Any],
     """
     name_of = {i: b.name for i, b in enumerate(bg.blocks)}
     values: Dict[str, Any] = dict(inputs)
+    # per-name storage strategy (joint memory-strategy DP): offloaded cache
+    # entries live in host memory between their forward and backward use;
+    # quantized ones round-trip through optim.compression (straight-through
+    # gradient), so every later consumer sees the replay-from-storage value
+    strat = {
+        name_of[v]: code
+        for v, code in (plan.strategy or {}).items()
+        if v in name_of
+    }
+
+    def fetch(name: str):
+        v = values[name]
+        if strat.get(name) == "offload":
+            return jax.tree_util.tree_map(
+                lambda x: _memory_kind_put(x, "device"), v
+            )
+        return v
 
     for seg in plan.segments:
         seg_blocks = [bg.by_name[name_of[v]] for v in seg.nodes]
@@ -91,10 +143,11 @@ def apply_segmented(bg, params: Dict[str, Any], inputs: Dict[str, Any],
 
         seg_params = {b.name: params[b.name] for b in seg_blocks}
         wrapped = jax.checkpoint(seg_fn, policy=checkpoint_policy)
-        outs = wrapped(seg_params, *[values[i] for i in ext_names])
-        values.update(dict(zip(out_names, outs)))
+        outs = wrapped(seg_params, *[fetch(i) for i in ext_names])
+        for name, out in zip(out_names, outs):
+            values[name] = _apply_storage_strategy(out, strat.get(name))
 
-    res = tuple(values[o] for o in bg.outputs)
+    res = tuple(fetch(o) for o in bg.outputs)
     return res[0] if len(res) == 1 else res
 
 

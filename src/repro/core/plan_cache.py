@@ -399,19 +399,24 @@ class PlanKey:
     budget: float
     family: str
     objective: str
+    #: Strategy-lattice token (``StrategyConfig.digest_token()``): the
+    #: enabled strategy set + bandwidths.  Empty for the paper's binary —
+    #: and *omitted* from the payload then, so every pre-lattice digest is
+    #: byte-identical to what it always was.
+    strategy: str = ""
 
     def content_hash(self) -> str:
-        payload = "|".join(
-            (
-                f"v{FORMAT_VERSION}",
-                MEMORY_FUNCTIONAL,
-                self.graph_digest,
-                repr(float(self.budget)),
-                self.family,
-                self.objective,
-            )
-        )
-        return hashlib.sha256(payload.encode()).hexdigest()
+        parts = [
+            f"v{FORMAT_VERSION}",
+            MEMORY_FUNCTIONAL,
+            self.graph_digest,
+            repr(float(self.budget)),
+            self.family,
+            self.objective,
+        ]
+        if self.strategy:
+            parts.append(self.strategy)
+        return hashlib.sha256("|".join(parts).encode()).hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -427,13 +432,14 @@ class SweepKey:
     graph_digest: str
     family: str
     objective: str
+    strategy: str = ""  # StrategyConfig.digest_token(); "" keeps legacy bytes
 
     def content_hash(self) -> str:
-        payload = "|".join(
-            (f"sweep-v{FORMAT_VERSION}", MEMORY_FUNCTIONAL,
-             self.graph_digest, self.family, self.objective)
-        )
-        return hashlib.sha256(payload.encode()).hexdigest()
+        parts = [f"sweep-v{FORMAT_VERSION}", MEMORY_FUNCTIONAL,
+                 self.graph_digest, self.family, self.objective]
+        if self.strategy:
+            parts.append(self.strategy)
+        return hashlib.sha256("|".join(parts).encode()).hexdigest()
 
 
 def _to_canonical(seq: Sequence[NodeSet], to_pos: Dict[int, int]) -> List[List[int]]:
@@ -481,9 +487,12 @@ class PlanCache:
 
     @staticmethod
     def key_for(
-        g: Graph, budget: float, family: str, objective: str
+        g: Graph, budget: float, family: str, objective: str,
+        strategy: str = "",
     ) -> PlanKey:
-        return PlanKey(graph_digest(g), float(budget), family, objective)
+        return PlanKey(
+            graph_digest(g), float(budget), family, objective, strategy
+        )
 
     # ------------------------------------------------------------------ disk
 
@@ -586,8 +595,11 @@ class PlanCache:
                 self._decoded.move_to_end(dk)
         if res is None:
             return None
-        # fresh sequence list: callers may mutate it
-        return dataclasses.replace(res, sequence=list(res.sequence))
+        # fresh sequence list / assignment dict: callers may mutate them
+        return dataclasses.replace(
+            res, sequence=list(res.sequence),
+            assignment=dict(res.assignment) if res.assignment is not None else None,
+        )
 
     def _decoded_put(self, dk: "Tuple[str, Tuple[int, ...]]", res: DPResult) -> None:
         with self._lock:
@@ -643,6 +655,12 @@ class PlanCache:
             "peak_memory": result.peak_memory,
             "states_visited": int(result.states_visited),
         }
+        if result.assignment is not None:
+            # canonical node positions, like the sequence; the field is
+            # omitted for binary plans, keeping legacy entries byte-identical
+            entry["assignment"] = {
+                str(to_pos[v]): code for v, code in result.assignment.items()
+            }
         h = key.content_hash()
         self._mem_put(h, entry)
         self._decoded_put((h, tuple(canonical_maps(g)[1])), result)
@@ -665,12 +683,19 @@ class PlanCache:
             _, from_pos = canonical_maps(g)
             seq = _from_canonical(entry["sequence"], from_pos)
             g.check_increasing_sequence(seq)
+            assignment = None
+            if "assignment" in entry:
+                assignment = {
+                    from_pos[int(p)]: str(code)
+                    for p, code in entry["assignment"].items()
+                }
             return DPResult(
                 sequence=seq,
                 overhead=float(entry["overhead"]),
                 peak_memory=float(entry["peak_memory"]),
                 feasible=True,
                 states_visited=int(entry.get("states_visited", 0)),
+                assignment=assignment,
             )
         except (KeyError, IndexError, TypeError, ValueError):
             return None
@@ -678,8 +703,10 @@ class PlanCache:
     # ------------------------------------------------------------- sweeps
 
     @staticmethod
-    def sweep_key_for(g: Graph, family: str, objective: str) -> SweepKey:
-        return SweepKey(graph_digest(g), family, objective)
+    def sweep_key_for(
+        g: Graph, family: str, objective: str, strategy: str = ""
+    ) -> SweepKey:
+        return SweepKey(graph_digest(g), family, objective, strategy)
 
     def get_sweep(self, key: SweepKey, count_miss: bool = True) -> Optional[Sweep]:
         """Cached sweep in **canonical coordinates**; None on miss.

@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time as _time
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 from . import dp as dp_mod
 from .chen import chen_sqrt_n
@@ -42,6 +42,7 @@ from .liveness import simulate
 from .lower_sets import all_lower_sets, pruned_lower_sets
 from .plan_cache import PlanCache, SweepKey, default_cache
 from .schedule import ExecutionPlan, make_plan
+from .strategies import StrategyConfig
 
 _LOG = logging.getLogger(__name__)
 
@@ -175,10 +176,33 @@ class Planner:
         profile: Optional[OpProfile] = None,
         quantize_levels: Optional[int] = None,
         sweep_max_states: int = 10_000_000,
+        strategies: Optional[Union[StrategyConfig, Sequence[str]]] = None,
     ):
         self.cache = default_cache() if cache is None else cache
         self.profile = profile
         self.quantize_levels = quantize_levels
+        # Joint memory-strategy planning (core.strategies): a StrategyConfig
+        # or a tuple of strategy names.  Names are priced with the profile's
+        # measured host/codec bandwidths when one is attached.  A config
+        # that enables nothing beyond {store, recompute} is normalized to
+        # None — the planner then behaves (and caches) exactly as the
+        # binary planner always has.
+        if strategies is not None and not isinstance(strategies, StrategyConfig):
+            strategies = StrategyConfig(
+                strategies=tuple(strategies),
+                offload_bytes_per_sec=(
+                    profile.host_bytes_per_sec if profile is not None else 0.0
+                ),
+                quantize_bytes_per_sec=(
+                    profile.quantize_bytes_per_sec if profile is not None else 0.0
+                ),
+            )
+        if strategies is not None and not strategies.extended:
+            strategies = None
+        self.strategies = strategies
+        self._strategy_token = (
+            strategies.digest_token() if strategies is not None else ""
+        )
         # Work cap for budget-free sweeps (dp.sweep max_states): surfaces
         # wider than this fall back to per-budget DP solves deterministically.
         self.sweep_max_states = sweep_max_states
@@ -394,6 +418,11 @@ class Planner:
         ``sweep_max_states`` stays unwarmed (False; ``solve`` falls back to
         the per-budget DP as usual).
         """
+        if self.strategies is not None:
+            raise ValueError(
+                "prewarm builds binary (all-store) sweep surfaces; strategy "
+                "planners solve per budget and have nothing to pre-warm"
+            )
         gp = self.prepare(g)
         objective = _surface_objective(objective)
         sw = self._cached_sweep(gp, method, objective, count_miss=False)
@@ -417,6 +446,11 @@ class Planner:
         surface exceeds ``sweep_max_states`` — use ``solve_grid`` with
         explicit budgets (a capped, much cheaper sweep) in that case.
         """
+        if self.strategies is not None:
+            raise ValueError(
+                "frontier() reads the binary (all-store) sweep surface; use "
+                "solve_grid for a strategy planner's budget staircase"
+            )
         gp = g if prepared else self.prepare(g)
         objective = _surface_objective(objective)
         sw = self._cached_sweep(gp, method, objective, count_miss=True)
@@ -445,7 +479,7 @@ class Planner:
         if not budgets:
             return []
         gp = g if prepared else self.prepare(g)
-        if method in self.CACHEABLE_METHODS:
+        if method in self.CACHEABLE_METHODS and self.strategies is None:
             b_max = max(budgets)
             surface = _surface_objective(objective)
             sw = self._cached_sweep(gp, method, surface, count_miss=True)
@@ -488,10 +522,14 @@ class Planner:
         ``plan`` entry kind, exactly as before.
         """
         gp = g if prepared else self.prepare(g)
+        cfg = self.strategies
         if family is not None:
-            return solve(gp, budget, list(family), objective)
+            return solve(gp, budget, list(family), objective, strategies=cfg)
         if method not in self.CACHEABLE_METHODS:
-            return solve(gp, budget, self._family_for(gp, method), objective)
+            return solve(gp, budget, self._family_for(gp, method), objective,
+                         strategies=cfg)
+        if cfg is not None:
+            return self._solve_strategies(gp, budget, method, objective)
         if objective == "wallclock":
             return self._solve_wallclock(gp, budget, method)
         sw = self._cached_sweep(gp, method, objective)
@@ -507,6 +545,35 @@ class Planner:
             if hit is not None:
                 return hit
         res = solve(gp, budget, self._family_for(gp, method), objective)
+        if cacheable:
+            self.cache.put(gp, key, res)
+        return res
+
+    def _solve_strategies(
+        self, gp: Graph, budget: float, method: str, objective: str
+    ) -> DPResult:
+        """Per-budget joint memory-strategy solve through the plan cache.
+
+        Strategy planning has no budget-free sweep tier (strategy surfaces
+        are in-memory only, see ``dp.StrategySweep``); per-budget results
+        are memoized under :class:`~repro.core.plan_cache.PlanKey`\\ s that
+        carry the config's ``digest_token()`` — disjoint by construction
+        from every legacy digest.  ``wallclock`` results are not cached:
+        their ranking depends on replay parameters the key does not carry.
+        """
+        cfg = self.strategies
+        assert cfg is not None
+        cacheable = self.cache is not None and objective != "wallclock"
+        key = None
+        if cacheable:
+            key = PlanCache.key_for(
+                gp, budget, method, objective, strategy=self._strategy_token
+            )
+            hit = self.cache.get(gp, key)
+            if hit is not None:
+                return hit
+        res = solve(gp, budget, self._family_for(gp, method), objective,
+                    strategies=cfg)
         if cacheable:
             self.cache.put(gp, key, res)
         return res
@@ -530,9 +597,14 @@ class Planner:
         """
         del tol  # the scalar DP is exact — nothing to tolerate
         gp = g if prepared else self.prepare(g)
+        cfg = self.strategies
         if family is not None:
-            return dp_mod.min_feasible_budget_exact(gp, list(family))
-        if method in self.CACHEABLE_METHODS:
+            return dp_mod.min_feasible_budget_exact(
+                gp, list(family), strategies=cfg
+            )
+        if cfg is None and method in self.CACHEABLE_METHODS:
+            # legacy sweep surfaces price full-byte caches only — a strategy
+            # planner's minimum is (weakly) lower, so it never reads them
             for objective in ("time_centric", "memory_centric"):
                 sw = self._cached_sweep(gp, method, objective)
                 if sw is not None:
@@ -542,13 +614,19 @@ class Planner:
         aux_key = None
         if self.cache is not None:
             # MEMORY_FUNCTIONAL in the key: min budgets computed under an
-            # older functional (eq. 2) must invalidate by construction
+            # older functional (eq. 2) must invalidate by construction.
+            # The strategy token (empty for the binary planner) keeps joint
+            # minimums from ever aliasing legacy ones.
             aux_key = (f"{graph_digest(gp)}|{method}|"
                        f"{dp_mod.MEMORY_FUNCTIONAL}|exact")
+            if self._strategy_token:
+                aux_key += f"|{self._strategy_token}"
             v = self.cache.get_aux("min_budget", aux_key)
             if v is not None:
                 return v
-        b = dp_mod.min_feasible_budget_exact(gp, self._family_for(gp, method))
+        b = dp_mod.min_feasible_budget_exact(
+            gp, self._family_for(gp, method), strategies=cfg
+        )
         if self.cache is not None:
             self.cache.put_aux("min_budget", aux_key, b)
         return b
@@ -598,14 +676,18 @@ class Planner:
                 plan_seconds=dt,
             )
 
-        ep = make_plan(gp, res.sequence)
-        sim_live = simulate(gp, res.sequence, liveness=True)
-        sim_nolive = simulate(gp, res.sequence, liveness=False)
+        ep = make_plan(gp, res.sequence, assignment=res.assignment,
+                       strategies=self.strategies)
+        sim_live = simulate(gp, res.sequence, liveness=True,
+                            assignment=res.assignment)
+        sim_nolive = simulate(gp, res.sequence, liveness=False,
+                              assignment=res.assignment)
         replayed = None
         if objective == "wallclock" and method.endswith("dp"):
             from .replay import replay as _replay
 
-            replayed = _replay(gp, ep, budget=budget).seconds
+            replayed = _replay(gp, ep, budget=budget,
+                               strategies=self.strategies).seconds
         return PlanReport(
             method=method,
             objective=objective if method.endswith("dp") else "-",

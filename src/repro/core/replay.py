@@ -47,6 +47,7 @@ from .cost_model import OpProfile, node_seconds
 from .graph import Graph, NodeSet, mask_iter, to_mask
 from .liveness import transition_excess
 from .schedule import ExecutionPlan
+from .strategies import OFFLOAD, QUANTIZE, StrategyConfig, device_bytes
 
 #: Mesh interconnect bandwidth used to turn collective bytes into seconds
 #: (TPU-v5e ICI order of magnitude; override per call for other fabrics).
@@ -68,6 +69,9 @@ class SegmentTiming:
     comm_seconds: float  # collective traffic attributed to this window
     hidden_seconds: float  # recompute of segment index-1 hidden under us
     headroom_bytes: float  # peak − this window's analytic live bytes
+    #: D2H+H2D transfer plus int8 codec seconds of this segment's kept
+    #: residuals under the plan's storage strategies (0 for binary plans).
+    transfer_seconds: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,8 +143,13 @@ def window_peaks(g: Graph, plan: ExecutionPlan) -> List[float]:
     The backward-window decomposition behind ``dp.peak_memory_live``:
     ``max(window_peaks) == plan.peak_memory`` for any valid plan, and each
     entry bounds the bytes live while that segment's window executes.
+    For strategy plans the carried mass folds each cached node at its
+    strategy's device bytes (offloaded → 0, quantized → int8+scale) — the
+    same ``core.strategies.device_bytes`` weights ``dp.peak_memory_live``
+    uses, so the invariant holds float-for-float there too.
     """
     pins = g.store_pins_mask
+    w = device_bytes(g, plan.strategy) if plan.strategy else g.mem_v
     prev_mask = 0
     m = 0.0
     peaks: List[float] = []
@@ -152,7 +161,7 @@ def window_peaks(g: Graph, plan: ExecutionPlan) -> List[float]:
         # order — so max(window_peaks) == plan.peak_memory in float, not
         # just on paper.
         cache_mask = (bd_mask | (pins & mask_lp)) & ~prev_mask
-        m += sum(g.mem_v[v] for v in mask_iter(cache_mask))
+        m += sum(w[v] for v in mask_iter(cache_mask))
         prev_mask = mask_lp
     return peaks
 
@@ -169,6 +178,7 @@ def replay(
     comm_bytes: Optional[float] = None,
     interconnect_bytes_per_sec: float = DEFAULT_INTERCONNECT_BYTES_PER_SEC,
     segment_costs: Optional[Mapping[int, float]] = None,
+    strategies: Optional[StrategyConfig] = None,
 ) -> ReplayResult:
     """Price one training step of ``plan`` on ``g`` (see module docstring).
 
@@ -185,11 +195,41 @@ def replay(
     recompute within an overridden segment is scaled by its ``T``-ratio.
     ``comm_bytes`` (e.g. from :func:`hlo_comm_bytes`) overrides the
     :func:`mesh_comm_bytes` model.
+
+    Strategy plans (``plan.strategy`` non-empty) additionally price each
+    window's kept residuals: offloaded nodes pay a D2H+H2D round trip over
+    the host link and quantized nodes pay the int8 codec round trip.
+    Those ``transfer_seconds`` join the window's backward/collective work —
+    serial cost that the previous segment's recompute may hide under, the
+    same overlap budgeting as everything else in the window.  Bandwidths
+    come from ``strategies`` when given, else from the profile's
+    ``host_bytes_per_sec``/``quantize_bytes_per_sec``, else the cost-model
+    defaults.
     """
     segs = plan.segments
     k = len(segs)
     if comm_bytes is None:
         comm_bytes = mesh_comm_bytes(plan, g, mesh)
+
+    # Per-segment transfer/codec seconds of the kept residuals.
+    xfer_s = [0.0] * k
+    if plan.strategy:
+        if strategies is not None:
+            off_bw = strategies.offload_bytes_per_sec
+            qz_bw = strategies.quantize_bytes_per_sec
+        elif profile is not None:
+            off_bw = profile.host_bytes_per_sec
+            qz_bw = profile.quantize_bytes_per_sec
+        else:
+            defaults = StrategyConfig()
+            off_bw = defaults.offload_bytes_per_sec
+            qz_bw = defaults.quantize_bytes_per_sec
+        for i, seg in enumerate(segs):
+            ob = sum(g.mem_v[v] for v in sorted(seg.keep)
+                     if plan.strategy.get(v) == OFFLOAD)
+            qb = sum(g.mem_v[v] for v in sorted(seg.keep)
+                     if plan.strategy.get(v) == QUANTIZE)
+            xfer_s[i] = 2.0 * ob / off_bw + 2.0 * qb / qz_bw
 
     # Per-segment forward compute seconds (and the recompute subset).
     fwd_s: List[float] = []
@@ -226,14 +266,15 @@ def replay(
     for i in range(k - 1, -1, -1):
         b_i = backward_factor * fwd_s[i]
         c_i = comm_s[i]
-        serial += rec_s[i] + b_i + c_i
+        x_i = xfer_s[i]
+        serial += rec_s[i] + b_i + c_i + x_i
         hidden = 0.0
         headroom = max(0.0, peak_budget - peaks[i])
         if overlap and i > 0 and rec_s[i - 1] > 0.0:
             rbytes = _bytes_of(g, segs[i - 1].recompute)
             phi = 1.0 if rbytes <= headroom else (
                 headroom / rbytes if rbytes > 0.0 else 1.0)
-            hidden = min(phi * rec_s[i - 1], b_i + c_i)
+            hidden = min(phi * rec_s[i - 1], b_i + c_i + x_i)
             hidden_total += hidden
             sim_overlap = max(sim_overlap, peaks[i] + min(rbytes, headroom))
         timings.append(
@@ -244,6 +285,7 @@ def replay(
                 comm_seconds=c_i,
                 hidden_seconds=hidden,
                 headroom_bytes=headroom,
+                transfer_seconds=x_i,
             )
         )
     timings.reverse()
@@ -264,6 +306,8 @@ def rank_by_replay(
     g: Graph,
     sequences: Sequence[Sequence[NodeSet]],
     *,
+    assignments: Optional[Sequence[Optional[Mapping[int, str]]]] = None,
+    strategies: Optional[StrategyConfig] = None,
     profile: Optional[OpProfile] = None,
     backward_factor: float = DEFAULT_BACKWARD_FACTOR,
     overlap: bool = True,
@@ -278,22 +322,32 @@ def rank_by_replay(
     (the device memory the overlap stream may fill).  ``overlap=False``
     ranks by the serial replay — for targets that cannot run a second
     stream (a single-stream host, or profiling-only comparisons).
-    Deterministic tie-break: (replayed seconds, analytic peak, index) —
-    two candidates with identical replays resolve to the earlier (for
-    sweeps: lower-overhead) one.  Returns
+    ``assignments`` optionally pairs each sequence with a per-node storage
+    strategy map (``None`` entries are plain binary candidates), letting
+    the joint memory-strategy DP rank strategy plans and legacy all-store
+    plans in one pool; ``strategies`` supplies the transfer/codec
+    bandwidths pricing them.  Deterministic tie-break: (replayed seconds,
+    analytic peak, index) — two candidates with identical replays resolve
+    to the earlier (for sweeps: lower-overhead) one.  Returns
     ``(winner_index, plan, replay_result)``.
     """
     if not sequences:
         raise ValueError("no candidate sequences to rank")
+    if assignments is not None and len(assignments) != len(sequences):
+        raise ValueError("assignments must pair 1:1 with sequences")
     from .schedule import make_plan
 
     best: Optional[Tuple[float, float, int, ExecutionPlan, ReplayResult]] = None
     for idx, seq in enumerate(sequences):
-        plan = make_plan(g, list(seq))
+        asg = assignments[idx] if assignments is not None else None
+        plan = make_plan(
+            g, list(seq), assignment=dict(asg) if asg else None,
+            strategies=strategies,
+        )
         res = replay(
             g, plan, profile=profile, backward_factor=backward_factor,
             overlap=overlap, budget=budget, mesh=mesh, comm_bytes=comm_bytes,
-            segment_costs=segment_costs,
+            segment_costs=segment_costs, strategies=strategies,
         )
         key = (res.seconds, plan.peak_memory, idx)
         if best is None or key < (best[0], best[1], best[2]):

@@ -17,7 +17,7 @@ registered backend in ``core.lowering`` executes —
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .graph import EMPTY, Graph, NodeSet
 
@@ -38,8 +38,14 @@ class Segment:
 class ExecutionPlan:
     segments: Tuple[Segment, ...]
     cached: NodeSet  # U_k — everything ever cached
-    overhead: float  # eq. (1)
+    overhead: float  # eq. (1), plus strategy taxes for strategy plans
     peak_memory: float  # liveness-tight analytic peak (dp.peak_memory_live)
+    #: Per-node storage strategy of the cached set (core.strategies codes).
+    #: Empty for the paper's binary plans; keys are a subset of ``cached``
+    #: and a missing key means "store".  Lowerings read this to place
+    #: offloaded residuals on host and run quantized ones through the
+    #: optim.compression round-trip.
+    strategy: Dict[int, str] = dataclasses.field(default_factory=dict)
 
     @property
     def num_segments(self) -> int:
@@ -53,15 +59,28 @@ class ExecutionPlan:
         return out
 
 
-def make_plan(g: Graph, sequence: Sequence[NodeSet]) -> ExecutionPlan:
+def make_plan(
+    g: Graph,
+    sequence: Sequence[NodeSet],
+    assignment: Optional[Dict[int, str]] = None,
+    strategies: Optional["object"] = None,
+) -> ExecutionPlan:
     """Lower a validated lower-set sequence into an ExecutionPlan.
 
     ``peak_memory`` is the liveness-tight analytic peak — the budget the DP
     admitted the sequence under, and an exact upper bound on the
     interpreter's measured live bytes (equals the §2 event simulation with
     last-use frees).
+
+    ``assignment`` (joint memory-strategy DP output) attaches a per-node
+    storage strategy to the cached set: ``peak_memory`` then prices
+    offloaded/quantized residuals at their reduced device bytes, and — when
+    a ``strategies`` :class:`~repro.core.strategies.StrategyConfig` is
+    given — ``overhead`` additionally carries the assignment's transfer /
+    codec taxes (the joint DP's time-centric ``t`` axis).
     """
     from .dp import overhead as _overhead, peak_memory_live as _peak
+    from .strategies import STORE, assignment_taxes
 
     g.check_increasing_sequence(sequence)
     order = g.topological_order()
@@ -92,11 +111,21 @@ def make_plan(g: Graph, sequence: Sequence[NodeSet]) -> ExecutionPlan:
         dataclasses.replace(s, recompute=frozenset(set(s.nodes) - U_k))
         for s in segments
     ]
+    strategy: Dict[int, str] = {}
+    if assignment:
+        strategy = {
+            v: code for v, code in assignment.items()
+            if v in U_k and code != STORE
+        }
+    overhead = _overhead(g, sequence)
+    if strategy and strategies is not None:
+        overhead += assignment_taxes(g, strategy, strategies)
     return ExecutionPlan(
         segments=tuple(segments),
         cached=U_k,
-        overhead=_overhead(g, sequence),
-        peak_memory=_peak(g, sequence),
+        overhead=overhead,
+        peak_memory=_peak(g, sequence, strategy or None),
+        strategy=strategy,
     )
 
 
@@ -107,6 +136,13 @@ def plan_summary(g: Graph, plan: ExecutionPlan) -> str:
         f"({100 * plan.overhead / g.total_time:.1f}% of fwd), "
         f"analytic peak M={plan.peak_memory:.4g}"
     ]
+    if plan.strategy:
+        counts: Dict[str, int] = {}
+        for code in plan.strategy.values():
+            counts[code] = counts.get(code, 0) + 1
+        lines[0] += " strategies=" + ",".join(
+            f"{c}:{n}" for c, n in sorted(counts.items())
+        )
     for s in plan.segments:
         lines.append(
             f"  seg {s.index}: |V|={len(s.nodes)} keep={sorted(s.keep)} "

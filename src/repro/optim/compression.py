@@ -53,6 +53,18 @@ def decompress(c: Compressed) -> jax.Array:
     return flat[:n].reshape(c.shape)
 
 
+def straight_through_roundtrip(x: jax.Array) -> jax.Array:
+    """int8 round-trip with a straight-through gradient.
+
+    Value is ``decompress(compress(x))`` (the int8+scale storage a
+    ``quantize`` plan strategy keeps on device); gradient is identity —
+    ``round``/``clip`` have zero derivative, so without the estimator the
+    cotangent through a quantized residual would vanish.
+    """
+    rt = decompress(compress(jax.lax.stop_gradient(x))).astype(x.dtype)
+    return x + jax.lax.stop_gradient(rt - x)
+
+
 def quantize_roundtrip_with_feedback(
     grads: Any, error: Any
 ) -> Tuple[Any, Any]:

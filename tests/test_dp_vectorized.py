@@ -206,6 +206,75 @@ def test_solve_seeds_memo_for_returned_plan():
     assert res.peak_memory <= b
 
 
+@pytest.mark.parametrize("seed", range(6))
+def test_wallclock_solve_bit_identical(seed, scalar_mode):
+    """Close the scalar-oracle gap for objective='wallclock': the sweep +
+    replay-ranked extraction must agree bit-for-bit across both paths."""
+    r = random.Random(seed * 11 + 7)
+    g = random_dag(r, r.randint(3, 9))
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, family=fam)
+    if b == dp.INF:
+        return
+    for budget in (b, np.nextafter(b, np.inf), b * 1.5, b * 4.0):
+        _fresh(g)
+        rv = solve(g, budget, fam, objective="wallclock")
+        _fresh(g)
+        rs = scalar_mode(solve, g, budget, fam, objective="wallclock")
+        assert _dp_fields(rv) == _dp_fields(rs)
+
+
+@pytest.mark.parametrize("objective", OBJECTIVES + ("wallclock",))
+@pytest.mark.parametrize("seed", range(6))
+def test_store_recompute_restriction_is_legacy(seed, objective, scalar_mode):
+    """A {store, recompute} strategy set is the paper's binary problem: the
+    lattice entry points must return bit-identical results to the
+    pre-lattice calls, vectorized and scalar alike (regression guard for
+    the joint-DP refactor)."""
+    from repro.core.strategies import StrategyConfig
+
+    cfg = StrategyConfig(strategies=("store", "recompute"))
+    assert not cfg.extended
+    r = random.Random(seed * 17 + 3)
+    g = random_dag(r, r.randint(3, 9))
+    fam = all_lower_sets(g)
+
+    _fresh(g)
+    b_plain = min_feasible_budget_exact(g, family=fam)
+    _fresh(g)
+    b_cfg = min_feasible_budget_exact(g, family=fam, strategies=cfg)
+    _fresh(g)
+    b_sca = scalar_mode(min_feasible_budget_exact, g, family=fam,
+                        strategies=cfg)
+    assert b_plain == b_cfg == b_sca
+    if b_plain == dp.INF:
+        return
+
+    for budget in (b_plain, np.nextafter(b_plain, np.inf), b_plain * 2.0):
+        _fresh(g)
+        r_plain = solve(g, budget, fam, objective=objective)
+        _fresh(g)
+        r_cfg = solve(g, budget, fam, objective=objective, strategies=cfg)
+        _fresh(g)
+        r_sca = scalar_mode(solve, g, budget, fam, objective=objective,
+                            strategies=cfg)
+        assert _dp_fields(r_plain) == _dp_fields(r_cfg) == _dp_fields(r_sca)
+        assert r_cfg.assignment is None  # legacy results carry no lattice
+
+        _fresh(g)
+        assert dp.feasible(g, budget, fam) == dp.feasible(
+            g, budget, fam, strategies=cfg
+        )
+
+    if objective == "wallclock":
+        return  # sweeps below share the TC surface; nothing new to check
+    _fresh(g)
+    sw_plain = sweep(g, fam, objective=objective)
+    _fresh(g)
+    sw_cfg = sweep(g, fam, objective=objective, strategies=cfg)
+    assert sw_plain.encode() == sw_cfg.encode()
+
+
 def test_scalar_env_forces_oracle(monkeypatch):
     # REPRO_DP_SCALAR=1 must actually bypass the vectorized paths
     monkeypatch.setenv("REPRO_DP_SCALAR", "1")

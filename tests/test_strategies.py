@@ -1,0 +1,454 @@
+"""Joint memory-strategy DP (strategy lattice): oracle equality, lowering
+realizations, and device-byte audits.
+
+Covers the PR-10 satellite contracts:
+
+* differential oracle — the multi-strategy DP's optimum equals the
+  brute-force optimum of ``core.dfs.exhaustive_search`` over *all*
+  strategy assignments, bit-for-bit, at ulp-adjacent budgets;
+* lowering semantics — offload-only plans are bit-identical to vanilla
+  ``jax.value_and_grad`` (host placement never changes a value); quantized
+  plans stay inside the documented relative gradient bound
+  (``docs/architecture.md``, "Strategy lattice") and plans that select
+  zero quantized nodes stay bit-identical;
+* interpreter audit — the live-byte trace prices offloaded residuals at
+  zero device bytes and quantized ones at int8+scale bytes, so the
+  measured peak of a strategy plan sits under its analytic peak while the
+  same sequence all-store measures strictly higher;
+* verifier + plan-cache guards for strategy-annotated plans.
+"""
+
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dp
+from repro.core.dfs import exhaustive_search
+from repro.core.dp import min_feasible_budget_exact, solve
+from repro.core.lower_sets import all_lower_sets
+from repro.core.schedule import make_plan
+from repro.core.strategies import (
+    LEGACY,
+    OFFLOAD,
+    QUANTIZE,
+    QUANTIZE_BYTES_RATIO,
+    STORE,
+    StrategyConfig,
+    device_bytes,
+)
+
+from conftest import random_dag
+
+# Artificially slow strategy bandwidths (bytes/time-unit) so taxes are the
+# same order as the T ∈ {1, 10} node times and the DP must genuinely trade
+# them off; offload twice as expensive per byte as the int8 codec.
+CFG = StrategyConfig(
+    strategies=("store", "recompute", "offload", "quantize"),
+    offload_bytes_per_sec=4.0,
+    quantize_bytes_per_sec=16.0,
+)
+OFFLOAD_ONLY = dataclasses.replace(CFG, strategies=("store", "recompute", "offload"))
+QUANTIZE_ONLY = dataclasses.replace(CFG, strategies=("store", "recompute", "quantize"))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1 — differential oracle: joint DP == exhaustive search
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10**6),
+    st.integers(min_value=4, max_value=7),
+    st.sampled_from(["time_centric", "memory_centric"]),
+    st.sampled_from([CFG, OFFLOAD_ONLY, QUANTIZE_ONLY]),
+)
+def test_joint_dp_matches_exhaustive(seed, n, objective, cfg):
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, fam, strategies=cfg)
+    assert b < dp.INF
+    for budget in (
+        b,
+        float(np.nextafter(b, -np.inf)),  # one ulp below: both infeasible
+        float(np.nextafter(b, np.inf)),
+        b * 1.5,
+    ):
+        rd = solve(g, budget, fam, objective=objective, strategies=cfg)
+        ro = exhaustive_search(g, budget, objective, fam, strategies=cfg)
+        assert rd.feasible == ro.feasible, budget
+        if not rd.feasible:
+            continue
+        # bitwise equality of the optimum — same float folds on both sides
+        assert rd.overhead == ro.overhead, budget
+        # the DP's own assignment must replay at its claimed objective
+        assert rd.assignment is not None
+        plan = make_plan(g, rd.sequence, assignment=rd.assignment, strategies=cfg)
+        assert plan.peak_memory <= budget
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10**6),
+    st.integers(min_value=4, max_value=7),
+)
+def test_strategy_mfb_is_exact_threshold(seed, n):
+    """feasible exactly at the joint mfb, infeasible one ulp below, and
+    never above the legacy (all-store) mfb."""
+    r = random.Random(seed)
+    g = random_dag(r, n)
+    fam = all_lower_sets(g)
+    b_leg = min_feasible_budget_exact(g, fam)
+    b_str = min_feasible_budget_exact(g, fam, strategies=CFG)
+    assert b_str <= b_leg
+    assert dp.feasible(g, b_str, fam, strategies=CFG)
+    assert not dp.feasible(g, float(np.nextafter(b_str, -np.inf)), fam,
+                           strategies=CFG)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3 — lowering semantics (offload exact, quantize bounded)
+# ---------------------------------------------------------------------------
+
+
+def _net(params, x):
+    import jax.numpy as jnp
+
+    h = x
+    for W in params:
+        h = jnp.tanh(h @ W)
+    return jnp.mean(h ** 2)
+
+
+def _net_args():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    params = [
+        jnp.asarray(rng.normal(size=(16, 16)) / 4.0, jnp.float32)
+        for _ in range(4)
+    ]
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    return params, x
+
+
+def _fresh_plan_function(**kw):
+    from repro.core.lowering.front_door import plan_function
+    from repro.core.plan_cache import PlanCache
+    from repro.core.planner import Planner
+
+    planner = Planner(cache=PlanCache())  # in-memory, test-isolated
+    return plan_function(planner=planner, **kw)
+
+
+def test_offload_plan_bit_identical_to_vanilla():
+    import jax
+
+    params, x = _net_args()
+    v_ref, g_ref = jax.jit(jax.value_and_grad(_net))(params, x)
+
+    pf = _fresh_plan_function(
+        fn=_net, budget=None, backend="jaxpr", method="exact_dp",
+        objective="memory_centric", cost_model="paper", argnums=0,
+        loss_fn=None, track_live=False, strategies=OFFLOAD_ONLY, verify=True,
+    )
+    low = pf.lowered_for(params, x)
+    assert any(c == OFFLOAD for c in low.plan.strategy.values())
+    v, grads = pf(params, x)
+    assert bool(v == v_ref)
+    for a, b in zip(grads, g_ref):
+        assert bool((a == b).all())
+
+
+def test_quantized_plan_within_documented_bound():
+    import jax
+    import jax.numpy as jnp
+
+    params, x = _net_args()
+    v_ref, g_ref = jax.jit(jax.value_and_grad(_net))(params, x)
+
+    pf = _fresh_plan_function(
+        fn=_net, budget=None, backend="jaxpr", method="exact_dp",
+        objective="memory_centric", cost_model="paper", argnums=0,
+        loss_fn=None, track_live=False, strategies=QUANTIZE_ONLY, verify=True,
+    )
+    low = pf.lowered_for(params, x)
+    assert any(c == QUANTIZE for c in low.plan.strategy.values())
+    v, grads = pf(params, x)
+    # documented bound (docs/architecture.md, "Strategy lattice"): ≤ 5e-2
+    # relative l2 gradient error on a well-conditioned net
+    num = sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(grads, g_ref))
+    den = sum(float(jnp.sum(b ** 2)) for b in g_ref)
+    assert num ** 0.5 <= 5e-2 * den ** 0.5
+    assert abs(float(v - v_ref)) <= 5e-2 * abs(float(v_ref))
+
+
+def test_zero_quantized_nodes_bit_identical():
+    """Quantize enabled but never selected (loose budget → all-store plan):
+    the lowered twin must stay bit-identical to the legacy lowering of the
+    same function at the same budget."""
+    params, x = _net_args()
+
+    pf_leg = _fresh_plan_function(
+        fn=_net, budget=1e18, backend="jaxpr", method="exact_dp",
+        objective="time_centric", cost_model="paper", argnums=0,
+        loss_fn=None, track_live=False, strategies=None, verify=True,
+    )
+    v_ref, g_ref = pf_leg(params, x)
+
+    pf = _fresh_plan_function(
+        fn=_net, budget=1e18, backend="jaxpr", method="exact_dp",
+        objective="time_centric", cost_model="paper", argnums=0,
+        loss_fn=None, track_live=False, strategies=QUANTIZE_ONLY, verify=True,
+    )
+    low = pf.lowered_for(params, x)
+    assert low.plan.strategy == {}  # store is tax-free: never quantize
+    v, grads = pf(params, x)
+    assert bool(v == v_ref)
+    for a, b in zip(grads, g_ref):
+        assert bool((a == b).all())
+
+
+def test_interpreter_audit_excludes_offloaded_bytes():
+    """The live-byte audit prices offloaded residuals at zero device bytes:
+    the same sequence measures strictly lower with the offload assignment
+    than all-store, and stays under the strategy plan's analytic peak."""
+    from repro.core.lowering.carriers import TracedCarrier
+    from repro.core.lowering.interpreter import traced_planned_value_and_grad
+
+    params, x = _net_args()
+    carrier = TracedCarrier.trace(_net, (params, x), argnums=0,
+                                  cost_model="paper")
+    g = carrier.to_graph()
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, fam, strategies=OFFLOAD_ONLY)
+    res = solve(g, b, fam, objective="memory_centric", strategies=OFFLOAD_ONLY)
+    assert res.feasible and res.assignment
+    plan = make_plan(g, res.sequence, assignment=res.assignment,
+                     strategies=OFFLOAD_ONLY)
+    assert any(c == OFFLOAD for c in plan.strategy.values())
+    plan_store = make_plan(g, res.sequence)
+
+    _, _, trace = traced_planned_value_and_grad(carrier, plan,
+                                                track_live=True)(params, x)
+    _, _, trace_store = traced_planned_value_and_grad(
+        carrier, plan_store, track_live=True)(params, x)
+    peak = max(nb for _, nb in trace)
+    peak_store = max(nb for _, nb in trace_store)
+    assert peak <= plan.peak_memory * (1 + 1e-9)
+    assert peak < peak_store
+    # every forward snapshot after a segment that kept an offloaded node
+    # must be cheaper than its all-store twin at the same step
+    for (tag, nb), (tag2, nb2) in zip(trace, trace_store):
+        assert tag == tag2
+        assert nb <= nb2
+
+
+def test_interpreter_quantized_bytes_accounting():
+    from repro.core.lowering.carriers import TracedCarrier
+    from repro.core.lowering.interpreter import traced_planned_value_and_grad
+
+    params, x = _net_args()
+    carrier = TracedCarrier.trace(_net, (params, x), argnums=0,
+                                  cost_model="paper")
+    g = carrier.to_graph()
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, fam, strategies=QUANTIZE_ONLY)
+    res = solve(g, b, fam, objective="memory_centric",
+                strategies=QUANTIZE_ONLY)
+    assert res.feasible and res.assignment
+    plan = make_plan(g, res.sequence, assignment=res.assignment,
+                     strategies=QUANTIZE_ONLY)
+    if not any(c == QUANTIZE for c in plan.strategy.values()):
+        pytest.skip("no quantized node selected at this mfb")
+    _, _, trace = traced_planned_value_and_grad(carrier, plan,
+                                                track_live=True)(params, x)
+    assert max(nb for _, nb in trace) <= plan.peak_memory * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Verifier + schedule + cache guards
+# ---------------------------------------------------------------------------
+
+
+def test_verifier_accepts_and_rejects_strategy_plans(rng):
+    from repro.analysis import check_plan
+
+    g = random_dag(rng, 8)
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, fam, strategies=CFG)
+    res = solve(g, b, fam, objective="time_centric", strategies=CFG)
+    plan = make_plan(g, res.sequence, assignment=res.assignment, strategies=CFG)
+    assert check_plan(g, plan, budget=b, strategies=CFG).ok
+    assert check_plan(g, plan, budget=b).ok  # config-less: inequality check
+
+    v0 = next(iter(plan.cached))
+    bad = dataclasses.replace(plan, strategy={**plan.strategy, v0: "teleport"})
+    rep = check_plan(g, bad, strategies=CFG)
+    assert any(f.code == "unknown-strategy" for f in rep.findings)
+
+    uncached = sorted(frozenset(range(g.n)) - plan.cached)
+    if uncached:
+        bad = dataclasses.replace(
+            plan, strategy={**plan.strategy, uncached[0]: OFFLOAD}
+        )
+        rep = check_plan(g, bad, strategies=CFG)
+        assert any(f.code == "strategy-uncached-node" for f in rep.findings)
+
+
+def test_verifier_rejects_quantized_pin(rng):
+    from repro.analysis import check_plan
+    from repro.analysis.effects import pin_graph
+
+    g0 = random_dag(rng, 8)
+    fam0 = all_lower_sets(g0)
+    b0 = min_feasible_budget_exact(g0, fam0, strategies=CFG)
+    res0 = solve(g0, b0, fam0, objective="time_centric", strategies=CFG)
+    plan0 = make_plan(g0, res0.sequence, assignment=res0.assignment,
+                      strategies=CFG)
+    pin = next(iter(plan0.cached))
+    g = pin_graph(g0, frozenset({pin}))
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, fam, strategies=CFG)
+    res = solve(g, b, fam, objective="time_centric", strategies=CFG)
+    plan = make_plan(g, res.sequence, assignment=res.assignment, strategies=CFG)
+    # the DP itself never quantizes a pin (offload stays legal — exact)
+    assert plan.strategy.get(pin) != QUANTIZE
+    bad = dataclasses.replace(plan, strategy={**plan.strategy, pin: QUANTIZE})
+    rep = check_plan(g, bad, strategies=CFG)
+    assert any(f.code == "pinned-node-quantized" for f in rep.findings)
+
+
+def test_make_plan_prices_strategy(rng):
+    from repro.core.strategies import assignment_taxes
+
+    g = random_dag(rng, 8)
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, fam, strategies=CFG)
+    res = solve(g, b, fam, objective="time_centric", strategies=CFG)
+    plan = make_plan(g, res.sequence, assignment=res.assignment, strategies=CFG)
+    legacy = make_plan(g, res.sequence)
+    assert plan.cached == legacy.cached
+    assert plan.overhead == legacy.overhead + assignment_taxes(
+        g, plan.strategy, CFG
+    )
+    if plan.strategy:
+        assert plan.peak_memory <= legacy.peak_memory
+        w = device_bytes(g, plan.strategy)
+        for v, code in plan.strategy.items():
+            if code == OFFLOAD:
+                assert w[v] == 0.0
+            elif code == QUANTIZE:
+                assert w[v] == g.mem_v[v] * QUANTIZE_BYTES_RATIO
+
+
+def test_plan_cache_digests_and_roundtrip(rng, tmp_path):
+    from repro.core.plan_cache import PlanCache
+
+    g = random_dag(rng, 8)
+    fam = all_lower_sets(g)
+    cache = PlanCache(cache_dir=str(tmp_path))
+    key_plain = cache.key_for(g, 10.0, "exact", "time_centric")
+    key_legacy = cache.key_for(g, 10.0, "exact", "time_centric",
+                               strategy=LEGACY.digest_token())
+    # {store, recompute} must not perturb legacy content addresses
+    assert LEGACY.digest_token() == ""
+    assert key_plain.content_hash() == key_legacy.content_hash()
+    key_strat = cache.key_for(g, 10.0, "exact", "time_centric",
+                              strategy=CFG.digest_token())
+    assert key_strat.content_hash() != key_plain.content_hash()
+    # distinct bandwidths → distinct addresses
+    cfg2 = dataclasses.replace(CFG, offload_bytes_per_sec=8.0)
+    key_strat2 = cache.key_for(g, 10.0, "exact", "time_centric",
+                               strategy=cfg2.digest_token())
+    assert key_strat2.content_hash() != key_strat.content_hash()
+
+    # assignment round-trips through the store (memory + disk tiers)
+    b = min_feasible_budget_exact(g, fam, strategies=CFG)
+    res = solve(g, b, fam, objective="time_centric", strategies=CFG)
+    key = cache.key_for(g, b, "exact", "time_centric",
+                        strategy=CFG.digest_token())
+    cache.put(g, key, res)
+    got = cache.get(g, key)
+    assert got is not None
+    assert got.sequence == res.sequence
+    assert got.assignment == res.assignment
+    assert got.overhead == res.overhead
+    # cold read (disk tier only)
+    cold = PlanCache(cache_dir=str(tmp_path))
+    got2 = cold.get(g, key)
+    assert got2 is not None and got2.assignment == res.assignment
+
+
+def test_planner_strategy_plans_end_to_end(rng, tmp_path):
+    from repro.core.plan_cache import PlanCache
+    from repro.core.planner import Planner
+
+    g = random_dag(rng, 8)
+    pl_leg = Planner(cache=PlanCache(cache_dir=str(tmp_path / "a")))
+    pl_str = Planner(cache=PlanCache(cache_dir=str(tmp_path / "b")),
+                     strategies=CFG)
+    b_leg = pl_leg.min_feasible_budget(g, "exact_dp")
+    b_str = pl_str.min_feasible_budget(g, "exact_dp")
+    assert b_str <= b_leg
+    for objective in ("time_centric", "memory_centric", "wallclock"):
+        rep = pl_str.plan(g, b_str, "exact_dp", objective)
+        assert rep.plan is not None
+        assert rep.plan.peak_memory <= b_str * (1 + 1e-12)
+    # a names-only spec of {store, recompute} normalizes to legacy planning
+    pl_norm = Planner(cache=PlanCache(str(tmp_path / "c")),
+                      strategies=("store", "recompute"))
+    assert pl_norm.strategies is None
+
+
+def test_wallclock_joint_pool_never_slower(rng):
+    """Extended wallclock ranks legacy + strategy terminals jointly, so the
+    winner's replayed seconds are ≤ the legacy winner's."""
+    from repro.core.dp import solve_wallclock
+    from repro.core.replay import replay
+
+    for _ in range(5):
+        g = random_dag(rng, rng.randint(5, 9))
+        fam = all_lower_sets(g)
+        b = min_feasible_budget_exact(g, fam)  # legacy-feasible budget
+        if b == dp.INF:
+            continue
+        for budget in (b, b * 1.5):
+            r_leg = solve_wallclock(g, budget, fam)
+            r_ext = solve_wallclock(g, budget, fam, strategies=CFG)
+            p_leg = make_plan(g, r_leg.sequence)
+            p_ext = make_plan(g, r_ext.sequence, assignment=r_ext.assignment,
+                              strategies=CFG)
+            s_leg = replay(g, p_leg, budget=budget).seconds
+            s_ext = replay(g, p_ext, budget=budget, strategies=CFG).seconds
+            assert s_ext <= s_leg
+
+
+def test_blockgraph_backends_reject_strategy_plans(rng):
+    from repro.core.lowering.interpreter import InterpreterLowering
+    from repro.core.lowering.policy import PolicyLowering
+
+    g = random_dag(rng, 6)
+    fam = all_lower_sets(g)
+    b = min_feasible_budget_exact(g, fam, strategies=CFG)
+    res = solve(g, b, fam, objective="time_centric", strategies=CFG)
+    plan = make_plan(g, res.sequence, assignment=res.assignment, strategies=CFG)
+    if not plan.strategy:
+        pytest.skip("no strategy node selected at this mfb")
+
+    class _FakeBlockCarrier:
+        pass
+
+    from repro.core.lowering import carriers
+
+    fake = carriers.BlockGraphCarrier.__new__(carriers.BlockGraphCarrier)
+    with pytest.raises(NotImplementedError):
+        PolicyLowering().lower(fake, plan)
+    with pytest.raises(NotImplementedError):
+        InterpreterLowering().lower(fake, plan)
